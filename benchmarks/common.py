@@ -1,0 +1,56 @@
+"""Shared benchmark utilities: image-classification and LM training loops
+with gradient accumulation (the paper's large-batch mechanism, §5)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.optim import Optimizer
+from repro.models.convnet import accuracy, ce_loss, init_convnet
+
+
+def train_convnet(opt: Optimizer, x, y, xt, yt, batch: int, steps: int,
+                  accum_micro: int = 128, seed: int = 0, log_every: int = 0):
+    """Train the Fig-1 convnet with global batch `batch`; batches larger
+    than `accum_micro` use gradient accumulation exactly as the paper."""
+    params = init_convnet(seed)
+    state = opt.init(params)
+    n = x.shape[0]
+    micro = min(batch, accum_micro)
+    n_micro = batch // micro
+    grad_fn = jax.jit(jax.value_and_grad(ce_loss))
+
+    @jax.jit
+    def opt_step(grads, state, params):
+        return opt.step(grads, state, params)
+
+    rng = np.random.RandomState(seed)
+    losses = []
+    for t in range(steps):
+        idx = rng.randint(0, n, size=(batch,))
+        g_sum = None
+        l_sum = 0.0
+        for m in range(n_micro):
+            sl = idx[m * micro:(m + 1) * micro]
+            l, g = grad_fn(params, x[sl], y[sl])
+            l_sum += float(l)
+            g_sum = g if g_sum is None else jax.tree.map(jnp.add, g_sum, g)
+        grads = jax.tree.map(lambda a: a / n_micro, g_sum)
+        params, state, stats = opt_step(grads, state, params)
+        losses.append(l_sum / n_micro)
+        if log_every and (t + 1) % log_every == 0:
+            print(f"    step {t+1}: loss={losses[-1]:.4f} "
+                  f"gnorm={float(stats['grad_norm']):.3f}")
+        if not np.isfinite(losses[-1]):
+            break
+    acc = float(accuracy(params, xt, yt)) if np.isfinite(losses[-1]) else 0.0
+    return {"final_loss": losses[-1], "test_acc": acc, "losses": losses,
+            "diverged": not np.isfinite(losses[-1])}
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

@@ -1,0 +1,55 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from the dry-run
+JSONs in results/dryrun/."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(outdir="results/dryrun", mesh="16x16"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(outdir, f"*__{mesh}.json"))):
+        recs.append(json.load(open(f)))
+    recs.sort(key=lambda r: (r["arch"], ORDER.index(r["shape"])
+                             if r["shape"] in ORDER else 9))
+    return recs
+
+
+def markdown_table(recs):
+    lines = [
+        "| arch | shape | t_compute (s) | t_memory (s) | t_coll (s) | bound "
+        "| peak GB/chip | useful-FLOP frac | top collective |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skip | — | — | {r['reason'][:40]} |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"ERROR | — | — | {r.get('error','')[:40]} |")
+            continue
+        top = max(r["coll_breakdown"].items(), key=lambda kv: kv[1])[0] \
+            if r["coll_breakdown"] else "-"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.4f} | "
+            f"{r['t_memory']:.4f} | {r['t_collective']:.4f} | "
+            f"{r['bottleneck']} | {r['peak_bytes_per_chip']/1e9:.2f} | "
+            f"{r['useful_flop_frac']:.2f} | {top} |")
+    return "\n".join(lines)
+
+
+def run():
+    recs = load()
+    print(markdown_table(recs))
+    ok = [r for r in recs if r.get("status") == "ok"]
+    print(f"\n{len(ok)} ok / {len(recs)} total")
+    return {"n_ok": len(ok), "n_total": len(recs)}
+
+
+if __name__ == "__main__":
+    run()

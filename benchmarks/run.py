@@ -1,0 +1,64 @@
+"""Benchmark harness — one benchmark per paper table/figure:
+
+  fig1        Figure 1: large-batch MSGD degrades loss & accuracy
+  table1      Table 1 / §3-4: complexity-vs-batch scaling, MSGD vs SNGM
+  table2      Table 2: CIFAR-proxy — MSGD/LARS/SNGM large-batch accuracy
+  table3      Table 3: LM-proxy — SNGM@large-B vs MSGD@small-B at equal C
+  overhead    optimizer-update us/call + fused-kernel HBM model
+  roofline    render §Roofline table from dry-run artifacts (if present)
+
+``python -m benchmarks.run [names...]`` — default: the fast set.
+Results are appended to results/bench/<name>.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+BENCHES = {}
+
+
+def _register():
+    from benchmarks import (bench_fig1_large_batch_drop,
+                            bench_table1_complexity,
+                            bench_table2_cifar_proxy,
+                            bench_table3_lm_proxy,
+                            bench_optimizer_overhead,
+                            roofline_report)
+    BENCHES.update({
+        "fig1": bench_fig1_large_batch_drop.run,
+        "table1": bench_table1_complexity.run,
+        "table2": bench_table2_cifar_proxy.run,
+        "table3": bench_table3_lm_proxy.run,
+        "overhead": bench_optimizer_overhead.run,
+        "roofline": roofline_report.run,
+    })
+
+
+def main() -> None:
+    _register()
+    names = sys.argv[1:] or ["overhead", "table1", "fig1", "table2", "table3",
+                             "roofline"]
+    os.makedirs("results/bench", exist_ok=True)
+    failures = []
+    for name in names:
+        print(f"[bench] {name}")
+        t0 = time.time()
+        try:
+            out = BENCHES[name]()
+            json.dump({"bench": name, "elapsed_s": round(time.time() - t0, 1),
+                       "results": out},
+                      open(f"results/bench/{name}.json", "w"), indent=1,
+                      default=str)
+            print(f"[bench] {name} done in {time.time()-t0:.0f}s\n")
+        except Exception as e:  # report and continue
+            failures.append(name)
+            print(f"[bench] {name} FAILED: {type(e).__name__}: {e}\n")
+    if failures:
+        raise SystemExit(f"failed benches: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""The paper's experiment, end to end (reduced scale): large-batch
+training with SNGM matches small-batch MSGD where large-batch MSGD and
+LARS fall short (Table 2 on the synthetic CIFAR proxy).
+
+    PYTHONPATH=src python examples/large_batch_training.py
+"""
+from benchmarks.bench_table2_cifar_proxy import run
+
+if __name__ == "__main__":
+    out = run()
+    best_large = max(("msgd_large", "lars_large", "sngm_large"),
+                     key=lambda k: out[k]["test_acc"])
+    print(f"\nbest large-batch optimizer: {best_large} "
+          f"(paper predicts sngm_large)")

@@ -1,0 +1,63 @@
+"""Batched serving example: prefill a batch of prompts, then decode with
+every cache type the framework supports (full KV / sliding-window ring /
+MLA latent / SSM state, depending on --arch).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-1.3b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, smoke_variant
+from repro.models import CPU_RUNTIME, model_defs
+from repro.models.param import materialize
+from repro.serving import greedy_generate, make_prefill_step, make_serve_step
+from repro.serving.engine import pad_cache
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-v2-lite-16b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = smoke_variant(ARCHS[args.arch])
+    params = materialize(model_defs(cfg), jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size, jnp.int32)
+    enc = (jax.random.normal(jax.random.PRNGKey(2),
+                             (args.batch, cfg.encoder_len, cfg.d_model))
+           if cfg.is_encoder_decoder else None)
+
+    prefill = jax.jit(make_prefill_step(cfg, CPU_RUNTIME))
+    serve = jax.jit(make_serve_step(cfg, CPU_RUNTIME))
+
+    t0 = time.time()
+    logits, cache = prefill(params, prompts, enc) if enc is not None \
+        else prefill(params, prompts)
+    cache = pad_cache(cache, args.max_new)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    print(f"prefill {args.batch}x{args.prompt_len}: {time.time()-t0:.2f}s "
+          f"(cache leaves: {len(jax.tree.leaves(cache))})")
+
+    out = [tok]
+    pos = jnp.full((args.batch,), args.prompt_len, jnp.int32)
+    t0 = time.time()
+    for i in range(args.max_new - 1):
+        tok, _, cache = serve(params, cache, tok[:, None], pos)
+        out.append(tok)
+        pos = pos + 1
+    dt = time.time() - t0
+    toks = jnp.stack(out, 1)
+    print(f"decoded {args.max_new} tokens/seq in {dt:.2f}s "
+          f"({args.batch * args.max_new / max(dt, 1e-9):.1f} tok/s)")
+    print("sample:", toks[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re, collections
+import jax
+from repro.launch.dryrun import build_lowered
+from repro.launch.mesh import make_production_mesh
+from repro.launch import hlo_cost
+
+mesh = make_production_mesh()
+(lowered, cfg, shape), _ = build_lowered("deepseek-v2-236b", "train_4k", mesh, "opt")
+txt = lowered.compile().as_text()
+comps, shapes = hlo_cost._parse(txt)
+rows = collections.defaultdict(float)
+def cost(cn, in_fusion, mult):
+    for op in comps.get(cn, []):
+        oc = op.opcode
+        trip = 1.0
+        called = []
+        for m in hlo_cost._CALLED_RE.finditer(op.rest):
+            if m.group(1): called.append(m.group(1))
+            else: called += re.findall(r"%([\w\.\-]+)", m.group(2))
+        if oc == "while":
+            tm = hlo_cost._TRIP_RE.search(op.rest)
+            trip = float(tm.group(1)) if tm else 1.0
+        child_fusion = in_fusion or oc == "fusion"
+        for ch in called:
+            cost(ch, child_fusion, mult*trip)
+        if in_fusion: continue
+        if oc == "fusion" and called:
+            b = hlo_cost._fusion_bytes(comps.get(called[0], []), op.result)
+        elif oc in hlo_cost._FREE_OPS or oc == "while":
+            continue
+        else:
+            opnds = op.operands()
+            b = hlo_cost._shape_bytes(op.result) + sum(hlo_cost._shape_bytes(shapes.get(o,"")) for o in opnds)
+        rows[(oc, op.result[:44])] += mult * b
+entry = re.search(r"^ENTRY\s+%([\w\.\-]+)", txt, re.M).group(1)
+cost(entry, False, 1.0)
+for k, v in sorted(rows.items(), key=lambda kv: -kv[1])[:14]:
+    print(f"{v/1e12:8.2f}TB {k[0]:16s} {k[1]}")
+print("total", sum(rows.values())/1e12)

@@ -1,0 +1,18 @@
+"""Gemma-2B [arXiv:2403.08295] — GeGLU, head_dim=256, MQA (kv=1)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-2b",
+    family="dense",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=256000,
+    act="gelu",
+    embed_scale=True,
+    tie_embeddings=True,
+    source="arXiv:2403.08295",
+)

@@ -1,0 +1,10 @@
+"""repro.core — the paper's contribution: SNGM and its large-batch
+optimizer family, schedules, and distributed-norm utilities."""
+from repro.core.optim import (
+    Optimizer, OptState, sngm, sngd, msgd, lars, lamb, make_optimizer,
+    global_norm, tree_squared_norm,
+)
+from repro.core import schedules
+
+__all__ = ["Optimizer", "OptState", "sngm", "sngd", "msgd", "lars", "lamb",
+           "make_optimizer", "global_norm", "tree_squared_norm", "schedules"]

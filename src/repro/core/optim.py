@@ -1,0 +1,255 @@
+"""Optimizers: SNGM (the paper, Algorithm 1) and its baselines.
+
+All optimizers share a tiny optax-like interface that is pytree- and
+mesh-agnostic: state pytrees mirror the parameter pytree exactly, so
+under pjit the optimizer state inherits the parameter sharding and the
+update is fully local except for the norm reductions (a scalar
+all-reduce), which is precisely the property that makes SNGM cheap to
+distribute (DESIGN.md §3).
+
+    opt = sngm(schedule, beta=0.9, weight_decay=1e-4)
+    state = opt.init(params)
+    params, state, stats = opt.step(grads, state, params)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedules import Schedule, constant
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# tree utilities
+# ---------------------------------------------------------------------------
+
+def tree_squared_norm(tree: PyTree) -> jnp.ndarray:
+    """Sum of squared entries over the whole pytree (fp32 accumulate)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(tree_squared_norm(tree))
+
+
+def tree_add_scaled(a: PyTree, b: PyTree, scale) -> PyTree:
+    return jax.tree.map(lambda x, y: x + scale * y, a, b)
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+# ---------------------------------------------------------------------------
+# optimizer interface
+# ---------------------------------------------------------------------------
+
+class OptState(NamedTuple):
+    step: jnp.ndarray          # scalar int32
+    momentum: PyTree           # mirrors params
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """init/step pair.  ``step`` returns (new_params, new_state, stats)."""
+    name: str
+    init: Callable[[PyTree], OptState]
+    step: Callable[[PyTree, OptState, PyTree], Tuple[PyTree, OptState, dict]]
+
+
+def _init(params: PyTree) -> OptState:
+    # momentum is always fp32, independent of parameter storage dtype
+    mom = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), momentum=mom)
+
+
+def _decayed(grads: PyTree, params: PyTree, weight_decay: float) -> PyTree:
+    """PyTorch-SGD-style coupled weight decay: g <- g + wd * w (paper §5)."""
+    if weight_decay == 0.0:
+        return grads
+    return jax.tree.map(lambda g, w: g + weight_decay * w, grads, params)
+
+
+# ---------------------------------------------------------------------------
+# SNGM — the paper's Algorithm 1
+# ---------------------------------------------------------------------------
+
+def sngm(schedule: Schedule,
+         beta: float = 0.9,
+         weight_decay: float = 0.0,
+         eps: float = 1e-12,
+         norm_mode: str = "global",
+         use_pallas: bool = False) -> Optimizer:
+    """Stochastic Normalized Gradient descent with Momentum (Algorithm 1).
+
+        u_{t+1} = beta * u_t + g_t / ||g_t||
+        w_{t+1} = w_t - eta_t * u_{t+1}
+
+    ``norm_mode``:
+      * "global"     — the paper: one Euclidean norm over the whole
+                       gradient pytree (Lemma 4: ||u|| <= 1/(1-beta)).
+      * "per_tensor" — beyond-paper block-normalized variant (LARS-
+                       flavoured); each tensor normalized by its own norm.
+                       Lemma 4 then holds per tensor.
+    ``use_pallas``   — route the per-leaf update through the fused Pallas
+                       TPU kernel (kernels/fused_sngm); numerics identical
+                       to the jnp path (validated in tests).
+    """
+    if norm_mode not in ("global", "per_tensor"):
+        raise ValueError(norm_mode)
+
+    def step_fn(grads, state, params):
+        g = _decayed(grads, params, weight_decay)
+        lr = schedule(state.step)
+        if norm_mode == "global":
+            gnorm = global_norm(g)
+            inv = 1.0 / (gnorm + eps)
+            if use_pallas:
+                from repro.kernels.fused_sngm import ops as _k
+                new_p, new_u = _k.fused_sngm_tree(params, g, state.momentum,
+                                                  inv, beta, lr)
+            else:
+                new_u = jax.tree.map(
+                    lambda u, gi: beta * u + gi.astype(jnp.float32) * inv,
+                    state.momentum, g)
+                new_p = jax.tree.map(
+                    lambda w, u: (w - lr * u).astype(w.dtype), params, new_u)
+        else:
+            gnorm = global_norm(g)  # reported only
+            def upd(u, gi):
+                n = jnp.linalg.norm(gi.astype(jnp.float32))
+                return beta * u + gi.astype(jnp.float32) / (n + eps)
+            new_u = jax.tree.map(upd, state.momentum, g)
+            new_p = jax.tree.map(
+                lambda w, u: (w - lr * u).astype(w.dtype), params, new_u)
+        stats = {"grad_norm": gnorm, "lr": lr,
+                 "update_norm": global_norm(new_u)}
+        return new_p, OptState(state.step + 1, new_u), stats
+
+    return Optimizer(f"sngm[{norm_mode}]", _init, step_fn)
+
+
+def sngd(schedule: Schedule, weight_decay: float = 0.0, **kw) -> Optimizer:
+    """Stochastic normalized gradient descent (Hazan et al. 2015) =
+    SNGM with beta = 0 (the paper's degenerate case)."""
+    opt = sngm(schedule, beta=0.0, weight_decay=weight_decay, **kw)
+    return dataclasses.replace(opt, name="sngd")
+
+
+# ---------------------------------------------------------------------------
+# MSGD — the paper's main baseline (eqs. 2-3, Polyak momentum)
+# ---------------------------------------------------------------------------
+
+def msgd(schedule: Schedule,
+         beta: float = 0.9,
+         weight_decay: float = 0.0) -> Optimizer:
+    """Momentum SGD:  v_{t+1} = beta v_t + g_t ;  w_{t+1} = w_t - eta v_{t+1}."""
+    def step_fn(grads, state, params):
+        g = _decayed(grads, params, weight_decay)
+        lr = schedule(state.step)
+        new_v = jax.tree.map(lambda v, gi: beta * v + gi.astype(jnp.float32),
+                             state.momentum, g)
+        new_p = jax.tree.map(lambda w, v: (w - lr * v).astype(w.dtype),
+                             params, new_v)
+        stats = {"grad_norm": global_norm(g), "lr": lr,
+                 "update_norm": global_norm(new_v)}
+        return new_p, OptState(state.step + 1, new_v), stats
+
+    return Optimizer("msgd", _init, step_fn)
+
+
+# ---------------------------------------------------------------------------
+# LARS — the large-batch baseline the paper compares against (You et al. 2017)
+# ---------------------------------------------------------------------------
+
+def lars(schedule: Schedule,
+         beta: float = 0.9,
+         weight_decay: float = 0.0,
+         trust: float = 0.001,
+         eps: float = 1e-12) -> Optimizer:
+    """Layer-wise Adaptive Rate Scaling, matching the pytorch-lars
+    implementation the paper used (github.com/noahgolmant/pytorch-lars):
+
+        local_lr = trust * ||w|| / (||g|| + wd * ||w|| + eps)   per tensor
+        v = beta v + eta * local_lr * (g + wd * w)
+        w = w - v
+    """
+    def step_fn(grads, state, params):
+        lr = schedule(state.step)
+
+        def upd(v, g, w):
+            g = g.astype(jnp.float32)
+            wn = jnp.linalg.norm(w.astype(jnp.float32))
+            gn = jnp.linalg.norm(g)
+            local = trust * wn / (gn + weight_decay * wn + eps)
+            # scalars (biases/norm scales, ||w|| ~ 0 at init) fall back to 1
+            local = jnp.where(wn > 0, local, 1.0)
+            return beta * v + lr * local * (g + weight_decay * w)
+
+        new_v = jax.tree.map(upd, state.momentum, grads, params)
+        new_p = jax.tree.map(lambda w, v: (w - v).astype(w.dtype),
+                             params, new_v)
+        stats = {"grad_norm": global_norm(grads), "lr": lr,
+                 "update_norm": global_norm(new_v)}
+        return new_p, OptState(state.step + 1, new_v), stats
+
+    return Optimizer("lars", _init, step_fn)
+
+
+# ---------------------------------------------------------------------------
+# LAMB — beyond-paper reference point (Adam-based layer-wise scaling)
+# ---------------------------------------------------------------------------
+
+class LambState(NamedTuple):
+    step: jnp.ndarray
+    m: PyTree
+    v: PyTree
+
+
+def lamb(schedule: Schedule,
+         b1: float = 0.9, b2: float = 0.999,
+         weight_decay: float = 0.0, eps: float = 1e-6) -> Optimizer:
+    def init(params):
+        return LambState(jnp.zeros((), jnp.int32),
+                         tree_zeros_like(params), tree_zeros_like(params))
+
+    def step_fn(grads, state, params):
+        lr = schedule(state.step)
+        t = state.step.astype(jnp.float32) + 1.0
+        new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                             state.m, grads)
+        new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                             state.v, grads)
+
+        def upd(w, m, v):
+            mh = m / (1 - b1 ** t)
+            vh = v / (1 - b2 ** t)
+            r = mh / (jnp.sqrt(vh) + eps) + weight_decay * w
+            wn = jnp.linalg.norm(w.astype(jnp.float32))
+            rn = jnp.linalg.norm(r)
+            ratio = jnp.where((wn > 0) & (rn > 0), wn / rn, 1.0)
+            return w - lr * ratio * r
+
+        new_p = jax.tree.map(upd, params, new_m, new_v)
+        stats = {"grad_norm": global_norm(grads), "lr": lr}
+        return new_p, LambState(state.step + 1, new_m, new_v), stats
+
+    return Optimizer("lamb", init, step_fn)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def make_optimizer(name: str, schedule: Schedule, **kw) -> Optimizer:
+    table = {"sngm": sngm, "sngd": sngd, "msgd": msgd, "lars": lars, "lamb": lamb}
+    if name not in table:
+        raise KeyError(f"unknown optimizer {name!r}; available {sorted(table)}")
+    return table[name](schedule, **kw)

@@ -1,0 +1,58 @@
+"""Learning-rate schedules used in the paper's experiments.
+
+The paper (§5) uses:
+  * poly-power decay for SNGM and LARS:  lr_t = lr0 * (1 - t/T)^power
+  * step decay (divide at milestones) for the MSGD baseline
+  * gradual warm-up only for the LARS-with-warm-up row of Table 2
+    (SNGM explicitly does NOT use warm-up).
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]   # step -> lr
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def poly_power(lr0: float, total_steps: int, power: float = 1.1) -> Schedule:
+    """lr0 * (1 - t/T)^power  — the paper's poly strategy (You et al. 2017)."""
+    def sched(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return lr0 * (1.0 - frac) ** power
+    return sched
+
+
+def step_decay(lr0: float, milestones: Sequence[int], factor: float = 0.1) -> Schedule:
+    """Divide lr by 1/factor at each milestone (He et al. 2016 recipe)."""
+    ms = jnp.asarray(sorted(milestones), jnp.int32)
+    def sched(step):
+        n = jnp.sum(step >= ms).astype(jnp.float32)
+        return lr0 * factor ** n
+    return sched
+
+
+def warmup(base: Schedule, warmup_steps: int, init_lr: float = 0.0) -> Schedule:
+    """Gradual linear warm-up from init_lr to base(warmup_steps), then base.
+
+    Used only for the LARS-with-warm-up baseline (Table 2); SNGM needs none.
+    """
+    def sched(step):
+        t = step.astype(jnp.float32)
+        target = base(jnp.asarray(warmup_steps))
+        frac = jnp.clip(t / jnp.maximum(warmup_steps, 1), 0.0, 1.0)
+        warm = init_lr + frac * (target - init_lr)
+        return jnp.where(step < warmup_steps, warm, base(step))
+    return sched
+
+
+def cosine(lr0: float, total_steps: int, final_frac: float = 0.0) -> Schedule:
+    def sched(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        c = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return lr0 * (final_frac + (1 - final_frac) * c)
+    return sched

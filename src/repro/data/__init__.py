@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticLM, synthetic_images
+
+__all__ = ["SyntheticLM", "synthetic_images"]

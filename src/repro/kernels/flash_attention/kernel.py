@@ -1,0 +1,130 @@
+"""Flash attention — Pallas TPU kernel (causal / sliding-window / softcap).
+
+Canonical TPU blocking: grid = (batch*q_heads, n_q_blocks, n_kv_blocks)
+with the KV dimension innermost.  Running max / denominator / accumulator
+live in VMEM scratch across the KV loop; the output block is finalized
+when the last KV block for a given Q block retires.  Block sizes are
+MXU-aligned (q 256 x kv 512 x head_dim padded to a 128 multiple); fully
+masked KV blocks (beyond the causal frontier or the sliding window) are
+skipped with ``pl.when``.
+
+GQA folds the q->kv head mapping into the k/v BlockSpec index maps, so
+K/V are never materialized per-q-head.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_Q_BLK = 256
+DEFAULT_KV_BLK = 512
+NEG_INF = -2.0e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, softcap, q_blk, kv_blk, n_kv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * q_blk
+    k_start = ki * kv_blk
+
+    # block-level skip: entirely above the diagonal, or entirely out-of-window
+    run = jnp.bool_(True)
+    if causal:
+        run &= k_start <= q_start + q_blk - 1
+    if window > 0:
+        run &= k_start + kv_blk - 1 > q_start - window
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)          # (q_blk, hd)
+        k = k_ref[0].astype(jnp.float32)          # (kv_blk, hd)
+        s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())))
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        ids_q = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        ids_k = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= ids_k <= ids_q
+        if window > 0:
+            mask &= ids_k > ids_q - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                     # (q_blk, kv_blk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        acc_scr[...] = alpha * acc_scr[...] + jax.lax.dot(p, v)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "q_blk", "kv_blk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, q_blk: int = DEFAULT_Q_BLK,
+                    kv_blk: int = DEFAULT_KV_BLK, interpret: bool = False):
+    """q: (B, S, H, hd); k/v: (B, S, K, hd) with H % K == 0.
+    Returns (B, S, H, hd) in q.dtype."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    group = H // K
+    q_blk = min(q_blk, S)
+    kv_blk = min(kv_blk, S)
+    assert S % q_blk == 0 and S % kv_blk == 0, (S, q_blk, kv_blk)
+    hd_pad = -hd % 128
+    scale = hd ** -0.5
+
+    qt = jnp.moveaxis(q, 2, 1).reshape(B * H, S, hd)
+    kt = jnp.moveaxis(k, 2, 1).reshape(B * K, S, hd)
+    vt = jnp.moveaxis(v, 2, 1).reshape(B * K, S, hd)
+    if hd_pad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, hd_pad)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, hd_pad)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, hd_pad)))
+    hdp = hd + hd_pad
+    n_q = S // q_blk
+    n_kv = S // kv_blk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          softcap=softcap, q_blk=q_blk, kv_blk=kv_blk,
+                          n_kv=n_kv),
+        grid=(B * H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, q_blk, hdp), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, kv_blk, hdp),
+                         lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, kv_blk, hdp),
+                         lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_blk, hdp), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hdp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk, 1), jnp.float32),
+            pltpu.VMEM((q_blk, 1), jnp.float32),
+            pltpu.VMEM((q_blk, hdp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[..., :hd].reshape(B, H, S, hd)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,9 @@
+"""jit'd wrapper: Pallas flash attention on TPU, interpret mode elsewhere."""
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+def attention(q, k, v, **kw):
+    return flash_attention(q, k, v, interpret=jax.default_backend() != "tpu",
+                           **kw)

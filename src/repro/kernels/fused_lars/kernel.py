@@ -1,0 +1,90 @@
+"""Fused LARS update — Pallas TPU kernel.
+
+LARS (the paper's large-batch baseline) needs a per-tensor trust ratio
+before the momentum/apply pass:
+
+    local_lr = trust * ||w|| / (||g|| + wd * ||w|| + eps)
+    v <- beta * v + lr * local_lr * (g + wd * w)
+    w <- w - v
+
+Two kernels: a tiled squared-norm reduction (pass 1) and the fused
+momentum+apply (pass 2) consuming the two scalars via SMEM — one read
+and one write per tensor beyond the unavoidable norm pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ROWS = 256
+LANES = 128
+
+
+def _sq_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        o_ref[0, 0] = 0.0
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[0, 0] += jnp.sum(x * x)
+
+
+def _sqnorm(x, interpret):
+    n = x.size
+    block = ROWS * LANES
+    xf = jnp.pad(x.ravel(), (0, -n % block)).reshape(-1, LANES)
+    grid = xf.shape[0] // ROWS
+    out = pl.pallas_call(
+        _sq_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((ROWS, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(xf)
+    return out[0, 0]
+
+
+def _upd_kernel(scal_ref, w_ref, g_ref, v_ref, wo_ref, vo_ref, *, beta, wd):
+    lr_local = scal_ref[0]
+    g = g_ref[...].astype(jnp.float32)
+    w = w_ref[...]
+    v = beta * v_ref[...] + lr_local * (g + wd * w)
+    vo_ref[...] = v
+    wo_ref[...] = w - v
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "wd", "trust", "eps",
+                                             "interpret"))
+def fused_lars_update(w, g, v, lr, *, beta: float, wd: float,
+                      trust: float = 0.001, eps: float = 1e-12,
+                      interpret: bool = False):
+    wn = jnp.sqrt(_sqnorm(w, interpret))
+    gn = jnp.sqrt(_sqnorm(g, interpret))
+    local = trust * wn / (gn + wd * wn + eps)
+    local = jnp.where(wn > 0, local, 1.0)
+    scal = (lr.astype(jnp.float32) * local)[None]
+
+    shape = w.shape
+    n = w.size
+    block = ROWS * LANES
+    pad = -n % block
+    wf = jnp.pad(w.ravel(), (0, pad)).reshape(-1, LANES)
+    gf = jnp.pad(g.ravel(), (0, pad)).reshape(-1, LANES)
+    vf = jnp.pad(v.ravel(), (0, pad)).reshape(-1, LANES)
+    tile = pl.BlockSpec((ROWS, LANES), lambda i: (i, 0))
+    wo, vo = pl.pallas_call(
+        functools.partial(_upd_kernel, beta=beta, wd=wd),
+        grid=(wf.shape[0] // ROWS,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), tile, tile, tile],
+        out_specs=[tile, tile],
+        out_shape=[jax.ShapeDtypeStruct(wf.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(wf.shape, jnp.float32)],
+        interpret=interpret,
+    )(scal, wf, gf, vf)
+    return wo.ravel()[:n].reshape(shape), vo.ravel()[:n].reshape(shape)

@@ -1,0 +1,8 @@
+import jax
+
+from repro.kernels.fused_lars.kernel import fused_lars_update
+
+
+def lars_update(w, g, v, lr, **kw):
+    return fused_lars_update(w, g, v, lr,
+                             interpret=jax.default_backend() != "tpu", **kw)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused LARS update (matches core.optim.lars)."""
+import jax.numpy as jnp
+
+
+def lars_update_ref(w, g, v, lr, *, beta: float, wd: float,
+                    trust: float = 0.001, eps: float = 1e-12):
+    g = g.astype(jnp.float32)
+    wn = jnp.linalg.norm(w.astype(jnp.float32))
+    gn = jnp.linalg.norm(g)
+    local = trust * wn / (gn + wd * wn + eps)
+    local = jnp.where(wn > 0, local, 1.0)
+    v_new = beta * v + lr * local * (g + wd * w)
+    return w - v_new, v_new

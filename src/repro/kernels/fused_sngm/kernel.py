@@ -1,0 +1,64 @@
+"""Fused SNGM update — Pallas TPU kernel.
+
+The SNGM update (Algorithm 1) is a pure HBM-bandwidth operation over the
+parameter/momentum trees:
+
+    u <- beta * u + g * (1/||g||)
+    p <- p - lr * u
+
+A naive XLA lowering reads/writes each tensor in 3-4 passes (scale, add,
+axpy); the fused kernel does ONE read of (p, g, u) and ONE write of
+(p, u) per VMEM tile — the optimizer's HBM traffic drops from ~7x to the
+5x minimum.  Scalars (inv_norm, lr) arrive via SMEM so one compiled kernel
+serves every step.
+
+Tiling: leaves are raveled, padded to ROWS*128 and viewed as (n, 128);
+the grid walks row-blocks of ROWS (8 sublanes x 128 lanes aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ROWS = 256          # rows per block -> 256*128*4B = 128 KiB/operand in VMEM
+LANES = 128
+
+
+def _kernel(scal_ref, p_ref, g_ref, u_ref, po_ref, uo_ref, *, beta):
+    inv = scal_ref[0]
+    lr = scal_ref[1]
+    g = g_ref[...].astype(jnp.float32)
+    u = beta * u_ref[...] + g * inv
+    uo_ref[...] = u
+    po_ref[...] = p_ref[...] - lr * u
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "interpret"))
+def fused_sngm_update(p, g, u, inv_norm, lr, *, beta: float,
+                      interpret: bool = False):
+    """One leaf: returns (p_new, u_new); p,u float32; g any float dtype."""
+    shape = p.shape
+    n = p.size
+    block = ROWS * LANES
+    n_pad = -n % block
+    pf = jnp.pad(p.ravel(), (0, n_pad)).reshape(-1, LANES)
+    gf = jnp.pad(g.ravel(), (0, n_pad)).reshape(-1, LANES)
+    uf = jnp.pad(u.ravel(), (0, n_pad)).reshape(-1, LANES)
+    scal = jnp.stack([inv_norm.astype(jnp.float32), lr.astype(jnp.float32)])
+    grid = pf.shape[0] // ROWS
+
+    tile = pl.BlockSpec((ROWS, LANES), lambda i: (i, 0))
+    po, uo = pl.pallas_call(
+        functools.partial(_kernel, beta=beta),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), tile, tile, tile],
+        out_specs=[tile, tile],
+        out_shape=[jax.ShapeDtypeStruct(pf.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(pf.shape, jnp.float32)],
+        interpret=interpret,
+    )(scal, pf, gf, uf)
+    return (po.ravel()[:n].reshape(shape), uo.ravel()[:n].reshape(shape))

@@ -1,0 +1,31 @@
+"""jit'd tree-level wrapper used by ``repro.core.optim.sngm(use_pallas=True)``.
+
+On non-TPU backends the kernel runs in interpret mode (correctness path);
+numerics match ref.py / the jnp optimizer exactly (float32 math).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.fused_sngm.kernel import fused_sngm_update
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fused_sngm_tree(params, grads, momentum, inv_norm, beta: float, lr):
+    interp = _interpret()
+    new_p, new_u = {}, {}
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_u = jax.tree_util.tree_leaves(momentum)
+    ps, us = [], []
+    for (path, p), g, u in zip(flat_p, flat_g, flat_u):
+        pn, un = fused_sngm_update(p, g, u, inv_norm, lr, beta=beta,
+                                   interpret=interp)
+        ps.append(pn)
+        us.append(un)
+    return (jax.tree_util.tree_unflatten(treedef, ps),
+            jax.tree_util.tree_unflatten(treedef, us))

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the fused SNGM update kernel."""
+import jax.numpy as jnp
+
+
+def sngm_update_ref(p, g, u, inv_norm, lr, *, beta: float):
+    u_new = beta * u + g.astype(jnp.float32) * inv_norm
+    p_new = p - lr * u_new
+    return p_new, u_new

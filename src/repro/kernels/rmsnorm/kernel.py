@@ -1,0 +1,51 @@
+"""RMSNorm — Pallas TPU kernel.
+
+Row-tiled: grid walks blocks of ROWS rows; each block loads (ROWS, d) into
+VMEM, reduces the squared mean over the feature dim in fp32, scales, and
+writes back in the input dtype.  d is the lane dim (all assigned archs
+have d a multiple of 128; ops.py pads otherwise, which changes the mean
+denominator — so the wrapper passes the true d as a static).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS = 8
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps, true_d):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.sum(x * x, axis=-1, keepdims=True) / true_d
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps)
+                  * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm_pallas(x, scale, eps: float = 1e-6, interpret: bool = False):
+    """x: (..., d) -> same shape/dtype."""
+    shape, dtype = x.shape, x.dtype
+    d = shape[-1]
+    d_pad = -d % 128
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    r_pad = -rows % ROWS
+    x2 = jnp.pad(x2, ((0, r_pad), (0, d_pad)))
+    s2 = jnp.pad(scale, (0, d_pad))
+    grid = x2.shape[0] // ROWS
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps, true_d=d),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((ROWS, d + d_pad), lambda i: (i, 0)),
+                  pl.BlockSpec((d + d_pad,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((ROWS, d + d_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, dtype),
+        interpret=interpret,
+    )(x2, s2)
+    return out[:rows, :d].reshape(shape)

@@ -1,0 +1,9 @@
+"""jit'd wrapper: Pallas on TPU, interpret mode elsewhere."""
+import jax
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    return rmsnorm_pallas(x, scale, eps,
+                          interpret=jax.default_backend() != "tpu")

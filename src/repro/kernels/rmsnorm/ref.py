@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the RMSNorm kernel (same math as models/layers.py)."""
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)

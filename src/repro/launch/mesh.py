@@ -1,0 +1,26 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; the dry-run sets
+``--xla_force_host_platform_device_count`` before calling it.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+    Multi-pod:  (pod=2, data=16, model=16) = 512 chips; "pod" is pure DP."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes_of(mesh: jax.sharding.Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

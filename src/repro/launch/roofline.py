@@ -1,0 +1,108 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``cost_analysis`` supplies per-device FLOPs/bytes (SPMD: one program);
+collective bytes are parsed from the post-partitioning HLO text
+(``compiled.as_text()``): we sum the *result-shape* bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(result bytes ~ data a device moves per op; for reduce-scatter we use the
+larger operand).  Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (constants from the assignment).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s/link ICI
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# e.g.:  %all-reduce.5 = f32[2048,512]{1,0} all-reduce(...)
+#        ROOT %t = (bf16[8,16]{...}, bf16[8,16]{...}) all-to-all(...)
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shapes_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes (per device), summed over ops."""
+    out: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shapes)
+        out[kind] = out.get(kind, 0) + b
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    hlo_gflops: float            # per device
+    hlo_gbytes: float            # per device
+    coll_gbytes: float           # per device
+    coll_breakdown: Dict[str, float]
+    model_gflops_per_chip: float  # 6*N_active*D / chips (train: *3 incl bwd? no: 6ND includes fwd+bwd)
+    peak_bytes_per_chip: float   # from memory_analysis
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    useful_flop_frac: float = 0.0
+
+    def finalize(self):
+        self.t_compute = self.hlo_gflops * 1e9 / PEAK_FLOPS
+        self.t_memory = self.hlo_gbytes * 1e9 / HBM_BW
+        self.t_collective = self.coll_gbytes * 1e9 / LINK_BW
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.bottleneck = max(terms, key=terms.get)
+        self.useful_flop_frac = (self.model_gflops_per_chip / self.hlo_gflops
+                                 if self.hlo_gflops else 0.0)
+        return self
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def model_flops(cfg, shape, n_chips: int) -> float:
+    """MODEL_FLOPS = 6*N_active*D (train; fwd+bwd) or 2*N_active*D (fwd-only),
+    D = tokens processed.  Decode: one token per sequence."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        f = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        f = 2.0 * n_active * tokens
+    else:  # decode: one new token per sequence
+        f = 2.0 * n_active * shape.global_batch
+    return f / n_chips

@@ -1,0 +1,110 @@
+"""Production training launcher.
+
+On real hardware this runs under `jax.distributed.initialize()` with the
+production mesh; on the CPU container it runs the same code path on a
+host mesh (all devices present).  The step function, sharding rules and
+optimizer are identical to the dry-run's — `dryrun.py` IS this launcher's
+compile-only mode.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-9b \
+        --steps 50 --batch 8 --seq 128 --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import ARCHS, get_config, smoke_variant
+from repro.core import make_optimizer
+from repro.core.optim import OptState
+from repro.core.schedules import poly_power
+from repro.data import SyntheticLM
+from repro.launch.mesh import data_axes_of
+from repro.models import model_defs
+from repro.models.param import count, materialize
+from repro.models.runtime import Runtime
+from repro.sharding import batch_spec, param_shardings, param_specs
+from repro.training import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b", choices=sorted(ARCHS))
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the smoke-scale variant (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--n-micro", type=int, default=2)
+    ap.add_argument("--optimizer", default="sngm",
+                    choices=["sngm", "sngd", "msgd", "lars", "lamb"])
+    ap.add_argument("--lr", type=float, default=1.6)
+    ap.add_argument("--beta", type=float, default=0.9)
+    ap.add_argument("--weight-decay", type=float, default=1e-4)
+    ap.add_argument("--data-axis", type=int, default=0,
+                    help="data-mesh size (0 = all devices)")
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = smoke_variant(cfg)
+
+    n_dev = len(jax.devices())
+    n_data = args.data_axis or max(1, n_dev // args.model_axis)
+    mesh = None
+    if n_data * args.model_axis > 1:
+        mesh = jax.make_mesh((n_data, args.model_axis), ("data", "model"))
+    rt = Runtime(mesh=mesh, data_axes=("data",) if mesh else ("data",),
+                 remat=not args.reduced)
+
+    defs = model_defs(cfg)
+    params = materialize(defs, jax.random.PRNGKey(0))
+    print(f"[train] {cfg.name}: {count(defs):,} params on {n_dev} device(s)"
+          f"{f' mesh={dict(mesh.shape)}' if mesh else ''}")
+
+    gspecs = None
+    if mesh is not None:
+        psh = param_shardings(defs, mesh)
+        params = jax.device_put(params, psh)
+        gspecs = param_specs(defs, mesh)
+
+    opt = make_optimizer(args.optimizer,
+                         poly_power(args.lr, args.steps, 1.1),
+                         beta=args.beta, weight_decay=args.weight_decay) \
+        if args.optimizer != "lamb" else \
+        make_optimizer("lamb", poly_power(args.lr, args.steps, 1.1),
+                       weight_decay=args.weight_decay)
+    state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, rt, opt, n_micro=args.n_micro,
+                                   grad_specs=gspecs))
+    data = SyntheticLM(cfg.vocab_size, args.seq, args.batch, branching=4)
+
+    t0 = time.time()
+    for t in range(args.steps):
+        batch = data.batch_at(t)
+        if cfg.is_encoder_decoder:
+            batch["encoder_embeds"] = jax.random.normal(
+                jax.random.PRNGKey(t), (args.batch, cfg.encoder_len, cfg.d_model))
+        params, state, stats = step(params, state, batch)
+        if t % args.log_every == 0 or t == args.steps - 1:
+            print(f"  step {t:5d} loss={float(stats['loss']):.4f} "
+                  f"||g||={float(stats['grad_norm']):.3f} "
+                  f"lr={float(stats['lr']):.4f} "
+                  f"({(t+1)/(time.time()-t0):.2f} it/s)")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, {"params": params, "opt": state},
+                        step=args.steps)
+        print(f"[train] checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.models.runtime import Runtime, CPU_RUNTIME
+from repro.models.transformer import model_defs, forward, unembed_matrix
+from repro.models import param, layers, moe, mamba
+
+__all__ = ["Runtime", "CPU_RUNTIME", "model_defs", "forward",
+           "unembed_matrix", "param", "layers", "moe", "mamba"]

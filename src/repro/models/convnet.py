@@ -1,0 +1,57 @@
+"""Small convolutional classifier — the paper's Figure-1 network ("a
+network with two convolutional layers") used for the CIFAR10-proxy
+experiments (Table 2 reproduction at reduced scale)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamDef, materialize
+
+
+def convnet_defs(n_classes: int = 10, width: int = 32):
+    return {
+        "conv1": ParamDef((3, 3, 3, width), (None, None, None, None), scale=0.1),
+        "b1": ParamDef((width,), (None,), "zeros"),
+        "conv2": ParamDef((3, 3, width, 2 * width), (None, None, None, None), scale=0.1),
+        "b2": ParamDef((2 * width,), (None,), "zeros"),
+        "fc1": ParamDef((2 * width * 8 * 8, 128), (None, None)),
+        "bf": ParamDef((128,), (None,), "zeros"),
+        "fc2": ParamDef((128, n_classes), (None, None)),
+        "bo": ParamDef((n_classes,), (None,), "zeros"),
+    }
+
+
+def convnet_apply(p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, 32, 32, 3) -> logits (B, n_classes)."""
+    def conv(x, w, b, stride=1):
+        y = jax.lax.conv_general_dilated(
+            x, w, (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return jax.nn.relu(y + b)
+
+    h = conv(x, p["conv1"], p["b1"])
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")          # 16x16
+    h = conv(h, p["conv2"], p["b2"])
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")          # 8x8
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ p["fc1"] + p["bf"])
+    return h @ p["fc2"] + p["bo"]
+
+
+def ce_loss(p, x, y):
+    logits = convnet_apply(p, x)
+    ll = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(ll, y[:, None], axis=1))
+
+
+def accuracy(p, x, y):
+    return jnp.mean(jnp.argmax(convnet_apply(p, x), -1) == y)
+
+
+def init_convnet(seed: int = 0, **kw):
+    return materialize(convnet_defs(**kw), jax.random.PRNGKey(seed))

@@ -1,0 +1,208 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk "attention-
+like" quadratic term + inter-chunk linear recurrence over chunk states
+(sequential ``lax.scan`` over chunks; n_chunks = S / chunk).
+Decode uses the O(1) recurrent update on the (B, H, P, N) SSM state.
+
+Projections are kept as separate tensors (wz/wx/wB/wC/wdt) instead of one
+fused in_proj so each shards cleanly on its own logical axes
+(DESIGN.md §7): heads/channels on "model", d_model on "embed".
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamDef
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.headdim
+    return s, d_in, H, s.headdim, s.d_state, s.ngroups
+
+
+def mamba_defs(cfg: ModelConfig):
+    s, d_in, H, P_, N, G = _dims(cfg)
+    conv_dim = d_in + 2 * G * N
+    d = cfg.d_model
+    return {
+        "wz": ParamDef((d, d_in), ("embed", "inner")),
+        "wx": ParamDef((d, d_in), ("embed", "inner")),
+        "wB": ParamDef((d, G * N), ("embed", None)),
+        "wC": ParamDef((d, G * N), ("embed", None)),
+        "wdt": ParamDef((d, H), ("embed", "heads")),
+        "conv_w": ParamDef((s.conv_width, conv_dim), (None, "inner")),
+        "conv_b": ParamDef((conv_dim,), ("inner",), "zeros"),
+        "A_log": ParamDef((H,), ("heads",), "arange_log"),
+        "D": ParamDef((H,), ("heads",), "ones"),
+        "dt_bias": ParamDef((H,), ("heads",), "zeros"),
+        "norm": ParamDef((d_in,), ("inner",), "ones"),
+        "out_proj": ParamDef((d_in, d), ("inner", "embed")),
+    }
+
+
+def _gated_rmsnorm(scale, y, z, eps):
+    """Mamba2 output norm: RMSNorm(y * silu(z))."""
+    yf = (y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)).astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _conv_full(xBC, w, b):
+    """Causal depthwise conv over (B,S,C) with kernel (W,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} x[..., k]."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, B_, C_, chunk: int, h0=None):
+    """SSD over a full sequence.
+
+    x:  (B, S, H, P)   dt: (B, S, H)   A: (H,) (negative)
+    B_: (B, S, G, N)   C_: (B, S, G, N)
+    Returns y (B, S, H, P) and final state (B, H, P, N).
+    """
+    Bb, S, H, P_ = x.shape
+    G = B_.shape[2]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rep = H // G
+
+    # reshape into chunks; broadcast groups to heads
+    xc = x.reshape(Bb, nc, chunk, H, P_)
+    dtc = dt.reshape(Bb, nc, chunk, H)
+    Bc = jnp.repeat(B_.reshape(Bb, nc, chunk, G, N := B_.shape[-1]), rep, axis=3)
+    Cc = jnp.repeat(C_.reshape(Bb, nc, chunk, G, N), rep, axis=3)
+
+    dA = dtc * A  # (B,nc,Q,H), negative
+    dA_cs = jnp.cumsum(dA, axis=2)                              # within-chunk cumsum
+
+    # 1) intra-chunk (quadratic in chunk length)
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2)))              # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cc, Bc)           # (B,nc,H,Q,Q)
+    xdt = xc * dtc[..., None]                                   # dt-weighted input
+    y_diag = jnp.einsum("bchqk,bchqk,bckhp->bcqhp",
+                        scores.astype(jnp.float32), L, xdt.astype(jnp.float32))
+
+    # 2) chunk states: state_c = sum_q decay_out[q] * B[q] x~[q]
+    decay_out = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)            # (B,nc,Q,H)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn",
+                        Bc.astype(jnp.float32), decay_out, xdt.astype(jnp.float32))
+
+    # 3) inter-chunk recurrence over chunk states (sequential scan)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                   # (B,nc,H)
+    def scan_fn(h, inp):
+        st, dec = inp                                           # (B,H,P,N), (B,H)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+    h_init = jnp.zeros((Bb, H, P_, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    h_last, h_prev = jax.lax.scan(
+        scan_fn, h_init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                         # (B,nc,H,P,N)
+
+    # 4) inter-chunk output: y_off[q] = C[q] . (decay_in[q] * h_prev)
+    decay_in = jnp.exp(dA_cs)                                   # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                       Cc.astype(jnp.float32), h_prev, decay_in)
+
+    y = (y_diag + y_off).reshape(Bb, S, H, P_)
+    return y, h_last
+
+
+# ---------------------------------------------------------------------------
+# block apply
+# ---------------------------------------------------------------------------
+
+def mamba_block(p, x, cfg: ModelConfig, *, cache: Optional[dict] = None, pos=None):
+    """x: (B,S,d). cache (decode): {"conv": (B,W-1,conv_dim), "ssm": (B,H,P,N)}."""
+    s, d_in, H, P_, N, G = _dims(cfg)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    Bb, S, _ = x.shape
+    xc = x.astype(cdt)
+
+    z = xc @ p["wz"].astype(cdt)                                # (B,S,d_in)
+    xin = xc @ p["wx"].astype(cdt)
+    Bv = xc @ p["wB"].astype(cdt)
+    Cv = xc @ p["wC"].astype(cdt)
+    dt = xc @ p["wdt"].astype(cdt)                              # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                # (H,)
+
+    xBC = jnp.concatenate([xin, Bv, Cv], axis=-1)               # (B,S,conv_dim)
+
+    if cache is None:
+        xBC = _conv_full(xBC, p["conv_w"].astype(cdt), p["conv_b"].astype(cdt))
+        conv_tail = None
+        if S >= s.conv_width - 1:
+            # store raw (pre-conv) tail for decode continuation
+            conv_tail = jnp.concatenate([xin, Bv, Cv], axis=-1)[:, S - (s.conv_width - 1):, :]
+        xin2 = xBC[..., :d_in].reshape(Bb, S, H, P_)
+        Bm = xBC[..., d_in:d_in + G * N].reshape(Bb, S, G, N)
+        Cm = xBC[..., d_in + G * N:].reshape(Bb, S, G, N)
+        dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+        # pad S to a chunk multiple with dt=0 positions: exp(0*A)=1 and
+        # x*dt=0, so the padded tail is an identity recurrence (state and
+        # real outputs unaffected)
+        chunk = min(s.chunk, S)
+        pad = -S % chunk
+        if pad:
+            pz = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+            y, h_last = ssd_chunked(pz(xin2), pz(dtv), A, pz(Bm), pz(Cm), chunk)
+            y = y[:, :S]
+        else:
+            y, h_last = ssd_chunked(xin2, dtv, A, Bm, Cm, chunk)
+        y = y + p["D"].astype(jnp.float32)[:, None] * xin2.astype(jnp.float32)
+        y = y.reshape(Bb, S, d_in).astype(cdt)
+        y = _gated_rmsnorm(p["norm"], y, z, cfg.norm_eps)
+        out = y.astype(cdt) @ p["out_proj"].astype(cdt)
+        new_cache = None
+        if conv_tail is not None:
+            new_cache = {"conv": conv_tail.astype(cdt), "ssm": h_last.astype(jnp.float32)}
+        return out, new_cache
+
+    # ---- decode: O(1) recurrent update, S == 1 ----
+    raw = xBC[:, 0, :]                                          # (B,conv_dim)
+    conv_buf = jnp.concatenate([cache["conv"], raw[:, None, :]], axis=1)  # (B,W,conv)
+    w = p["conv_w"].astype(cdt)
+    conv_out = jnp.einsum("bwc,wc->bc", conv_buf, w) + p["conv_b"].astype(cdt)
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = conv_buf[:, 1:, :]
+
+    xin2 = conv_out[:, :d_in].reshape(Bb, H, P_)
+    Bm = conv_out[:, d_in:d_in + G * N].reshape(Bb, G, N)
+    Cm = conv_out[:, d_in + G * N:].reshape(Bb, G, N)
+    rep = H // G
+    Bm = jnp.repeat(Bm, rep, axis=1)                            # (B,H,N)
+    Cm = jnp.repeat(Cm, rep, axis=1)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    dAe = jnp.exp(dtv * A)                                      # (B,H)
+    h = cache["ssm"]                                            # (B,H,P,N) fp32
+    xdt = xin2.astype(jnp.float32) * dtv[..., None]
+    h_new = h * dAe[..., None, None] + jnp.einsum("bhp,bhn->bhpn", xdt,
+                                                  Bm.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, Cm.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[:, None] * xin2.astype(jnp.float32)
+    y = y.reshape(Bb, 1, d_in).astype(cdt)
+    y = _gated_rmsnorm(p["norm"], y, z, cfg.norm_eps)
+    out = y.astype(cdt) @ p["out_proj"].astype(cdt)
+    return out, {"conv": new_conv, "ssm": h_new}

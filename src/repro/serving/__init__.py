@@ -1,0 +1,6 @@
+from repro.serving.engine import (
+    cache_abstract, make_prefill_step, make_serve_step, greedy_generate,
+)
+
+__all__ = ["cache_abstract", "make_prefill_step", "make_serve_step",
+           "greedy_generate"]

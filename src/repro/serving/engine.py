@@ -1,0 +1,99 @@
+"""Serving: KV-cache construction, prefill & decode steps, generation.
+
+Cache layouts (per attention layer):
+  * full attention:   k/v (B, S, K, hd) + slot_pos (B, S)
+  * sliding window:   ring buffer (B, W, K, hd) — O(W) decode state
+  * MLA:              compressed (B, S, kv_lora) + (B, S, qk_rope)
+  * Mamba2:           conv tail (B, W-1, conv_dim) + state (B, H, P, N)
+  * whisper cross:    ck/cv (B, encoder_len, K, hd), written at prefill
+
+``cache_abstract`` builds the ShapeDtypeStruct tree for a ready cache of
+length S by ``jax.eval_shape`` over the prefill — zero allocation, used by
+the dry-run for decode shapes.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.runtime import Runtime
+from repro.models.transformer import forward
+
+
+def make_prefill_step(cfg: ModelConfig, rt: Runtime):
+    def prefill(params, tokens, encoder_embeds=None):
+        logits, cache, _ = forward(params, cfg, rt, tokens, mode="prefill",
+                                   encoder_embeds=encoder_embeds)
+        return logits, cache
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig, rt: Runtime):
+    """One decode step: (params, cache, tokens (B,1), pos (B,)) ->
+    (next_token (B,), logits (B,V), cache')."""
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache, _ = forward(params, cfg, rt, tokens, mode="decode",
+                                       cache=cache, pos=pos)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt, logits[:, -1, :], new_cache
+    return serve_step
+
+
+def cache_abstract(cfg: ModelConfig, B: int, S: int):
+    """ShapeDtypeStruct tree for a populated cache of sequence length S."""
+    from repro.models.transformer import model_defs
+    from repro.models.param import abstract
+
+    params_a = abstract(model_defs(cfg))
+    tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    enc = (jax.ShapeDtypeStruct((B, cfg.encoder_len, cfg.d_model), jnp.float32)
+           if cfg.is_encoder_decoder else None)
+
+    def run(p, t, e):
+        _, cache, _ = forward(p, cfg, Runtime(mesh=None, remat=False), t,
+                              mode="prefill", encoder_embeds=e)
+        return cache
+    return jax.eval_shape(run, params_a, tokens, enc)
+
+
+def pad_cache(cache, extra: int):
+    """Grow attention caches by ``extra`` decode slots (zeros, slot_pos=-1).
+    SSM/conv states (fixed-size) are untouched.  Only valid for unrotated
+    caches (prompt length <= window for windowed layers)."""
+    # seq-axis position from the END (leaves may carry a leading stacked
+    # layer-period dim): k/v (..., S, K, hd); ckv/krope (..., S, r); slot_pos (..., S)
+    seq_axis_from_end = {"k": 3, "v": 3, "ckv": 2, "krope": 2, "slot_pos": 1}
+
+    def pad(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name not in seq_axis_from_end:
+            return leaf
+        padding = [(0, 0)] * leaf.ndim
+        padding[leaf.ndim - seq_axis_from_end[name]] = (0, extra)
+        return jnp.pad(leaf, padding,
+                       constant_values=-1 if name == "slot_pos" else 0)
+    return jax.tree_util.tree_map_with_path(pad, cache)
+
+
+def greedy_generate(cfg: ModelConfig, rt: Runtime, params, prompt,
+                    max_new: int, encoder_embeds=None):
+    """Simple batched greedy decoding driver (examples / tests)."""
+    B, S0 = prompt.shape
+    if cfg.window:
+        assert S0 <= cfg.window, "pad_cache requires unrotated ring caches"
+    prefill = make_prefill_step(cfg, rt)
+    step = make_serve_step(cfg, rt)
+    logits, cache = prefill(params, prompt, encoder_embeds)
+    cache = pad_cache(cache, max_new)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+    out = [tok]
+    pos = jnp.full((B,), S0, jnp.int32)
+    for _ in range(max_new - 1):
+        tok, _, cache = step(params, cache, tok[:, None], pos)
+        out.append(tok)
+        pos = pos + 1
+    return jnp.stack(out, axis=1)

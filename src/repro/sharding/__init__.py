@@ -1,0 +1,7 @@
+from repro.sharding.rules import (
+    DEFAULT_RULES, spec_for, param_specs, param_shardings, batch_spec,
+    cache_specs,
+)
+
+__all__ = ["DEFAULT_RULES", "spec_for", "param_specs", "param_shardings",
+           "batch_spec", "cache_specs"]

@@ -1,0 +1,126 @@
+"""Logical-axis -> mesh-axis resolution.
+
+Models annotate parameters with *logical* axes ("embed", "heads", "ffn",
+"experts", ...).  ``spec_for`` maps them to mesh axes with two guards:
+  * divisibility: an axis maps only if the mesh axis size divides the dim
+    (e.g. gemma-2b's 8 heads stay replicated on a model=16 mesh while its
+    d_ff=16384 still shards);
+  * exclusivity: a mesh axis is used at most once per tensor.
+
+Default layout (DESIGN.md §3): tensor-parallel dims on "model",
+d_model/embed dims FSDP-style on "data", MoE experts expert-parallel on
+"data"; the "pod" axis is pure data parallelism (params replicated across
+pods).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.param import ParamDef, is_def, logical_axes
+
+# logical axis -> candidate mesh axes, in preference order
+DEFAULT_RULES: Dict[Optional[str], Tuple[str, ...]] = {
+    "vocab":      ("model",),
+    "vocab_table": (),            # embedding table: gather-friendly (see models)
+    "embed":      ("data",),      # FSDP: all-gather on use
+    "ffn":        ("model",),
+    "heads":      ("model",),
+    "kv_heads":   ("model",),
+    "head_dim":   (),             # never shard (rope mixes halves)
+    "experts":    ("data",),      # expert parallelism
+    "kv_lora":    ("data",),
+    "kv_lora_in": ("model",),
+    "q_lora":     ("data",),
+    "inner":      ("model",),     # mamba expanded channels / heads
+    "norm":       (),
+    "layers":     (),             # scan axis
+    None:         (),
+}
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+             mesh: Mesh, rules: Dict = None) -> P:
+    rules = rules or DEFAULT_RULES
+    used = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        choice = None
+        for cand in rules.get(ax, ()):
+            if cand in mesh.shape and cand not in used \
+                    and dim % mesh.shape[cand] == 0:
+                choice = cand
+                used.add(cand)
+                break
+        out.append(choice)
+    return P(*out)
+
+
+def param_specs(defs_tree, mesh: Mesh, rules: Dict = None):
+    """Tree of PartitionSpec mirroring a ParamDef tree."""
+    return jax.tree_util.tree_map(
+        lambda d: spec_for(d.shape, d.axes, mesh, rules), defs_tree,
+        is_leaf=is_def)
+
+
+def param_shardings(defs_tree, mesh: Mesh, rules: Dict = None):
+    return jax.tree_util.tree_map(
+        lambda d: NamedSharding(mesh, spec_for(d.shape, d.axes, mesh, rules)),
+        defs_tree, is_leaf=is_def)
+
+
+def batch_spec(mesh: Mesh, ndim: int) -> P:
+    """Batch dim over every data-parallel axis present in the mesh."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return P(axes, *([None] * (ndim - 1)))
+
+
+# decode-cache leaf layouts, dims indexed FROM THE END (leaves may carry a
+# leading stacked layer-period dim): name -> (batch_from_end, seq_from_end)
+_CACHE_DIMS = {
+    "k": (4, 3), "v": (4, 3), "ck": (4, 3), "cv": (4, 3),
+    "ckv": (3, 2), "krope": (3, 2), "slot_pos": (2, 1),
+    "conv": (3, None), "ssm": (4, None),
+}
+
+
+def cache_specs(cache_abstract_tree, mesh: Mesh, batch_shardable: bool):
+    """Shardings for a decode cache.
+
+    * batch shards over (pod, data) when it divides them;
+    * the attention-cache *sequence* dim shards over "model" (and over
+      "data" too when the batch cannot shard, e.g. long_500k batch=1) —
+      flash-decoding: partial softmax + all-reduce, done by the SPMD
+      partitioner;
+    * SSM state heads / conv channels shard over "model".
+    """
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n_model = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name not in _CACHE_DIMS:
+            return NamedSharding(mesh, P())
+        b_end, s_end = _CACHE_DIMS[name]
+        spec = [None] * leaf.ndim
+        if batch_shardable:
+            spec[leaf.ndim - b_end] = daxes
+        if name == "conv" and leaf.shape[-1] % n_model == 0:
+            spec[leaf.ndim - 1] = "model"
+        elif name == "ssm" and leaf.shape[leaf.ndim - 3] % n_model == 0:
+            spec[leaf.ndim - 3] = "model"
+        elif s_end is not None:
+            seq_axes = [] if batch_shardable else list(daxes)
+            seq_axes.append("model")
+            shard = 1
+            chosen = []
+            for a in seq_axes:
+                if leaf.shape[leaf.ndim - s_end] % (shard * mesh.shape[a]) == 0:
+                    shard *= mesh.shape[a]
+                    chosen.append(a)
+            if chosen and leaf.shape[leaf.ndim - s_end] > 1:
+                spec[leaf.ndim - s_end] = tuple(chosen)
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, cache_abstract_tree)

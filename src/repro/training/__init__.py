@@ -1,0 +1,4 @@
+from repro.training.step import make_train_step, loss_fn
+from repro.training.loss import lm_loss
+
+__all__ = ["make_train_step", "loss_fn", "lm_loss"]

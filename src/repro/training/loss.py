@@ -1,0 +1,61 @@
+"""Next-token cross-entropy, computed in sequence chunks so the
+(B, S, vocab) logits tensor never materializes (vocab is up to 256k).
+Each chunk is wrapped in ``jax.checkpoint``: the backward pass recomputes
+chunk logits instead of storing them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+CHUNK = 512
+
+
+def lm_loss(h, unembed, tokens, mask, cfg: ModelConfig):
+    """h: (B,S,d) final hidden; tokens: (B,S) int32; mask: (B,S).
+
+    Predicts tokens[:, t+1] from h[:, t]; the last position is masked out.
+    Returns (mean loss over masked tokens, token count).
+    """
+    B, S, d = h.shape
+    targets = jnp.roll(tokens, -1, axis=1)
+    m = mask * jnp.concatenate(
+        [jnp.ones((B, S - 1), mask.dtype), jnp.zeros((B, 1), mask.dtype)], axis=1)
+
+    chunk = min(CHUNK, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    def chunk_loss(h_c, t_c, m_c):
+        if cfg.logits_bf16:
+            # §Perf: vocab projection bf16-in/f32-accumulate (MXU native);
+            # softmax/CE math stays f32
+            logits = jnp.einsum("bsd,dv->bsv", h_c.astype(jnp.bfloat16),
+                                unembed.astype(jnp.bfloat16),
+                                preferred_element_type=jnp.float32)
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", h_c.astype(jnp.float32),
+                                unembed.astype(jnp.float32))
+        logits = layers.softcap(logits, cfg.final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, t_c[..., None], axis=-1)[..., 0]
+        ce = (lse - picked) * m_c
+        return jnp.sum(ce), jnp.sum(m_c)
+
+    chunk_loss = jax.checkpoint(chunk_loss)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h_c, t_c, m_c = xs
+        s, n = chunk_loss(h_c, t_c, m_c)
+        return (tot + s, cnt + n), None
+
+    hs = jnp.moveaxis(h.reshape(B, nc, chunk, d), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(B, nc, chunk), 1, 0)
+    ms = jnp.moveaxis(m.reshape(B, nc, chunk), 1, 0)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)), (hs, ts, ms))
+    return tot / jnp.maximum(cnt, 1.0), cnt

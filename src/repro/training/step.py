@@ -1,0 +1,97 @@
+"""Train-step builder: gradient accumulation (lax.scan over micro-batches,
+paper §5 trains B=4096/8192 by accumulating 128-sized micro-batches) +
+any ``repro.core`` optimizer.  The optimizer sees the *accumulated
+global-batch* gradient, so SNGM normalizes once per global batch —
+exactly Algorithm 1.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.optim import Optimizer
+from repro.models.runtime import Runtime
+from repro.models.transformer import forward, unembed_matrix
+from repro.training.loss import lm_loss
+
+
+def loss_fn(params, batch: Dict[str, Any], cfg: ModelConfig, rt: Runtime):
+    if rt.gather_dtype != "float32":
+        # §Perf: cast matrices to the compute dtype BEFORE use so the FSDP
+        # all-gather (inserted by SPMD at first use) moves bf16, not fp32;
+        # the cast itself is shard-local.  1D params (norm scales, biases)
+        # keep fp32.
+        gd = jnp.dtype(rt.gather_dtype)
+        params = jax.tree.map(
+            lambda p: p.astype(gd)
+            if (p.ndim >= 2 and p.dtype == jnp.float32) else p, params)
+    h, _, aux = forward(params, cfg, rt, batch["tokens"], mode="train",
+                        encoder_embeds=batch.get("encoder_embeds"))
+    loss, ntok = lm_loss(h, unembed_matrix(params), batch["tokens"],
+                         batch["loss_mask"], cfg)
+    return loss + aux, {"ce_loss": loss, "aux_loss": aux, "ntok": ntok}
+
+
+def make_train_step(cfg: ModelConfig, rt: Runtime, opt: Optimizer,
+                    n_micro: int = 1, grad_specs=None):
+    """Returns train_step(params, opt_state, batch) -> (params', state', stats).
+
+    batch["tokens"]: (B, S) global batch; accumulated over ``n_micro``
+    micro-batches of size B/n_micro inside one jit step.
+
+    grad_specs (PartitionSpec tree mirroring params): pins the gradient /
+    accumulator sharding to the parameter sharding so the per-micro
+    gradient reduction lowers as reduce-scatter instead of a full
+    all-reduce (§Perf: 16x collective-bytes difference at n_micro=16).
+    """
+    grad_fn = jax.value_and_grad(partial(loss_fn, cfg=cfg, rt=rt), has_aux=True)
+
+    def constrain_g(g):
+        if grad_specs is None or rt.mesh is None:
+            return g
+        from jax.sharding import NamedSharding
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(
+                x, NamedSharding(rt.mesh, s)), g, grad_specs)
+
+    def train_step(params, opt_state, batch):
+        B = batch["tokens"].shape[0]
+        assert B % n_micro == 0, (B, n_micro)
+
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = constrain_g(grads)
+        else:
+            micro = jax.tree.map(
+                lambda x: jnp.moveaxis(
+                    x.reshape(n_micro, B // n_micro, *x.shape[1:]), 0, 0),
+                batch)
+
+            def body(acc, mb):
+                g_acc, l_acc = acc
+                (l, _m), g = grad_fn(params, mb)
+                g = constrain_g(g)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (constrain_g(g_acc), l_acc + l), None
+
+            # accumulator in the parameter storage dtype: fp32 models get
+            # exact accumulation; bf16-param models (jamba-398B) trade ~0.5%
+            # gradient noise for fitting the accumulator in HBM
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+            (g_sum, l_sum), _ = jax.lax.scan(body, (g0, jnp.zeros((), jnp.float32)),
+                                             micro)
+            grads = jax.tree.map(lambda g: g / n_micro, g_sum)
+            loss = l_sum / n_micro
+            metrics = {}
+
+        new_params, new_state, stats = opt.step(grads, opt_state, params)
+        stats = dict(stats)
+        stats["loss"] = loss
+        stats.update({k: v for k, v in metrics.items() if jnp.ndim(v) == 0})
+        return new_params, new_state, stats
+
+    return train_step

@@ -1,0 +1,112 @@
+"""Per-architecture smoke tests: a REDUCED variant of each assigned arch
+(2 layers, d_model<=256, <=4 experts) runs one forward + one train step on
+CPU; output shapes and finiteness asserted.  Decode consistency (prefill
+vs step-by-step with every cache type) is covered in test_decode.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, input_specs, smoke_variant
+from repro.core import sngm
+from repro.core.schedules import constant
+from repro.models import CPU_RUNTIME, forward, model_defs
+from repro.models.param import materialize
+from repro.training import make_train_step
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = smoke_variant(ARCHS[name])
+            defs = model_defs(cfg)
+            params = materialize(defs, jax.random.PRNGKey(0))
+            cache[name] = (cfg, params)
+        return cache[name]
+    return get
+
+
+def _batch(cfg, B=2, S=32):
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size, jnp.int32)
+    batch = {"tokens": tokens, "loss_mask": jnp.ones((B, S), jnp.float32)}
+    if cfg.is_encoder_decoder:
+        batch["encoder_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.encoder_len, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_shapes_and_finite(built, arch):
+    cfg, params = built(arch)
+    B, S = 2, 32
+    batch = _batch(cfg, B, S)
+    h, cache, aux = forward(params, cfg, CPU_RUNTIME, batch["tokens"],
+                            mode="train",
+                            encoder_embeds=batch.get("encoder_embeds"))
+    assert h.shape == (B, S, cfg.d_model)
+    assert np.all(np.isfinite(np.asarray(h, np.float32)))
+    assert cache is None
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step(built, arch):
+    cfg, params = built(arch)
+    batch = _batch(cfg)
+    opt = sngm(constant(0.01), beta=0.9, weight_decay=1e-4)
+    state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, CPU_RUNTIME, opt, n_micro=2))
+    new_params, new_state, stats = step(params, state, batch)
+    assert np.isfinite(float(stats["loss"]))
+    assert float(stats["grad_norm"]) > 0
+    assert int(new_state.step) == 1
+    # at least one parameter must actually change
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_prefill_logits_shape(built, arch):
+    cfg, params = built(arch)
+    B, S = 2, 32
+    batch = _batch(cfg, B, S)
+    logits, cache, _ = forward(params, cfg, CPU_RUNTIME, batch["tokens"],
+                               mode="prefill",
+                               encoder_embeds=batch.get("encoder_embeds"))
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert cache is not None
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_smoke_variant_limits():
+    for name, cfg in ARCHS.items():
+        s = smoke_variant(cfg)
+        assert s.d_model <= 512
+        assert s.n_layers <= 8
+        if s.moe:
+            assert s.moe.n_experts <= 4
+        # the reduced variant must preserve the family
+        assert s.family == cfg.family
+
+
+def test_input_specs_all_combos():
+    for name, cfg in ARCHS.items():
+        for sname, shape in SHAPES.items():
+            specs = input_specs(cfg, shape)
+            assert "tokens" in specs
+            if shape.kind == "decode":
+                assert specs["tokens"].shape == (shape.global_batch, 1)
+            else:
+                assert specs["tokens"].shape == (shape.global_batch,
+                                                 shape.seq_len)
+            if cfg.is_encoder_decoder:
+                assert specs["encoder_embeds"].shape[1] == cfg.encoder_len

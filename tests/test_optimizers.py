@@ -1,0 +1,145 @@
+"""Unit tests for the optimizer family (SNGM + baselines)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sngm, sngd, msgd, lars, lamb, make_optimizer, global_norm
+from repro.core.schedules import constant, poly_power, step_decay, warmup, cosine
+
+
+def params():
+    return {"w": jnp.full((4, 8), 2.0), "b": jnp.zeros((8,))}
+
+
+def grads(scale=1.0):
+    return {"w": jnp.full((4, 8), scale), "b": jnp.full((8,), scale)}
+
+
+def test_sngm_matches_hand_computed():
+    opt = sngm(constant(0.5), beta=0.0)
+    st = opt.init(params())
+    p, st, stats = opt.step(grads(3.0), st, params())
+    gn = float(np.sqrt(40 * 9.0))
+    np.testing.assert_allclose(stats["grad_norm"], gn, rtol=1e-6)
+    # u = g/||g||, w' = w - 0.5*u
+    np.testing.assert_allclose(np.asarray(p["w"]), 2.0 - 0.5 * 3.0 / gn, rtol=1e-6)
+
+
+def test_sngm_scale_invariance():
+    """Normalization makes the update invariant to gradient magnitude."""
+    opt = sngm(constant(0.1), beta=0.9)
+    outs = []
+    for scale in (1e-6, 1.0, 1e6):
+        st = opt.init(params())
+        p, _, _ = opt.step(grads(scale), st, params())
+        outs.append(np.asarray(p["w"]))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5)
+    np.testing.assert_allclose(outs[1], outs[2], rtol=1e-5)
+
+
+def test_msgd_not_scale_invariant():
+    opt = msgd(constant(0.1), beta=0.9)
+    st = opt.init(params())
+    p1, _, _ = opt.step(grads(1.0), st, params())
+    p2, _, _ = opt.step(grads(100.0), opt.init(params()), params())
+    assert not np.allclose(np.asarray(p1["w"]), np.asarray(p2["w"]))
+
+
+def test_sngd_equals_sngm_beta0():
+    o1, o2 = sngd(constant(0.2)), sngm(constant(0.2), beta=0.0)
+    p1, _, _ = o1.step(grads(5.0), o1.init(params()), params())
+    p2, _, _ = o2.step(grads(5.0), o2.init(params()), params())
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p2["w"]))
+
+
+def test_sngm_per_tensor_mode():
+    opt = sngm(constant(0.1), beta=0.0, norm_mode="per_tensor")
+    st = opt.init(params())
+    g = {"w": jnp.full((4, 8), 100.0), "b": jnp.full((8,), 1e-3)}
+    p, st, _ = opt.step(g, st, params())
+    # both tensors get unit-norm updates despite 1e5 scale difference
+    dw = np.asarray(params()["w"] - p["w"])
+    db = np.asarray(params()["b"] - p["b"])
+    np.testing.assert_allclose(np.linalg.norm(dw), 0.1, rtol=1e-4)
+    np.testing.assert_allclose(np.linalg.norm(db), 0.1, rtol=1e-4)
+
+
+def test_lars_trust_ratio():
+    opt = lars(constant(1.0), beta=0.0, weight_decay=0.0, trust=0.01)
+    st = opt.init(params())
+    p, _, _ = opt.step(grads(1.0), st, params())
+    w, g = params()["w"], grads()["w"]
+    local = 0.01 * np.linalg.norm(np.asarray(w).ravel()) / np.linalg.norm(np.asarray(g).ravel())
+    np.testing.assert_allclose(np.asarray(p["w"]), np.asarray(w) - local * 1.0,
+                               rtol=1e-5)
+
+
+def test_weight_decay_coupled():
+    """wd adds wd*w to the gradient BEFORE normalization (paper setup)."""
+    opt = sngm(constant(0.1), beta=0.0, weight_decay=0.5)
+    st = opt.init(params())
+    g = {"w": jnp.zeros((4, 8)), "b": jnp.zeros((8,))}
+    p, _, stats = opt.step(g, st, params())
+    # g_eff = 0.5*w -> normalized direction = w/||w||
+    assert float(stats["grad_norm"]) > 0
+    assert np.all(np.asarray(p["w"]) < 2.0)
+
+
+def test_lamb_runs_and_is_finite():
+    opt = lamb(constant(0.01), weight_decay=0.01)
+    st = opt.init(params())
+    p, st, _ = opt.step(grads(10.0), st, params())
+    assert np.all(np.isfinite(np.asarray(p["w"])))
+
+
+def test_make_optimizer_registry():
+    for name in ("sngm", "sngd", "msgd", "lars", "lamb"):
+        opt = make_optimizer(name, constant(0.1))
+        assert opt.step is not None
+    with pytest.raises(KeyError):
+        make_optimizer("adamw", constant(0.1))
+
+
+def test_sngm_pallas_path_matches_jnp():
+    o_ref = sngm(constant(0.3), beta=0.9, weight_decay=1e-4)
+    o_pal = sngm(constant(0.3), beta=0.9, weight_decay=1e-4, use_pallas=True)
+    st_r, st_p = o_ref.init(params()), o_pal.init(params())
+    p_r, p_p = params(), params()
+    for i in range(3):
+        g = jax.tree.map(lambda x: x * (i + 1) * 7.0, grads(1.0))
+        p_r, st_r, _ = o_ref.step(g, st_r, p_r)
+        p_p, st_p, _ = o_pal.step(g, st_p, p_p)
+    for a, b in zip(jax.tree.leaves(p_r), jax.tree.leaves(p_p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def test_poly_power():
+    s = poly_power(1.6, 100, 1.1)
+    assert float(s(jnp.int32(0))) == pytest.approx(1.6)
+    assert float(s(jnp.int32(100))) == pytest.approx(0.0)
+    assert 0 < float(s(jnp.int32(50))) < 1.6
+
+
+def test_step_decay():
+    s = step_decay(0.1, [80, 120])
+    assert float(s(jnp.int32(10))) == pytest.approx(0.1)
+    assert float(s(jnp.int32(80))) == pytest.approx(0.01)
+    assert float(s(jnp.int32(121))) == pytest.approx(0.001, rel=1e-5)
+
+
+def test_warmup_then_base():
+    s = warmup(constant(2.4), 5, init_lr=0.1)
+    assert float(s(jnp.int32(0))) == pytest.approx(0.1)
+    assert float(s(jnp.int32(5))) == pytest.approx(2.4)
+    assert 0.1 < float(s(jnp.int32(2))) < 2.4
+
+
+def test_cosine():
+    s = cosine(1.0, 100)
+    assert float(s(jnp.int32(0))) == pytest.approx(1.0)
+    assert float(s(jnp.int32(100))) == pytest.approx(0.0, abs=1e-6)

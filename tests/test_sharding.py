@@ -1,0 +1,108 @@
+"""Sharding-rule resolution and roofline/HLO-cost unit tests (no mesh >1
+needed — pure logic)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.launch.hlo_cost import analyze, _shape_bytes
+from repro.models import model_defs
+from repro.models.param import ParamDef, abstract, logical_axes
+from repro.sharding.rules import spec_for, param_specs, batch_spec
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_divisibility_guard():
+    # gemma-2b: 8 heads cannot shard over model=16 -> replicated
+    assert spec_for((2048, 8, 256), ("embed", "heads", "head_dim"), MESH) \
+        == P("data", None, None)
+    # yi-9b: 32 heads shard fine
+    assert spec_for((4096, 32, 128), ("embed", "heads", "head_dim"), MESH) \
+        == P("data", "model", None)
+
+
+def test_axis_exclusivity():
+    # experts takes "data"; embed then cannot reuse it
+    assert spec_for((160, 5120, 1536), ("experts", "embed", "ffn"), MESH) \
+        == P("data", None, "model")
+
+
+def test_vocab_table_unsharded():
+    assert spec_for((256000, 2048), ("vocab_table", "embed"), MESH) \
+        == P(None, "data")
+    assert spec_for((4096, 64000), ("embed", "vocab"), MESH) \
+        == P("data", "model")
+
+
+def test_every_arch_param_fully_resolves():
+    """No tensor may fail to lower: every dim either shards evenly or
+    replicates, for every assigned architecture."""
+    for name, cfg in ARCHS.items():
+        defs = model_defs(cfg)
+        specs = param_specs(defs, MESH)
+        shapes = abstract(defs)
+        for spec, shp in zip(jax.tree.leaves(specs,
+                                             is_leaf=lambda x: isinstance(x, P)),
+                             jax.tree.leaves(shapes)):
+            for dim, ax in zip(shp.shape, tuple(spec) + (None,) * 8):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                total = 1
+                for a in axes:
+                    total *= MESH.shape[a]
+                assert dim % total == 0, (name, shp.shape, spec)
+
+
+def test_batch_spec_multipod():
+    assert batch_spec(MESH3, 2) == P(("pod", "data"), None)
+    assert batch_spec(MESH, 3) == P(("data",), None, None)
+
+
+# ---------------------------------------------------------------------------
+# HLO cost model
+# ---------------------------------------------------------------------------
+
+def test_shape_bytes_parsing():
+    assert _shape_bytes("f32[128,128]{1,0}") == 128 * 128 * 4
+    assert _shape_bytes("bf16[2,4096]") == 2 * 4096 * 2
+    assert _shape_bytes("(f32[8], s32[4])") == 32 + 16
+    assert _shape_bytes("pred[]") == 1  # scalar: one element
+
+def test_analyze_counts_scan_trip():
+    import jax.numpy as jnp
+
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        return jax.lax.scan(body, x, None, length=5)[0]
+
+    s = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    compiled = jax.jit(f).lower(s, s).compile()
+    r = analyze(compiled.as_text())
+    assert r["flops"] == 5 * 2 * 64 ** 3
+
+
+def test_analyze_nested_scan():
+    import jax.numpy as jnp
+
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            return jax.lax.scan(inner, c, None, length=3)[0], None
+        return jax.lax.scan(outer, x, None, length=4)[0]
+
+    s = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    compiled = jax.jit(f).lower(s, s).compile()
+    r = analyze(compiled.as_text())
+    assert r["flops"] == 12 * 2 * 32 ** 3
