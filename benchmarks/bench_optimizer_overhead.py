@@ -1,9 +1,26 @@
-"""Optimizer-update micro-benchmark: us/call for each optimizer's update
-on a transformer-sized parameter tree, plus the HBM-traffic model for the
-fused Pallas SNGM kernel vs the unfused XLA lowering (the kernel's win is
-bandwidth, which CPU wall-time cannot show — we report both)."""
+"""Optimizer-update micro-benchmark.
+
+Three things per optimizer:
+  * us/call for the jnp path on a transformer-sized parameter tree;
+  * kernel LAUNCHES per step for the fused paths — the multi-tensor
+    engine must be O(1) in tree size while the per-leaf path is
+    O(n_leaves) (this is the engine's reason to exist: on TPU each
+    launch costs ~2-5us of dispatch that CPU wall-time cannot show);
+  * us/call for per-leaf vs multi-tensor fused paths in interpret mode
+    (CPU correctness path; the multi-tensor path must be no slower).
+
+Plus the HBM-traffic model for the fused update vs the unfused XLA
+lowering (the kernel's win is bandwidth, which CPU wall-time cannot
+show — we report both).
+
+CLI:  python -m benchmarks.bench_optimizer_overhead [--quick] [--json OUT]
+``--quick`` shrinks the tree and iteration counts for the CI smoke lane;
+``--json`` writes the result rows as a JSON artifact.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -13,14 +30,16 @@ import numpy as np
 from benchmarks.common import csv_row
 from repro.core import lars, lamb, msgd, sngd, sngm
 from repro.core.schedules import constant
+from repro.kernels import count_pallas_launches
 
 SHAPES = [(1024, 1024)] * 8 + [(4096, 1024)] * 4 + [(1024,)] * 16
+SHAPES_QUICK = [(256, 256)] * 4 + [(1024, 256)] * 2 + [(256,)] * 10
 
 
-def make_tree(seed, scale=1.0):
+def make_tree(seed, shapes, scale=1.0):
     k = jax.random.PRNGKey(seed)
     return {f"p{i}": scale * jax.random.normal(jax.random.fold_in(k, i), s)
-            for i, s in enumerate(SHAPES)}
+            for i, s in enumerate(shapes)}
 
 
 def time_call(fn, *args, iters=20):
@@ -33,11 +52,37 @@ def time_call(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run():
-    params = make_tree(0)
-    grads = make_tree(1, 3.0)
-    n_params = sum(int(np.prod(s)) for s in SHAPES)
+def launches_per_step(opt, grads, state, params):
+    """pallas_call sites traced into one optimizer step = kernel launches
+    per step execution."""
+    with count_pallas_launches() as c:
+        # fresh lambda: a cached jit of opt.step would skip tracing (and
+        # therefore skip the trace-time launch recording)
+        jax.jit(lambda g, s, p: opt.step(g, s, p)).lower(grads, state, params)
+    return c["launches"]
+
+
+def run(quick: bool = False, json_path: str | None = None):
+    shapes = SHAPES_QUICK if quick else SHAPES
+    iters = 5 if quick else 20
+    params = make_tree(0, shapes)
+    grads = make_tree(1, shapes, 3.0)
+    n_params = sum(int(np.prod(s)) for s in shapes)
+    n_leaves = len(shapes)
     rows = []
+
+    def bench(name, opt, extra=""):
+        state = opt.init(params)
+        step = jax.jit(opt.step)
+        us = time_call(step, grads, state, params, iters=iters)
+        launches = launches_per_step(opt, grads, state, params)
+        rows.append(csv_row(f"opt_update_{name}", us,
+                            f"params={n_params} leaves={n_leaves} "
+                            f"launches/step={launches}{extra}"))
+        print(f"  {rows[-1]}")
+        return us, launches
+
+    # --- jnp reference paths -------------------------------------------
     for name, opt in [("sngm", sngm(constant(0.1), beta=0.9, weight_decay=1e-4)),
                       ("sngm_per_tensor", sngm(constant(0.1), beta=0.9,
                                                norm_mode="per_tensor")),
@@ -45,12 +90,30 @@ def run():
                       ("msgd", msgd(constant(0.1), beta=0.9, weight_decay=1e-4)),
                       ("lars", lars(constant(0.1), beta=0.9, weight_decay=1e-4)),
                       ("lamb", lamb(constant(0.1), weight_decay=1e-4))]:
-        state = opt.init(params)
-        step = jax.jit(opt.step)
-        us = time_call(step, grads, state, params)
-        rows.append(csv_row(f"opt_update_{name}", us,
-                            f"params={n_params}"))
-        print(f"  {rows[-1]}")
+        bench(name, opt)
+
+    # --- fused: per-leaf (O(n_leaves) launches) vs multi-tensor (O(1)) --
+    us_pl, l_pl = bench("sngm_fused_per_leaf",
+                        sngm(constant(0.1), beta=0.9, weight_decay=1e-4,
+                             fused="per_leaf"))
+    us_mt, l_mt = bench("sngm_fused_multi_tensor",
+                        sngm(constant(0.1), beta=0.9, weight_decay=1e-4,
+                             fused="multi_tensor"))
+    bench("lars_fused_multi_tensor",
+          lars(constant(0.1), beta=0.9, weight_decay=1e-4,
+               fused="multi_tensor"))
+    bench("msgd_fused_multi_tensor",
+          msgd(constant(0.1), beta=0.9, weight_decay=1e-4,
+               fused="multi_tensor"))
+
+    assert l_pl == n_leaves, (l_pl, n_leaves)
+    assert l_mt <= 3, l_mt          # norm pass + update pass per dtype bucket
+    summary = (f"multi-tensor: {l_mt} launches/step vs per-leaf {l_pl} "
+               f"({n_leaves} leaves); step time {us_mt:.0f}us vs {us_pl:.0f}us"
+               f" (interpret mode)")
+    rows.append(csv_row("sngm_multi_tensor_vs_per_leaf_speedup",
+                        us_pl / max(us_mt, 1e-9), summary))
+    print(f"  {summary}")
 
     # HBM-traffic model (bytes/param): naive = read g,u,p + write u,p each
     # pass of {decay, scale+momentum, apply} vs fused single pass
@@ -58,10 +121,25 @@ def run():
     fused = (3 + 2) * 4
     rows.append(csv_row("sngm_hbm_bytes_per_param_naive", naive, "model"))
     rows.append(csv_row("sngm_hbm_bytes_per_param_fused_kernel", fused,
-                        "pallas fused_sngm"))
+                        "pallas multi_tensor/fused_sngm"))
     print(f"  fused-kernel HBM model: {naive:.0f} -> {fused:.0f} bytes/param")
-    return {"rows": rows}
+
+    out = {"rows": rows, "n_params": n_params, "n_leaves": n_leaves,
+           "launches_per_step": {"per_leaf": l_pl, "multi_tensor": l_mt},
+           "us_per_step": {"per_leaf": us_pl, "multi_tensor": us_mt},
+           "quick": quick}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"  wrote {json_path}")
+    return out
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small tree + few iters (CI smoke lane)")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write results JSON to this path")
+    args = ap.parse_args()
+    run(quick=args.quick, json_path=args.json)

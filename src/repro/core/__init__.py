@@ -1,10 +1,17 @@
 """repro.core — the paper's contribution: SNGM and its large-batch
-optimizer family, schedules, and distributed-norm utilities."""
+optimizer family, schedules, distributed-norm utilities, and the
+multi-tensor fused optimizer engine."""
 from repro.core.optim import (
     Optimizer, OptState, sngm, sngd, msgd, lars, lamb, make_optimizer,
     global_norm, tree_squared_norm,
 )
+from repro.core.multi_tensor import (
+    TreeLayout, build_layout, flatten, unflatten, leaf_sumsq,
+    multi_tensor_step,
+)
 from repro.core import schedules
 
 __all__ = ["Optimizer", "OptState", "sngm", "sngd", "msgd", "lars", "lamb",
-           "make_optimizer", "global_norm", "tree_squared_norm", "schedules"]
+           "make_optimizer", "global_norm", "tree_squared_norm", "schedules",
+           "TreeLayout", "build_layout", "flatten", "unflatten",
+           "leaf_sumsq", "multi_tensor_step"]

@@ -1,0 +1,301 @@
+"""Multi-tensor fused optimizer engine.
+
+The per-leaf Pallas path (``kernels/fused_sngm``) launches one kernel per
+parameter tensor, so optimizer overhead is O(n_leaves).  This engine
+flattens the parameter/gradient/momentum pytrees into dtype-bucketed
+contiguous flat buffers, computes global AND per-segment squared norms in
+one Pallas reduction pass per bucket, then applies momentum + update for
+the whole bucket in one fused second pass — O(1) kernel launches per step
+regardless of tree size.  One coefficient parameterization covers all four
+optimizers (see ``kernels/multi_tensor/kernel.py``): SNGM (global norm),
+SNGM[per_tensor] and LARS (per-segment norms), and MSGD.
+
+Numerics are bit-identical to the pure-jnp optimizer paths in
+``core.optim`` because both sides share one canonical reduction order:
+``leaf_sumsq`` below (CHUNK-sized row partials, then a single reduction
+over partials) is used by ``tree_squared_norm``/the per-leaf jnp norms,
+and every segment starts on a CHUNK boundary in the flat buffer, so the
+kernel's row partials are the same numbers in the same order.
+
+Sharding: buffers are built with plain jnp ops (pad/concatenate), so
+under pjit the engine is SPMD-correct — each shard builds its local
+buffer view and the norm finishes with the scalar all-reduce XLA inserts,
+which is exactly the one-collective-per-step property that makes SNGM
+cheap to distribute (paper §5).  Buffers are rebuilt each step from the
+leaf pytrees; persisting optimizer state in flat form across steps is a
+further bandwidth win tracked in ROADMAP.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.multi_tensor.kernel import CHUNK, TILE
+from repro.kernels.multi_tensor import ops as _ops
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# canonical chunked reduction (shared with the jnp optimizer paths)
+# ---------------------------------------------------------------------------
+
+def _fold_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Sum a 1-D f32 array by explicit pairwise halving.
+
+    The associativity is fixed by the graph itself (log2(n) explicit adds),
+    so the result is bitwise reproducible in ANY fusion context — unlike
+    ``jnp.sum(jnp.sum(..., axis=1))``, which XLA's simplifier merges into a
+    single differently-ordered reduction depending on what surrounds it.
+    Both the jnp optimizer paths and the fused engine reduce norm partials
+    with this, which is what makes them bit-identical."""
+    n = x.shape[0]
+    while n > 1:
+        if n % 2:
+            x = jnp.pad(x, (0, 1))
+            n += 1
+        x = x[:n // 2] + x[n // 2:]
+        n //= 2
+    return x[0]
+
+
+def leaf_sumsq(x) -> jnp.ndarray:
+    """Sum of squared entries of one array, f32 accumulate, in the engine's
+    canonical order: CHUNK-sized row partials, then a pairwise fold over the
+    partials.  ``tree_squared_norm`` and the per-tensor jnp norms use this
+    so the fused path is bit-identical to the jnp path."""
+    xf = x.astype(jnp.float32).ravel()
+    pad = -xf.size % CHUNK
+    if pad:
+        xf = jnp.pad(xf, (0, pad))
+    return _fold_sum(jnp.sum(jnp.square(xf.reshape(-1, CHUNK)), axis=1))
+
+
+# ---------------------------------------------------------------------------
+# layout: dtype buckets of chunk-aligned segments
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """One leaf's slice of its bucket buffer ([offset, offset+size) holds
+    the raveled leaf; the segment is padded out to chunk_hi*CHUNK)."""
+    index: int                  # position in the original leaf order
+    offset: int                 # element offset, always a CHUNK multiple
+    size: int
+    shape: Tuple[int, ...]
+    dtype: Any
+    chunk_lo: int               # [chunk_lo, chunk_hi) partial-row range
+    chunk_hi: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    dtype: Any
+    segments: Tuple[Segment, ...]
+    n_elems: int                # padded buffer length, TILE multiple
+    n_chunks: int
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeLayout:
+    treedef: Any
+    n_leaves: int
+    buckets: Tuple[Bucket, ...]
+
+
+def build_layout(tree: PyTree) -> TreeLayout:
+    """Static (shape/dtype-only) bucketing of a pytree.  Leaves keep their
+    original relative order within a bucket; buckets are ordered by dtype
+    name for determinism."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    by_dtype = {}
+    for i, leaf in enumerate(leaves):
+        by_dtype.setdefault(jnp.dtype(leaf.dtype).name, []).append(i)
+    buckets = []
+    for dname in sorted(by_dtype):
+        segs, off = [], 0
+        for i in by_dtype[dname]:
+            leaf = leaves[i]
+            size = leaf.size
+            n_chunks = max(1, -(-size // CHUNK))
+            segs.append(Segment(index=i, offset=off, size=size,
+                                shape=tuple(leaf.shape),
+                                dtype=jnp.dtype(leaf.dtype),
+                                chunk_lo=off // CHUNK,
+                                chunk_hi=off // CHUNK + n_chunks))
+            off += n_chunks * CHUNK
+        n_elems = -(-off // TILE) * TILE
+        buckets.append(Bucket(dtype=jnp.dtype(dname), segments=tuple(segs),
+                              n_elems=n_elems, n_chunks=n_elems // CHUNK))
+    return TreeLayout(treedef=treedef, n_leaves=len(leaves),
+                      buckets=tuple(buckets))
+
+
+def flatten(tree: PyTree, layout: TreeLayout,
+            cast_to: Optional[Any] = None) -> List[jnp.ndarray]:
+    """Pack a pytree (mirroring the layout's tree) into one flat buffer per
+    bucket.  ``cast_to`` overrides the buffer dtype (momentum is always
+    f32 regardless of the parameter storage dtype)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    assert len(leaves) == layout.n_leaves, (len(leaves), layout.n_leaves)
+    flats = []
+    for b in layout.buckets:
+        dt = jnp.dtype(cast_to) if cast_to is not None else b.dtype
+        pieces, off = [], 0
+        for s in b.segments:
+            x = leaves[s.index].astype(dt).ravel()
+            seg_len = (s.chunk_hi - s.chunk_lo) * CHUNK
+            pieces.append(jnp.pad(x, (0, seg_len - s.size)))
+            off += seg_len
+        if b.n_elems > off:
+            pieces.append(jnp.zeros((b.n_elems - off,), dt))
+        flats.append(jnp.concatenate(pieces) if len(pieces) > 1
+                     else pieces[0])
+    return flats
+
+
+def unflatten(flats: Sequence[jnp.ndarray], layout: TreeLayout,
+              keep_dtype: bool = False) -> PyTree:
+    """Inverse of ``flatten``: slice each segment back out and rebuild the
+    tree.  ``keep_dtype=True`` keeps the buffer dtype (momentum buffers are
+    f32 even when the layout says bf16)."""
+    leaves = [None] * layout.n_leaves
+    for b, flat in zip(layout.buckets, flats):
+        for s in b.segments:
+            x = flat[s.offset:s.offset + s.size].reshape(s.shape)
+            leaves[s.index] = x if keep_dtype else x.astype(s.dtype)
+    return jax.tree_util.tree_unflatten(layout.treedef, leaves)
+
+
+def _segment_sums(partials: jnp.ndarray, bucket: Bucket) -> List[jnp.ndarray]:
+    """Reduce per-chunk partials to one scalar per segment — same fold as
+    ``leaf_sumsq``'s final reduction, hence bit-identical."""
+    return [_fold_sum(partials[s.chunk_lo:s.chunk_hi])
+            for s in bucket.segments]
+
+
+def _per_chunk(bucket: Bucket, seg_vals: Sequence[jnp.ndarray],
+               fill=0.0) -> jnp.ndarray:
+    """Expand per-segment scalars to the (n_chunks,) coefficient array the
+    update kernel consumes (tail-padding chunks get ``fill``)."""
+    pieces = [jnp.full((s.chunk_hi - s.chunk_lo,), v, jnp.float32)
+              for s, v in zip(bucket.segments, seg_vals)]
+    used = bucket.segments[-1].chunk_hi if bucket.segments else 0
+    if bucket.n_chunks > used:
+        pieces.append(jnp.full((bucket.n_chunks - used,), fill, jnp.float32))
+    return jnp.concatenate(pieces) if len(pieces) > 1 else pieces[0]
+
+
+# ---------------------------------------------------------------------------
+# the engine step
+# ---------------------------------------------------------------------------
+
+KINDS = ("sngm_global", "sngm_per_tensor", "msgd", "lars")
+
+
+def multi_tensor_step(kind: str, params: PyTree, grads: PyTree,
+                      momentum: PyTree, *, lr, beta: float,
+                      weight_decay: float = 0.0, eps: float = 1e-12,
+                      trust: float = 0.001,
+                      backend: str = "pallas") -> Tuple[PyTree, PyTree, dict]:
+    """One fused optimizer step over the whole tree.
+
+    Returns (new_params, new_momentum, stats) with the same stats keys as
+    the jnp paths in ``core.optim`` ({grad_norm, lr, update_norm}), all
+    bit-identical to them.  ``backend``: "pallas" (interpret mode off-TPU)
+    or "ref" (pure-jnp oracle, zero kernel launches).
+    """
+    if kind not in KINDS:
+        raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
+    wd = float(weight_decay)
+    layout = build_layout(params)
+    # The engine buckets by PARAM dtype, so gradients must match their
+    # parameter's dtype leaf-for-leaf (what training/step.py's accumulator
+    # produces).  A silent cast here (e.g. fp32 grads over bf16 params)
+    # would quietly diverge from the jnp path's promote-to-f32 semantics.
+    for p_leaf, g_leaf in zip(jax.tree_util.tree_leaves(params),
+                              jax.tree_util.tree_leaves(grads)):
+        if g_leaf.dtype != p_leaf.dtype:
+            raise ValueError(
+                f"multi_tensor fused path requires grads to match the "
+                f"parameter dtype per leaf; got grad {g_leaf.dtype} for "
+                f"param {p_leaf.dtype}. Cast the gradients (or use the "
+                f"jnp path, fused=None, which promotes to f32).")
+    p_flats = flatten(params, layout)
+    g_flats = flatten(grads, layout)
+    u_flats = flatten(momentum, layout, cast_to=jnp.float32)
+
+    # ---- pass 1: squared-norm partials per bucket -------------------------
+    # sngm/msgd norm the coupled-decayed gradient (g + wd*w, computed inside
+    # the kernel); lars needs raw ||g|| and ||w|| per tensor instead.
+    g_parts = []
+    w_parts = []
+    for b, pf, gf in zip(layout.buckets, p_flats, g_flats):
+        if kind == "lars":
+            g_parts.append(_ops.chunk_sumsq(gf, backend=backend))
+            w_parts.append(_ops.chunk_sumsq(pf, backend=backend))
+        else:
+            g_parts.append(_ops.chunk_sumsq(gf, pf, wd=wd, backend=backend))
+
+    # per-segment and global sums, in ORIGINAL leaf order so the sequential
+    # accumulation matches tree_squared_norm exactly
+    gsq_by_leaf = [None] * layout.n_leaves
+    wsq_by_leaf = [None] * layout.n_leaves
+    for bi, b in enumerate(layout.buckets):
+        for s, v in zip(b.segments, _segment_sums(g_parts[bi], b)):
+            gsq_by_leaf[s.index] = v
+        if kind == "lars":
+            for s, v in zip(b.segments, _segment_sums(w_parts[bi], b)):
+                wsq_by_leaf[s.index] = v
+    gnorm = jnp.sqrt(sum(gsq_by_leaf))
+
+    # ---- coefficients ----------------------------------------------------
+    lr = jnp.asarray(lr, jnp.float32)
+    cast_g_first = False
+    if kind == "sngm_global":
+        inv = 1.0 / (gnorm + eps)
+        a_chunks = [jnp.full((b.n_chunks,), inv, jnp.float32)
+                    for b in layout.buckets]
+        c = lr
+    elif kind == "sngm_per_tensor":
+        a_chunks = [
+            _per_chunk(b, [1.0 / (jnp.sqrt(gsq_by_leaf[s.index]) + eps)
+                           for s in b.segments])
+            for b in layout.buckets]
+        c = lr
+    elif kind == "msgd":
+        a_chunks = [jnp.ones((b.n_chunks,), jnp.float32)
+                    for b in layout.buckets]
+        c = lr
+    else:  # lars
+        def local_lr(s):
+            wn = jnp.sqrt(wsq_by_leaf[s.index])
+            gn = jnp.sqrt(gsq_by_leaf[s.index])
+            local = trust * wn / (gn + wd * wn + eps)
+            return lr * jnp.where(wn > 0, local, 1.0)
+        a_chunks = [_per_chunk(b, [local_lr(s) for s in b.segments])
+                    for b in layout.buckets]
+        c = jnp.float32(1.0)
+        cast_g_first = True
+
+    # ---- pass 2: fused momentum + apply per bucket -----------------------
+    po_flats, uo_flats = [], []
+    usq_by_leaf = [None] * layout.n_leaves
+    for b, pf, gf, uf, ac in zip(layout.buckets, p_flats, g_flats, u_flats,
+                                 a_chunks):
+        po, uo, usq = _ops.fused_update(pf, gf, uf, ac, c, beta=beta, wd=wd,
+                                        cast_g_first=cast_g_first,
+                                        backend=backend)
+        po_flats.append(po)
+        uo_flats.append(uo)
+        for s, v in zip(b.segments, _segment_sums(usq, b)):
+            usq_by_leaf[s.index] = v
+
+    new_params = unflatten(po_flats, layout)
+    new_momentum = unflatten(uo_flats, layout, keep_dtype=True)
+    stats = {"grad_norm": gnorm, "lr": lr,
+             "update_norm": jnp.sqrt(sum(usq_by_leaf))}
+    return new_params, new_momentum, stats

@@ -10,6 +10,21 @@ distribute (DESIGN.md §3).
     opt = sngm(schedule, beta=0.9, weight_decay=1e-4)
     state = opt.init(params)
     params, state, stats = opt.step(grads, state, params)
+
+Fused execution: ``sngm``/``msgd``/``lars`` accept ``fused=``
+
+  * ``None``           — pure jnp (the reference path).
+  * ``"multi_tensor"`` — the multi-tensor engine (core/multi_tensor.py):
+                         dtype-bucketed flat buffers, one Pallas norm pass
+                         + one fused update pass per bucket, O(1) kernel
+                         launches per step.  Bit-identical to the jnp path.
+  * ``"per_leaf"``     — the original one-kernel-per-tensor Pallas path
+                         (kernels/fused_sngm, kernels/fused_lars); kept as
+                         the baseline bench_optimizer_overhead.py compares
+                         against.
+
+``use_pallas=True`` is the legacy spelling and now routes to
+``"multi_tensor"`` when ``fused`` is not given.
 """
 from __future__ import annotations
 
@@ -20,6 +35,7 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.multi_tensor import leaf_sumsq, multi_tensor_step
 from repro.core.schedules import Schedule, constant
 
 PyTree = Any
@@ -30,9 +46,13 @@ PyTree = Any
 # ---------------------------------------------------------------------------
 
 def tree_squared_norm(tree: PyTree) -> jnp.ndarray:
-    """Sum of squared entries over the whole pytree (fp32 accumulate)."""
+    """Sum of squared entries over the whole pytree (fp32 accumulate).
+
+    Uses the engine's canonical chunked reduction (``leaf_sumsq``) so the
+    jnp optimizer paths and the multi-tensor fused paths see bit-identical
+    norms."""
     leaves = jax.tree_util.tree_leaves(tree)
-    return sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    return sum(leaf_sumsq(l) for l in leaves)
 
 
 def global_norm(tree: PyTree) -> jnp.ndarray:
@@ -77,6 +97,15 @@ def _decayed(grads: PyTree, params: PyTree, weight_decay: float) -> PyTree:
     return jax.tree.map(lambda g, w: g + weight_decay * w, grads, params)
 
 
+def _resolve_fused(use_pallas: bool, fused: Optional[str],
+                   allowed=("per_leaf", "multi_tensor")) -> Optional[str]:
+    if fused is None:
+        return "multi_tensor" if use_pallas else None
+    if fused not in allowed:
+        raise ValueError(f"fused={fused!r}; expected one of {allowed} or None")
+    return fused
+
+
 # ---------------------------------------------------------------------------
 # SNGM — the paper's Algorithm 1
 # ---------------------------------------------------------------------------
@@ -86,7 +115,8 @@ def sngm(schedule: Schedule,
          weight_decay: float = 0.0,
          eps: float = 1e-12,
          norm_mode: str = "global",
-         use_pallas: bool = False) -> Optimizer:
+         use_pallas: bool = False,
+         fused: Optional[str] = None) -> Optimizer:
     """Stochastic Normalized Gradient descent with Momentum (Algorithm 1).
 
         u_{t+1} = beta * u_t + g_t / ||g_t||
@@ -98,20 +128,31 @@ def sngm(schedule: Schedule,
       * "per_tensor" — beyond-paper block-normalized variant (LARS-
                        flavoured); each tensor normalized by its own norm.
                        Lemma 4 then holds per tensor.
-    ``use_pallas``   — route the per-leaf update through the fused Pallas
-                       TPU kernel (kernels/fused_sngm); numerics identical
-                       to the jnp path (validated in tests).
+    ``fused`` / ``use_pallas`` — see module docstring; numerics identical
+    to the jnp path (validated bitwise in tests/test_multi_tensor.py).
     """
     if norm_mode not in ("global", "per_tensor"):
         raise ValueError(norm_mode)
+    fused_mode = _resolve_fused(use_pallas, fused)
+    if fused_mode == "per_leaf" and norm_mode != "global":
+        raise ValueError("fused='per_leaf' supports norm_mode='global' only; "
+                         "use fused='multi_tensor' for per_tensor")
 
     def step_fn(grads, state, params):
-        g = _decayed(grads, params, weight_decay)
         lr = schedule(state.step)
+        if fused_mode == "multi_tensor":
+            kind = ("sngm_global" if norm_mode == "global"
+                    else "sngm_per_tensor")
+            new_p, new_u, stats = multi_tensor_step(
+                kind, params, grads, state.momentum, lr=lr, beta=beta,
+                weight_decay=weight_decay, eps=eps)
+            return new_p, OptState(state.step + 1, new_u), stats
+
+        g = _decayed(grads, params, weight_decay)
         if norm_mode == "global":
             gnorm = global_norm(g)
             inv = 1.0 / (gnorm + eps)
-            if use_pallas:
+            if fused_mode == "per_leaf":
                 from repro.kernels.fused_sngm import ops as _k
                 new_p, new_u = _k.fused_sngm_tree(params, g, state.momentum,
                                                   inv, beta, lr)
@@ -123,9 +164,10 @@ def sngm(schedule: Schedule,
                     lambda w, u: (w - lr * u).astype(w.dtype), params, new_u)
         else:
             gnorm = global_norm(g)  # reported only
+
             def upd(u, gi):
-                n = jnp.linalg.norm(gi.astype(jnp.float32))
-                return beta * u + gi.astype(jnp.float32) / (n + eps)
+                n = jnp.sqrt(leaf_sumsq(gi))
+                return beta * u + gi.astype(jnp.float32) * (1.0 / (n + eps))
             new_u = jax.tree.map(upd, state.momentum, g)
             new_p = jax.tree.map(
                 lambda w, u: (w - lr * u).astype(w.dtype), params, new_u)
@@ -149,11 +191,21 @@ def sngd(schedule: Schedule, weight_decay: float = 0.0, **kw) -> Optimizer:
 
 def msgd(schedule: Schedule,
          beta: float = 0.9,
-         weight_decay: float = 0.0) -> Optimizer:
+         weight_decay: float = 0.0,
+         use_pallas: bool = False,
+         fused: Optional[str] = None) -> Optimizer:
     """Momentum SGD:  v_{t+1} = beta v_t + g_t ;  w_{t+1} = w_t - eta v_{t+1}."""
+    fused_mode = _resolve_fused(use_pallas, fused, allowed=("multi_tensor",))
+
     def step_fn(grads, state, params):
-        g = _decayed(grads, params, weight_decay)
         lr = schedule(state.step)
+        if fused_mode == "multi_tensor":
+            new_p, new_v, stats = multi_tensor_step(
+                "msgd", params, grads, state.momentum, lr=lr, beta=beta,
+                weight_decay=weight_decay)
+            return new_p, OptState(state.step + 1, new_v), stats
+
+        g = _decayed(grads, params, weight_decay)
         new_v = jax.tree.map(lambda v, gi: beta * v + gi.astype(jnp.float32),
                              state.momentum, g)
         new_p = jax.tree.map(lambda w, v: (w - lr * v).astype(w.dtype),
@@ -173,7 +225,9 @@ def lars(schedule: Schedule,
          beta: float = 0.9,
          weight_decay: float = 0.0,
          trust: float = 0.001,
-         eps: float = 1e-12) -> Optimizer:
+         eps: float = 1e-12,
+         use_pallas: bool = False,
+         fused: Optional[str] = None) -> Optimizer:
     """Layer-wise Adaptive Rate Scaling, matching the pytorch-lars
     implementation the paper used (github.com/noahgolmant/pytorch-lars):
 
@@ -181,21 +235,42 @@ def lars(schedule: Schedule,
         v = beta v + eta * local_lr * (g + wd * w)
         w = w - v
     """
+    fused_mode = _resolve_fused(use_pallas, fused)
+
     def step_fn(grads, state, params):
         lr = schedule(state.step)
+        if fused_mode == "multi_tensor":
+            new_p, new_v, stats = multi_tensor_step(
+                "lars", params, grads, state.momentum, lr=lr, beta=beta,
+                weight_decay=weight_decay, eps=eps, trust=trust)
+            return new_p, OptState(state.step + 1, new_v), stats
 
-        def upd(v, g, w):
-            g = g.astype(jnp.float32)
-            wn = jnp.linalg.norm(w.astype(jnp.float32))
-            gn = jnp.linalg.norm(g)
-            local = trust * wn / (gn + weight_decay * wn + eps)
-            # scalars (biases/norm scales, ||w|| ~ 0 at init) fall back to 1
-            local = jnp.where(wn > 0, local, 1.0)
-            return beta * v + lr * local * (g + weight_decay * w)
+        if fused_mode == "per_leaf":
+            from repro.kernels.fused_lars.ops import lars_update
+            flat_p, treedef = jax.tree_util.tree_flatten(params)
+            flat_g = jax.tree_util.tree_leaves(grads)
+            flat_v = jax.tree_util.tree_leaves(state.momentum)
+            ps, vs = [], []
+            for w, g, v in zip(flat_p, flat_g, flat_v):
+                wn, vn = lars_update(w, g, v, lr, beta=beta, wd=weight_decay,
+                                     trust=trust, eps=eps)
+                ps.append(wn.astype(w.dtype))
+                vs.append(vn)
+            new_p = jax.tree_util.tree_unflatten(treedef, ps)
+            new_v = jax.tree_util.tree_unflatten(treedef, vs)
+        else:
+            def upd(v, g, w):
+                g = g.astype(jnp.float32)
+                wn = jnp.sqrt(leaf_sumsq(w))
+                gn = jnp.sqrt(leaf_sumsq(g))
+                local = trust * wn / (gn + weight_decay * wn + eps)
+                # scalars (biases/norm scales, ||w|| ~ 0 at init) fall back to 1
+                local = jnp.where(wn > 0, local, 1.0)
+                return beta * v + lr * local * (g + weight_decay * w)
 
-        new_v = jax.tree.map(upd, state.momentum, grads, params)
-        new_p = jax.tree.map(lambda w, v: (w - v).astype(w.dtype),
-                             params, new_v)
+            new_v = jax.tree.map(upd, state.momentum, grads, params)
+            new_p = jax.tree.map(lambda w, v: (w - v).astype(w.dtype),
+                                 params, new_v)
         stats = {"grad_norm": global_norm(grads), "lr": lr,
                  "update_norm": global_norm(new_v)}
         return new_p, OptState(state.step + 1, new_v), stats

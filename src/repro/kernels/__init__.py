@@ -1,3 +1,37 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""repro.kernels — Pallas kernels for the optimizer/attention hot spots.
+
+Each kernel package is <name>/{kernel,ops,ref}.py: the Pallas kernel, the
+backend-dispatching wrapper, and the jnp oracle used by tests.
+
+Also home to the kernel-launch counter: every ops-layer wrapper calls
+``record_launches(n)`` at TRACE time, so tracing one optimizer step inside
+``count_pallas_launches()`` reports exactly how many ``pallas_call``s that
+step will issue per execution (the number bench_optimizer_overhead.py uses
+to show O(1) multi-tensor launches vs O(n_leaves) per-leaf launches).
+"""
+from __future__ import annotations
+
+import contextlib
+
+_LAUNCHES = {"n": 0}
+
+
+def record_launches(n: int = 1) -> None:
+    """Called by ops wrappers once per pallas_call they trace."""
+    _LAUNCHES["n"] += n
+
+
+@contextlib.contextmanager
+def count_pallas_launches():
+    """Count pallas_call sites traced inside the block.
+
+        with count_pallas_launches() as c:
+            jax.jit(opt.step).lower(g, state, p)
+        print(c["launches"])   # kernel launches per executed step
+    """
+    start = _LAUNCHES["n"]
+    box = {"launches": 0}
+    try:
+        yield box
+    finally:
+        box["launches"] = _LAUNCHES["n"] - start

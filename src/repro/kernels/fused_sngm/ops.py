@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import record_launches
 from repro.kernels.fused_sngm.kernel import fused_sngm_update
 
 
@@ -23,6 +24,7 @@ def fused_sngm_tree(params, grads, momentum, inv_norm, beta: float, lr):
     flat_u = jax.tree_util.tree_leaves(momentum)
     ps, us = [], []
     for (path, p), g, u in zip(flat_p, flat_g, flat_u):
+        record_launches(1)
         pn, un = fused_sngm_update(p, g, u, inv_norm, lr, beta=beta,
                                    interpret=interp)
         ps.append(pn)

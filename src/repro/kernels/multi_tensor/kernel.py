@@ -1,0 +1,159 @@
+"""Multi-tensor fused optimizer kernels — Pallas TPU.
+
+The per-leaf kernels (``fused_sngm``, ``fused_lars``) launch one kernel
+per parameter tensor, so optimizer overhead grows with tree size.  These
+kernels instead operate on ONE dtype-bucketed flat buffer holding every
+leaf (built by ``repro.core.multi_tensor``), giving O(1) launches per
+optimizer step:
+
+  pass 1  ``chunk_sumsq``   — squared-norm partials, one f32 per CHUNK-sized
+                              row of the buffer.  Segment (= per-tensor) and
+                              global norms are tiny reductions over these
+                              partials; because every segment starts on a
+                              CHUNK boundary the per-segment results are
+                              bit-identical to a per-leaf chunked reduction.
+  pass 2  ``fused_update``  — momentum + apply for the whole buffer, with a
+                              per-chunk normalization coefficient ``a`` (a
+                              broadcast scalar for SNGM's global norm, a
+                              per-segment scalar for SNGM[per_tensor]/LARS,
+                              1 for MSGD).  Also emits sumsq partials of the
+                              new momentum so ``update_norm`` stats need no
+                              third pass.
+
+One (a, c, wd, beta, cast_g_first) parameterization covers all four
+optimizers:
+
+    u_new = beta * u + a * decay(g, p)        decay = g + wd*p (coupled wd)
+    p_new = (p - c * u_new).astype(p.dtype)
+
+    sngm             a = 1/(||g_dec||+eps)  broadcast        c = lr
+    sngm[per_tensor] a = 1/(||g_dec||_seg+eps) per segment   c = lr
+    lars             a = lr * local_lr_seg  per segment      c = 1
+    msgd             a = 1                                   c = lr
+
+Layout: buffers are viewed as (n_chunks, CHUNK) rows; the grid walks
+tiles of TILE_ROWS rows.  Coefficients/partials ride in (TILE_ROWS, 1)
+blocks — fine in interpret mode and on recent Mosaic (last-dim-1 gets a
+masked relayout); pad to lane width if a target TPU rejects it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 1024        # elements per row == per-coefficient granularity
+TILE_ROWS = 64      # rows per grid step: 64*1024*4B = 256 KiB f32 per operand
+TILE = TILE_ROWS * CHUNK
+
+
+def _tile_rows(n_chunks: int, interpret: bool) -> int:
+    """Grid tiling: TILE_ROWS rows per step on TPU (VMEM-bounded); the whole
+    buffer in ONE grid step under interpret mode, where each extra grid step
+    costs a full-buffer dynamic-update-slice instead of a VMEM tile swap.
+    Per-row math is identical either way, so numerics don't change."""
+    return n_chunks if interpret else TILE_ROWS
+
+
+def _decay(g, p, *, wd: float, cast_g_first: bool):
+    """g + wd*p in f32, replicating the reference paths' cast order exactly:
+    SNGM/MSGD decay in the gradient dtype then cast (``_decayed``); LARS
+    casts the gradient first.  wd == 0 must be a true no-op (not ``+0*p``,
+    which flips the sign of -0.0)."""
+    if wd == 0.0:
+        return g.astype(jnp.float32)
+    if cast_g_first:
+        return g.astype(jnp.float32) + wd * p
+    return (g + wd * p).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# pass 1: squared-norm partials
+# ---------------------------------------------------------------------------
+
+def _sumsq_raw_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.sum(jnp.square(x), axis=1, keepdims=True)
+
+
+def _sumsq_decayed_kernel(g_ref, p_ref, o_ref, *, wd):
+    ge = _decay(g_ref[...], p_ref[...], wd=wd, cast_g_first=False)
+    o_ref[...] = jnp.sum(jnp.square(ge), axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("wd", "interpret"))
+def chunk_sumsq(x, p=None, *, wd: float = 0.0, interpret: bool = False):
+    """Per-chunk sum of squares of ``x`` (or of ``x + wd*p`` when ``p`` is
+    given).  ``x``: flat (n,) with n % TILE == 0.  Returns f32 (n/CHUNK,)."""
+    assert x.ndim == 1 and x.size % TILE == 0, x.shape
+    x2 = x.reshape(-1, CHUNK)
+    n_chunks = x2.shape[0]
+    rows = _tile_rows(n_chunks, interpret)
+    grid = n_chunks // rows
+    tile = pl.BlockSpec((rows, CHUNK), lambda i: (i, 0))
+    otile = pl.BlockSpec((rows, 1), lambda i: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((n_chunks, 1), jnp.float32)
+    if p is None or wd == 0.0:
+        out = pl.pallas_call(
+            _sumsq_raw_kernel, grid=(grid,),
+            in_specs=[tile], out_specs=otile, out_shape=out_shape,
+            interpret=interpret,
+        )(x2)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_sumsq_decayed_kernel, wd=wd), grid=(grid,),
+            in_specs=[tile, tile], out_specs=otile, out_shape=out_shape,
+            interpret=interpret,
+        )(x2, p.reshape(-1, CHUNK))
+    return out.ravel()
+
+
+# ---------------------------------------------------------------------------
+# pass 2: fused momentum + apply
+# ---------------------------------------------------------------------------
+
+def _update_kernel(c_ref, a_ref, p_ref, g_ref, u_ref,
+                   po_ref, uo_ref, usq_ref, *, beta, wd, cast_g_first):
+    ge = _decay(g_ref[...], p_ref[...], wd=wd, cast_g_first=cast_g_first)
+    a = a_ref[...]                       # (TILE_ROWS, 1), broadcasts per row
+    u_new = beta * u_ref[...] + a * ge
+    uo_ref[...] = u_new
+    po_ref[...] = (p_ref[...] - c_ref[0] * u_new).astype(po_ref.dtype)
+    usq_ref[...] = jnp.sum(jnp.square(u_new), axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("beta", "wd", "cast_g_first", "interpret"))
+def fused_update(p, g, u, a_chunk, c, *, beta: float, wd: float,
+                 cast_g_first: bool = False, interpret: bool = False):
+    """Whole-bucket fused optimizer update.
+
+    p, g: flat (n,) in the bucket dtype; u: flat (n,) f32;
+    a_chunk: (n/CHUNK,) f32 per-chunk coefficient; c: scalar.
+    Returns (p_new [p.dtype], u_new [f32], u_sumsq_partials [(n/CHUNK,) f32]).
+    """
+    assert p.ndim == 1 and p.size % TILE == 0, p.shape
+    n_chunks = p.size // CHUNK
+    assert a_chunk.shape == (n_chunks,), a_chunk.shape
+    rows = _tile_rows(n_chunks, interpret)
+    grid = n_chunks // rows
+    tile = pl.BlockSpec((rows, CHUNK), lambda i: (i, 0))
+    ctile = pl.BlockSpec((rows, 1), lambda i: (i, 0))
+    cs = jnp.reshape(c, (1,)).astype(jnp.float32)
+    po, uo, usq = pl.pallas_call(
+        functools.partial(_update_kernel, beta=beta, wd=wd,
+                          cast_g_first=cast_g_first),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  ctile, tile, tile, tile],
+        out_specs=[tile, tile, ctile],
+        out_shape=[jax.ShapeDtypeStruct((n_chunks, CHUNK), p.dtype),
+                   jax.ShapeDtypeStruct((n_chunks, CHUNK), jnp.float32),
+                   jax.ShapeDtypeStruct((n_chunks, 1), jnp.float32)],
+        interpret=interpret,
+    )(cs, a_chunk.reshape(-1, 1), p.reshape(-1, CHUNK),
+      g.reshape(-1, CHUNK), u.reshape(-1, CHUNK))
+    return po.ravel(), uo.ravel(), usq.ravel()

@@ -1,0 +1,35 @@
+"""Backend-dispatching wrappers for the multi-tensor kernels.
+
+On non-TPU backends the kernels run in interpret mode (correctness path);
+``backend="ref"`` bypasses Pallas entirely with the bit-identical jnp
+oracle.  Launch counts are recorded at trace time for the overhead
+benchmark — note the ref backend records zero.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import record_launches
+from repro.kernels.multi_tensor import kernel, ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def chunk_sumsq(x, p=None, *, wd: float = 0.0, backend: str = "pallas"):
+    if backend == "ref":
+        return ref.chunk_sumsq_ref(x, p, wd=wd)
+    record_launches(1)
+    return kernel.chunk_sumsq(x, p, wd=wd, interpret=_interpret())
+
+
+def fused_update(p, g, u, a_chunk, c, *, beta: float, wd: float,
+                 cast_g_first: bool = False, backend: str = "pallas"):
+    if backend == "ref":
+        return ref.fused_update_ref(p, g, u, a_chunk, c, beta=beta, wd=wd,
+                                    cast_g_first=cast_g_first)
+    record_launches(1)
+    return kernel.fused_update(p, g, u, a_chunk, c, beta=beta, wd=wd,
+                               cast_g_first=cast_g_first,
+                               interpret=_interpret())

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the multi-tensor kernels.
+
+Expression-for-expression mirrors of ``kernel.py`` on the same
+(n_chunks, CHUNK) view, so kernel-vs-ref comparisons are bitwise (every
+op is per-row; tiling rows into grid steps cannot change the result).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.multi_tensor.kernel import CHUNK, _decay
+
+
+def chunk_sumsq_ref(x, p=None, *, wd: float = 0.0):
+    x2 = x.reshape(-1, CHUNK)
+    if p is None or wd == 0.0:
+        ge = x2.astype(jnp.float32)
+    else:
+        ge = _decay(x2, p.reshape(-1, CHUNK), wd=wd, cast_g_first=False)
+    return jnp.sum(jnp.square(ge), axis=1)
+
+
+def fused_update_ref(p, g, u, a_chunk, c, *, beta: float, wd: float,
+                     cast_g_first: bool = False):
+    p2 = p.reshape(-1, CHUNK)
+    ge = _decay(g.reshape(-1, CHUNK), p2, wd=wd, cast_g_first=cast_g_first)
+    a = a_chunk.reshape(-1, 1)
+    u_new = beta * u.reshape(-1, CHUNK) + a * ge
+    p_new = (p2 - jnp.asarray(c, jnp.float32) * u_new).astype(p.dtype)
+    usq = jnp.sum(jnp.square(u_new), axis=1)
+    return p_new.ravel(), u_new.ravel(), usq

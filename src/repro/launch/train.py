@@ -44,6 +44,12 @@ def main():
     ap.add_argument("--n-micro", type=int, default=2)
     ap.add_argument("--optimizer", default="sngm",
                     choices=["sngm", "sngd", "msgd", "lars", "lamb"])
+    ap.add_argument("--fused", default="none",
+                    choices=["none", "per_leaf", "multi_tensor"],
+                    help="optimizer execution path: pure jnp (none), one "
+                         "Pallas kernel per tensor (per_leaf), or the "
+                         "dtype-bucketed multi-tensor engine (multi_tensor; "
+                         "O(1) kernel launches per step)")
     ap.add_argument("--lr", type=float, default=1.6)
     ap.add_argument("--beta", type=float, default=0.9)
     ap.add_argument("--weight-decay", type=float, default=1e-4)
@@ -77,12 +83,18 @@ def main():
         params = jax.device_put(params, psh)
         gspecs = param_specs(defs, mesh)
 
-    opt = make_optimizer(args.optimizer,
-                         poly_power(args.lr, args.steps, 1.1),
-                         beta=args.beta, weight_decay=args.weight_decay) \
-        if args.optimizer != "lamb" else \
-        make_optimizer("lamb", poly_power(args.lr, args.steps, 1.1),
-                       weight_decay=args.weight_decay)
+    fused = None if args.fused == "none" else args.fused
+    if args.optimizer == "lamb":
+        if fused:
+            raise SystemExit("--fused is not supported for lamb")
+        opt = make_optimizer("lamb", poly_power(args.lr, args.steps, 1.1),
+                             weight_decay=args.weight_decay)
+    else:
+        kw = dict(beta=args.beta, weight_decay=args.weight_decay, fused=fused)
+        if args.optimizer == "sngd":
+            kw.pop("beta")
+        opt = make_optimizer(args.optimizer,
+                             poly_power(args.lr, args.steps, 1.1), **kw)
     state = opt.init(params)
     step = jax.jit(make_train_step(cfg, rt, opt, n_micro=args.n_micro,
                                    grad_specs=gspecs))

@@ -3,6 +3,14 @@ paper §5 trains B=4096/8192 by accumulating 128-sized micro-batches) +
 any ``repro.core`` optimizer.  The optimizer sees the *accumulated
 global-batch* gradient, so SNGM normalizes once per global batch —
 exactly Algorithm 1.
+
+Fused optimizers (``fused="multi_tensor"``/``"per_leaf"``) slot in here
+unchanged: the accumulator below keeps gradients in the parameter storage
+dtype, which is exactly the per-leaf dtype contract the multi-tensor
+engine buckets by (core/multi_tensor.py), so ``make_train_step`` works
+identically for jnp and fused optimizers — including under pjit, where
+the flat-buffer build is plain jnp and SPMD inserts the one scalar
+all-reduce for the norm.
 """
 from __future__ import annotations
 

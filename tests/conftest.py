@@ -1,8 +1,32 @@
 import os
 import sys
 
+import pytest
+
 # tests see ONE device (the dry-run sets its own 512-device flag in a
 # separate process); keep any user XLA_FLAGS out of the way.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Parametrized cases that individually exceed ~10s on the CI CPU runner.
+# Whole long-running modules carry ``pytestmark = pytest.mark.slow`` instead;
+# this hook catches the heavyweight archs inside otherwise-fast sweeps so the
+# tier-1 lane (``pytest -m "not slow"``) stays well under a minute.
+_SLOW_PARAM_TOKENS = (
+    "jamba-1.5-large-398b",
+    "gemma2-27b",
+    "whisper-large-v3",
+    "deepseek-v2-236b",
+    "deepseek-v2-lite-16b",
+    "chameleon-34b",
+    "mamba2-1.3b",
+    "yi-9b",
+    "512-4-2-64",   # longest flash-attention sweep cases
+)
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if any(tok in item.nodeid for tok in _SLOW_PARAM_TOKENS):
+            item.add_marker(pytest.mark.slow)

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # excluded from the tier-1 fast lane
+
 from repro.configs import ARCHS, smoke_variant
 from repro.models import CPU_RUNTIME, forward, model_defs
 from repro.models.param import materialize

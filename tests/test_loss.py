@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import ARCHS, smoke_variant
 from repro.models import layers
@@ -31,6 +32,7 @@ def _setup(arch="gemma2-27b", B=2, S=32, d=64, V=128):
     return cfg, h, unembed, tokens, mask
 
 
+@pytest.mark.slow
 def test_chunked_matches_naive_value():
     cfg, h, u, t, m = _setup()
     l1, n1 = lm_loss(h, u, t, m, cfg)
@@ -38,6 +40,7 @@ def test_chunked_matches_naive_value():
     np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_chunked_matches_naive_grads():
     cfg, h, u, t, m = _setup()
     g1 = jax.grad(lambda hh, uu: lm_loss(hh, uu, t, m, cfg)[0], argnums=(0, 1))(h, u)

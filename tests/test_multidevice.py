@@ -11,6 +11,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # excluded from the tier-1 fast lane
+
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -109,6 +111,53 @@ MOE_EP_SCRIPT = textwrap.dedent("""
 """)
 
 
+FUSED_OPT_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import sngm
+    from repro.core.schedules import constant
+
+    # a transformer-ish tree: 2D matrices shard over the mesh, 1D stay
+    # replicated — the multi-tensor engine must give the same numbers as
+    # the jnp path when the flat buffers are built from sharded leaves
+    k = jax.random.PRNGKey(0)
+    shapes = {"wq": (256, 128), "wk": (256, 128), "scale": (256,),
+              "emb": (1000, 64), "bias": (7,)}
+    params = {n: jax.random.normal(jax.random.fold_in(k, i), s)
+              for i, (n, s) in enumerate(sorted(shapes.items()))}
+    grads = {n: 3.0 * jax.random.normal(jax.random.fold_in(k, 100 + i), s)
+             for i, (n, s) in enumerate(sorted(shapes.items()))}
+
+    mesh = jax.make_mesh((8,), ("data",))
+    shard = {n: NamedSharding(mesh, P("data") if len(s) == 2 else P())
+             for n, s in shapes.items()}
+    params_s = jax.device_put(params, shard)
+    grads_s = jax.device_put(grads, shard)
+
+    outs = {}
+    for fused in (None, "multi_tensor"):
+        opt = sngm(constant(0.3), beta=0.9, weight_decay=1e-4, fused=fused)
+        state = opt.init(params_s)
+        step = jax.jit(opt.step)
+        p, s = params_s, state
+        for _ in range(2):
+            p, s, stats = step(grads_s, s, p)
+        outs[fused] = (p, s, stats)
+    (p_r, s_r, st_r), (p_m, s_m, st_m) = outs[None], outs["multi_tensor"]
+    for a, b in zip(jax.tree.leaves(p_r), jax.tree.leaves(p_m)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+    for a, b in zip(jax.tree.leaves(s_r.momentum),
+                    jax.tree.leaves(s_m.momentum)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+    np.testing.assert_allclose(float(st_r["grad_norm"]),
+                               float(st_m["grad_norm"]), rtol=1e-6)
+    print("FUSED-SHARDED-OK")
+""")
+
+
 def _run(script):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -126,3 +175,8 @@ def test_distributed_train_step_matches_single_device():
 def test_moe_expert_parallel_matches_oracle():
     r = _run(MOE_EP_SCRIPT)
     assert "MOE-EP-OK" in r.stdout, r.stdout[-2000:] + r.stderr[-3000:]
+
+
+def test_multi_tensor_engine_matches_jnp_on_sharded_params():
+    r = _run(FUSED_OPT_SCRIPT)
+    assert "FUSED-SHARDED-OK" in r.stdout, r.stdout[-2000:] + r.stderr[-3000:]

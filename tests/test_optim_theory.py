@@ -1,8 +1,15 @@
-"""Property-based tests of the paper's theoretical claims (hypothesis)."""
+"""Property-based tests of the paper's theoretical claims (hypothesis).
+
+``hypothesis`` is a declared test extra (``pip install -e .[test]``); on a
+bare environment the whole module skips instead of dying at collection.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import sngm, msgd
 from repro.core.schedules import constant

@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # excluded from the tier-1 fast lane
+
 from repro.configs import ARCHS, smoke_variant
 from repro.models.mamba import ssd_chunked, mamba_block, mamba_defs
 from repro.models.param import materialize

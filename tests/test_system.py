@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # excluded from the tier-1 fast lane
+
 from repro.configs import ARCHS, smoke_variant
 from repro.core import msgd, sngm
 from repro.core.schedules import poly_power
