@@ -11,7 +11,10 @@ Three things per optimizer:
 
 Plus the HBM-traffic model for the fused update vs the unfused XLA
 lowering (the kernel's win is bandwidth, which CPU wall-time cannot
-show — we report both).
+show — we report both), and the flat-buffer packing count: the
+flat-buffer-resident state (FlatOptState) must pack only gradient-sized
+buffers per steady-state step, ~1/3 of the per-step path's
+params+grads+momentum re-pack on an fp32 tree.
 
 CLI:  python -m benchmarks.bench_optimizer_overhead [--quick] [--json OUT]
 ``--quick`` shrinks the tree and iteration counts for the CI smoke lane;
@@ -28,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row
-from repro.core import lars, lamb, msgd, sngd, sngm
+from repro.core import count_packed_bytes, lars, lamb, msgd, sngd, sngm, to_pytree
 from repro.core.schedules import constant
 from repro.kernels import count_pallas_launches
 
@@ -60,6 +63,16 @@ def launches_per_step(opt, grads, state, params):
         # therefore skip the trace-time launch recording)
         jax.jit(lambda g, s, p: opt.step(g, s, p)).lower(grads, state, params)
     return c["launches"]
+
+
+def packed_bytes_per_step(opt, grads, state, params):
+    """Bytes packed into flat buffers per step execution (trace-time
+    count, same pattern as launches_per_step).  The flat-buffer-resident
+    state (FlatOptState) packs only the gradients; an OptState forces the
+    per-step path that re-packs params+grads+momentum every step."""
+    with count_packed_bytes() as c:
+        jax.jit(lambda g, s, p: opt.step(g, s, p)).lower(grads, state, params)
+    return c["bytes"]
 
 
 def run(quick: bool = False, json_path: str | None = None):
@@ -115,6 +128,25 @@ def run(quick: bool = False, json_path: str | None = None):
                         us_pl / max(us_mt, 1e-9), summary))
     print(f"  {summary}")
 
+    # --- flat-buffer packing: resident (FlatOptState) vs per-step -------
+    # the resident path flattens only the gradients each step; the
+    # per-step path (OptState into the fused step) re-packs p+g+u.  On an
+    # all-fp32 tree the ratio is exactly 1/3.
+    opt_mt = sngm(constant(0.1), beta=0.9, weight_decay=1e-4,
+                  fused="multi_tensor")
+    state_res = opt_mt.init(params)              # FlatOptState, resident
+    state_tree = to_pytree(state_res)            # OptState, per-step path
+    b_res = packed_bytes_per_step(opt_mt, grads, state_res, params)
+    b_per = packed_bytes_per_step(opt_mt, grads, state_tree, params)
+    # no assert here: the JSON must be able to RECORD a regression — CI's
+    # bench-smoke step reads packed_bytes_per_step and enforces the bound
+    rows.append(csv_row("sngm_packed_bytes_per_step_resident", b_res,
+                        "FlatOptState: gradients only"))
+    rows.append(csv_row("sngm_packed_bytes_per_step_per_step", b_per,
+                        "OptState: params+grads+momentum"))
+    print(f"  flat-buffer packing: resident {b_res} B/step vs per-step "
+          f"{b_per} B/step ({b_res / b_per:.2f}x)")
+
     # HBM-traffic model (bytes/param): naive = read g,u,p + write u,p each
     # pass of {decay, scale+momentum, apply} vs fused single pass
     naive = (3 + 2) * 4 * 2.2   # measured XLA lowering ~2.2 passes equivalent
@@ -127,6 +159,9 @@ def run(quick: bool = False, json_path: str | None = None):
     out = {"rows": rows, "n_params": n_params, "n_leaves": n_leaves,
            "launches_per_step": {"per_leaf": l_pl, "multi_tensor": l_mt},
            "us_per_step": {"per_leaf": us_pl, "multi_tensor": us_mt},
+           "packed_bytes_per_step": {"resident": int(b_res),
+                                     "per_step": int(b_per),
+                                     "ratio": b_res / b_per},
            "quick": quick}
     if json_path:
         with open(json_path, "w") as f:

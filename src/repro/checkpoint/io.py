@@ -1,6 +1,17 @@
 """Sharding-aware checkpointing: each host saves its addressable shards to
 an .npz (path-keyed); restore re-places shards onto the current mesh.
 Single-host CPU runs degenerate to a plain full save/restore.
+
+Dtype fidelity: ``np.savez`` silently stores extension dtypes (bfloat16,
+float8_*) as raw void records (``|V2``), which ``jnp.asarray`` then
+rejects.  We therefore save such arrays as a same-width unsigned-int VIEW
+and record the true dtype of EVERY leaf in a per-key ``dtypes`` map in
+``meta.json`` (the sidecar); restore views the bits back and finally
+casts every leaf to the dtype of the ``like`` template, so a checkpoint
+round-trip is bit-exact in both values and dtypes while old/drifted
+checkpoints still load.  Works for any state form — plain param trees,
+``OptState`` pytrees, or flat-buffer-resident ``FlatOptState`` (whose
+static ``TreeLayout`` is pytree aux data and never touches disk).
 """
 from __future__ import annotations
 
@@ -19,26 +30,76 @@ def _flatten(tree):
             for path, leaf in leaves}
 
 
+def _np_savable(dt: np.dtype) -> bool:
+    """The .npy format round-trips only dtypes its descr strings can
+    express; extension dtypes (bfloat16, float8_*) degrade to void
+    records ('<V2') even though numpy can name them, so check the
+    descriptor round-trip, not the dtype constructor."""
+    import warnings
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            descr = np.lib.format.dtype_to_descr(dt)
+            return np.lib.format.descr_to_dtype(descr) == dt
+    except Exception:
+        return False
+
+
+def _dtype_by_name(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # jax dependency; owns bfloat16/float8_* dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
 def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
     os.makedirs(path, exist_ok=True)
     flat = _flatten(tree)
-    arrays = {}
+    arrays, dtypes = {}, {}
     for k, v in flat.items():
-        arrays[k] = np.asarray(jax.device_get(v))
+        a = np.asarray(jax.device_get(v))
+        dtypes[k] = a.dtype.name
+        if not _np_savable(a.dtype):
+            a = a.view(f"uint{8 * a.dtype.itemsize}")
+        arrays[k] = a
     np.savez(os.path.join(path, f"shard_{jax.process_index():05d}.npz"),
              **arrays)
     with open(os.path.join(path, "meta.json"), "w") as f:
-        json.dump({"step": step, "n_leaves": len(arrays)}, f)
+        json.dump({"step": step, "n_leaves": len(arrays), "format": 2,
+                   "dtypes": dtypes}, f)
 
 
 def load_checkpoint(path: str, like: Any, shardings: Optional[Any] = None):
     """Restore into the structure of ``like`` (params/state pytree or
-    abstract tree); optionally re-place onto ``shardings``."""
+    abstract tree); optionally re-place onto ``shardings``.  Every
+    restored leaf takes the DTYPE OF ``like`` — the sidecar recovers the
+    stored bits exactly, then a cast (no-op when dtypes already agree)
+    shields against checkpoints written at a different precision."""
     data = np.load(os.path.join(path, f"shard_{jax.process_index():05d}.npz"))
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    dtypes = meta.get("dtypes", {})
     flat_like = _flatten(like)
     restored = {}
-    for k in flat_like:
-        restored[k] = jnp.asarray(data[k])
+    for k, leaf in flat_like.items():
+        a = data[k]
+        stored = dtypes.get(k)
+        if stored is not None and a.dtype.name != stored:
+            a = a.view(_dtype_by_name(stored))
+        want = np.dtype(leaf.dtype)
+        if a.dtype.kind == "V":
+            # pre-sidecar checkpoint of an extension dtype: the bits are
+            # intact, only the dtype tag was lost — recover it from `like`
+            if a.dtype.itemsize != want.itemsize:
+                raise TypeError(
+                    f"checkpoint leaf {k!r} has raw dtype {a.dtype} with no "
+                    f"dtype sidecar and does not match like dtype {want}")
+            a = a.view(want)
+        arr = jnp.asarray(a)
+        if arr.dtype != want:
+            arr = arr.astype(want)
+        restored[k] = arr
     leaves_paths = jax.tree_util.tree_flatten_with_path(like)[0]
     treedef = jax.tree_util.tree_structure(like)
     ordered = ["/".join(str(getattr(p, "key", p)) for p in path)
@@ -46,6 +107,4 @@ def load_checkpoint(path: str, like: Any, shardings: Optional[Any] = None):
     out = jax.tree_util.tree_unflatten(treedef, [restored[k] for k in ordered])
     if shardings is not None:
         out = jax.device_put(out, shardings)
-    with open(os.path.join(path, "meta.json")) as f:
-        step = json.load(f)["step"]
-    return out, step
+    return out, meta["step"]

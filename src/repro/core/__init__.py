@@ -3,15 +3,18 @@ optimizer family, schedules, distributed-norm utilities, and the
 multi-tensor fused optimizer engine."""
 from repro.core.optim import (
     Optimizer, OptState, sngm, sngd, msgd, lars, lamb, make_optimizer,
-    global_norm, tree_squared_norm,
+    global_norm, tree_squared_norm, to_pytree, from_pytree,
 )
 from repro.core.multi_tensor import (
-    TreeLayout, build_layout, flatten, unflatten, leaf_sumsq,
-    multi_tensor_step,
+    FlatOptState, TreeLayout, build_layout, count_packed_bytes, flatten,
+    unflatten, init_flat_state, leaf_sumsq, multi_tensor_step,
+    multi_tensor_step_flat,
 )
 from repro.core import schedules
 
 __all__ = ["Optimizer", "OptState", "sngm", "sngd", "msgd", "lars", "lamb",
            "make_optimizer", "global_norm", "tree_squared_norm", "schedules",
-           "TreeLayout", "build_layout", "flatten", "unflatten",
-           "leaf_sumsq", "multi_tensor_step"]
+           "to_pytree", "from_pytree",
+           "FlatOptState", "TreeLayout", "build_layout", "count_packed_bytes",
+           "flatten", "unflatten", "init_flat_state", "leaf_sumsq",
+           "multi_tensor_step", "multi_tensor_step_flat"]

@@ -21,12 +21,24 @@ Sharding: buffers are built with plain jnp ops (pad/concatenate), so
 under pjit the engine is SPMD-correct — each shard builds its local
 buffer view and the norm finishes with the scalar all-reduce XLA inserts,
 which is exactly the one-collective-per-step property that makes SNGM
-cheap to distribute (paper §5).  Buffers are rebuilt each step from the
-leaf pytrees; persisting optimizer state in flat form across steps is a
-further bandwidth win tracked in ROADMAP.md.
+cheap to distribute (paper §5).
+
+Flat-buffer residency: ``multi_tensor_step`` rebuilds all three buffer
+sets (params/grads/momentum) from the leaf pytrees every step.
+``FlatOptState`` + ``multi_tensor_step_flat`` instead keep params and
+momentum *resident* as flat buffers across steps, so steady state packs
+only the gradients — 1/3 of the per-step packing traffic on an fp32 tree
+(measured via ``count_packed_bytes``).  The pytree view is materialized
+only where leaves are actually needed: ``loss_fn``, logging, and
+checkpointing.  Both paths are bit-identical: segment padding is zero at
+init and every kernel pass maps zero pads to zero pads (g-pad is always
+zero because gradients are re-flattened with zero padding each step), so
+a resident buffer is exactly what re-flattening its pytree view would
+produce.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, List, Optional, Sequence, Tuple
 
@@ -37,6 +49,41 @@ from repro.kernels.multi_tensor.kernel import CHUNK, TILE
 from repro.kernels.multi_tensor import ops as _ops
 
 PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# packing accounting (the resident path's reason to exist)
+# ---------------------------------------------------------------------------
+
+_PACKED = {"bytes": 0, "buffers": 0}
+
+
+def _record_packed(flats: Sequence[jnp.ndarray]) -> None:
+    """Called by ``flatten`` once per call, at TRACE time under jit — so
+    tracing one optimizer step inside ``count_packed_bytes`` reports the
+    bytes that step packs into flat buffers per execution."""
+    for f in flats:
+        _PACKED["bytes"] += f.size * jnp.dtype(f.dtype).itemsize
+        _PACKED["buffers"] += 1
+
+
+@contextlib.contextmanager
+def count_packed_bytes():
+    """Count bytes packed into flat buffers inside the block.
+
+        with count_packed_bytes() as c:
+            jax.jit(opt.step).lower(grads, state, params)
+        print(c["bytes"])   # buffer bytes packed per executed step
+
+    The resident path (FlatOptState) packs only the gradients; the
+    per-step path re-packs params+grads+momentum every step."""
+    start = dict(_PACKED)
+    box = {"bytes": 0, "buffers": 0}
+    try:
+        yield box
+    finally:
+        box["bytes"] = _PACKED["bytes"] - start["bytes"]
+        box["buffers"] = _PACKED["buffers"] - start["buffers"]
 
 
 # ---------------------------------------------------------------------------
@@ -154,6 +201,7 @@ def flatten(tree: PyTree, layout: TreeLayout,
             pieces.append(jnp.zeros((b.n_elems - off,), dt))
         flats.append(jnp.concatenate(pieces) if len(pieces) > 1
                      else pieces[0])
+    _record_packed(flats)
     return flats
 
 
@@ -190,6 +238,77 @@ def _per_chunk(bucket: Bucket, seg_vals: Sequence[jnp.ndarray],
 
 
 # ---------------------------------------------------------------------------
+# flat-buffer-resident optimizer state
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass(frozen=True)
+class FlatOptState:
+    """Optimizer state kept resident in the engine's flat-buffer form.
+
+    ``p_flats`` hold the parameters in their bucket (storage) dtype and
+    ``u_flats`` the momentum in f32, one buffer per layout bucket; the
+    ``layout`` rides along as static pytree aux data, so a jitted step
+    never rebuilds or re-packs it.  The resident buffers are authoritative:
+    materialize pytree views via ``.params`` / ``.momentum`` only for
+    ``loss_fn``, logging, and checkpointing.
+    """
+    step: jnp.ndarray                    # scalar int32
+    p_flats: Tuple[jnp.ndarray, ...]
+    u_flats: Tuple[jnp.ndarray, ...]
+    layout: TreeLayout
+
+    def tree_flatten_with_keys(self):
+        G = jax.tree_util.GetAttrKey
+        return (((G("step"), self.step),
+                 (G("p_flats"), tuple(self.p_flats)),
+                 (G("u_flats"), tuple(self.u_flats))), self.layout)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        step, p_flats, u_flats = children
+        return cls(step=step, p_flats=tuple(p_flats),
+                   u_flats=tuple(u_flats), layout=aux)
+
+    @property
+    def params(self) -> PyTree:
+        return unflatten(self.p_flats, self.layout)
+
+    @property
+    def momentum(self) -> PyTree:
+        return unflatten(self.u_flats, self.layout, keep_dtype=True)
+
+
+def init_flat_state(params: PyTree) -> FlatOptState:
+    """Build the resident state: params packed once, momentum zeros (f32)."""
+    layout = build_layout(params)
+    return FlatOptState(
+        step=jnp.zeros((), jnp.int32),
+        p_flats=tuple(flatten(params, layout)),
+        u_flats=tuple(jnp.zeros((b.n_elems,), jnp.float32)
+                      for b in layout.buckets),
+        layout=layout)
+
+
+def check_grad_dtypes(grads: PyTree, layout: TreeLayout) -> None:
+    """The engine buckets by PARAM dtype, so gradients must match their
+    parameter's dtype leaf-for-leaf (what training/step.py's accumulator
+    produces).  A silent cast here (e.g. fp32 grads over bf16 params)
+    would quietly diverge from the jnp path's promote-to-f32 semantics."""
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert len(leaves) == layout.n_leaves, (len(leaves), layout.n_leaves)
+    for b in layout.buckets:
+        for s in b.segments:
+            if leaves[s.index].dtype != s.dtype:
+                raise ValueError(
+                    f"multi_tensor fused path requires grads to match the "
+                    f"parameter dtype per leaf; got grad "
+                    f"{leaves[s.index].dtype} for param {s.dtype}. Cast the "
+                    f"gradients (or use the jnp path, fused=None, which "
+                    f"promotes to f32).")
+
+
+# ---------------------------------------------------------------------------
 # the engine step
 # ---------------------------------------------------------------------------
 
@@ -201,32 +320,45 @@ def multi_tensor_step(kind: str, params: PyTree, grads: PyTree,
                       weight_decay: float = 0.0, eps: float = 1e-12,
                       trust: float = 0.001,
                       backend: str = "pallas") -> Tuple[PyTree, PyTree, dict]:
-    """One fused optimizer step over the whole tree.
+    """One fused optimizer step over the whole tree (pytree in/out).
 
-    Returns (new_params, new_momentum, stats) with the same stats keys as
-    the jnp paths in ``core.optim`` ({grad_norm, lr, update_norm}), all
-    bit-identical to them.  ``backend``: "pallas" (interpret mode off-TPU)
-    or "ref" (pure-jnp oracle, zero kernel launches).
+    Packs params+grads+momentum into flat buffers, runs the flat engine
+    core, and unpacks the results.  Returns (new_params, new_momentum,
+    stats) with the same stats keys as the jnp paths in ``core.optim``
+    ({grad_norm, lr, update_norm}), all bit-identical to them.
+    ``backend``: "pallas" (interpret mode off-TPU) or "ref" (pure-jnp
+    oracle, zero kernel launches).  Steady-state training should prefer
+    the resident form (``FlatOptState`` + ``multi_tensor_step_flat``),
+    which packs only the gradients.
+    """
+    layout = build_layout(params)
+    check_grad_dtypes(grads, layout)
+    p_flats = flatten(params, layout)
+    g_flats = flatten(grads, layout)
+    u_flats = flatten(momentum, layout, cast_to=jnp.float32)
+    po_flats, uo_flats, stats = multi_tensor_step_flat(
+        kind, layout, p_flats, g_flats, u_flats, lr=lr, beta=beta,
+        weight_decay=weight_decay, eps=eps, trust=trust, backend=backend)
+    return (unflatten(po_flats, layout),
+            unflatten(uo_flats, layout, keep_dtype=True), stats)
+
+
+def multi_tensor_step_flat(kind: str, layout: TreeLayout,
+                           p_flats: Sequence[jnp.ndarray],
+                           g_flats: Sequence[jnp.ndarray],
+                           u_flats: Sequence[jnp.ndarray], *, lr, beta: float,
+                           weight_decay: float = 0.0, eps: float = 1e-12,
+                           trust: float = 0.001, backend: str = "pallas"
+                           ) -> Tuple[List[jnp.ndarray], List[jnp.ndarray],
+                                      dict]:
+    """The engine core: flat-in/flat-out, one (p, g, u) buffer triple per
+    layout bucket.  Returns (new_p_flats, new_u_flats, stats) without ever
+    materializing a pytree — the resident path calls this with the buffers
+    held in ``FlatOptState`` and only the gradients freshly packed.
     """
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
     wd = float(weight_decay)
-    layout = build_layout(params)
-    # The engine buckets by PARAM dtype, so gradients must match their
-    # parameter's dtype leaf-for-leaf (what training/step.py's accumulator
-    # produces).  A silent cast here (e.g. fp32 grads over bf16 params)
-    # would quietly diverge from the jnp path's promote-to-f32 semantics.
-    for p_leaf, g_leaf in zip(jax.tree_util.tree_leaves(params),
-                              jax.tree_util.tree_leaves(grads)):
-        if g_leaf.dtype != p_leaf.dtype:
-            raise ValueError(
-                f"multi_tensor fused path requires grads to match the "
-                f"parameter dtype per leaf; got grad {g_leaf.dtype} for "
-                f"param {p_leaf.dtype}. Cast the gradients (or use the "
-                f"jnp path, fused=None, which promotes to f32).")
-    p_flats = flatten(params, layout)
-    g_flats = flatten(grads, layout)
-    u_flats = flatten(momentum, layout, cast_to=jnp.float32)
 
     # ---- pass 1: squared-norm partials per bucket -------------------------
     # sngm/msgd norm the coupled-decayed gradient (g + wd*w, computed inside
@@ -294,8 +426,6 @@ def multi_tensor_step(kind: str, params: PyTree, grads: PyTree,
         for s, v in zip(b.segments, _segment_sums(usq, b)):
             usq_by_leaf[s.index] = v
 
-    new_params = unflatten(po_flats, layout)
-    new_momentum = unflatten(uo_flats, layout, keep_dtype=True)
     stats = {"grad_norm": gnorm, "lr": lr,
              "update_norm": jnp.sqrt(sum(usq_by_leaf))}
-    return new_params, new_momentum, stats
+    return po_flats, uo_flats, stats

@@ -25,17 +25,34 @@ Fused execution: ``sngm``/``msgd``/``lars`` accept ``fused=``
 
 ``use_pallas=True`` is the legacy spelling and now routes to
 ``"multi_tensor"`` when ``fused`` is not given.
+
+State forms: with ``fused="multi_tensor"``, ``opt.init(params)`` returns
+a ``FlatOptState`` — params and momentum resident as dtype-bucketed flat
+buffers plus the cached ``TreeLayout`` — so steady-state steps pack only
+the gradients (1/3 of the per-step packing traffic on an fp32 tree).
+``opt.step`` dispatches on the state type and accepts EITHER form from
+ANY execution path: a ``FlatOptState`` fed to the jnp path materializes
+its pytree view, and an ``OptState`` fed to the fused path takes the
+per-step flatten route.  ``to_pytree`` / ``from_pytree`` interconvert
+losslessly (e.g. around checkpoints saved in the other form).
+
+With a resident state, ``opt.step``'s ``params`` argument is only a
+convenience view: the authoritative parameter values are
+``state.p_flats`` (the two agree by construction when params come from
+the previous step's output, as in ``make_train_step``).
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.multi_tensor import leaf_sumsq, multi_tensor_step
+from repro.core.multi_tensor import (
+    FlatOptState, build_layout, check_grad_dtypes, flatten, init_flat_state,
+    leaf_sumsq, multi_tensor_step, multi_tensor_step_flat, unflatten)
 from repro.core.schedules import Schedule, constant
 
 PyTree = Any
@@ -78,16 +95,63 @@ class OptState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class Optimizer:
-    """init/step pair.  ``step`` returns (new_params, new_state, stats)."""
+    """init/step pair.  ``step`` returns (new_params, new_state, stats).
+    The state is an ``OptState`` pytree or, for ``fused="multi_tensor"``,
+    a flat-buffer-resident ``FlatOptState``; ``step`` accepts either."""
     name: str
-    init: Callable[[PyTree], OptState]
-    step: Callable[[PyTree, OptState, PyTree], Tuple[PyTree, OptState, dict]]
+    init: Callable[[PyTree], Any]
+    step: Callable[[PyTree, Any, PyTree], Tuple[PyTree, Any, dict]]
 
 
 def _init(params: PyTree) -> OptState:
     # momentum is always fp32, independent of parameter storage dtype
     mom = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
     return OptState(step=jnp.zeros((), jnp.int32), momentum=mom)
+
+
+AnyOptState = Union[OptState, FlatOptState]
+
+
+def to_pytree(state: AnyOptState) -> OptState:
+    """FlatOptState -> OptState (pytree momentum), lossless; OptState
+    passes through.  Use to hand a resident state to code that expects
+    per-leaf momentum (old checkpoints, external tooling)."""
+    if isinstance(state, OptState):
+        return state
+    return OptState(step=state.step, momentum=state.momentum)
+
+
+def from_pytree(state: AnyOptState, params: PyTree) -> FlatOptState:
+    """OptState -> FlatOptState (flat-buffer-resident), lossless;
+    FlatOptState passes through.  ``params`` supplies the layout and the
+    resident parameter buffers."""
+    if isinstance(state, FlatOptState):
+        return state
+    layout = build_layout(params)
+    return FlatOptState(
+        step=state.step,
+        p_flats=tuple(flatten(params, layout)),
+        u_flats=tuple(flatten(state.momentum, layout,
+                              cast_to=jnp.float32)),
+        layout=layout)
+
+
+def _flat_step(kind: str, grads: PyTree, state: FlatOptState, *, lr,
+               beta: float, weight_decay: float = 0.0, eps: float = 1e-12,
+               trust: float = 0.001):
+    """The resident fast path: flatten ONLY the gradients; params and
+    momentum stay in the buffers carried by ``state``."""
+    layout = state.layout
+    check_grad_dtypes(grads, layout)
+    g_flats = flatten(grads, layout)
+    po, uo, stats = multi_tensor_step_flat(
+        kind, layout, state.p_flats, g_flats, state.u_flats, lr=lr,
+        beta=beta, weight_decay=weight_decay, eps=eps, trust=trust)
+    new_state = FlatOptState(step=state.step + 1, p_flats=tuple(po),
+                             u_flats=tuple(uo), layout=layout)
+    # pytree view for loss_fn/logging; bit-equal to what the per-step
+    # path returns (buffer padding is invariantly zero, see multi_tensor)
+    return unflatten(po, layout), new_state, stats
 
 
 def _decayed(grads: PyTree, params: PyTree, weight_decay: float) -> PyTree:
@@ -143,6 +207,9 @@ def sngm(schedule: Schedule,
         if fused_mode == "multi_tensor":
             kind = ("sngm_global" if norm_mode == "global"
                     else "sngm_per_tensor")
+            if isinstance(state, FlatOptState):
+                return _flat_step(kind, grads, state, lr=lr, beta=beta,
+                                  weight_decay=weight_decay, eps=eps)
             new_p, new_u, stats = multi_tensor_step(
                 kind, params, grads, state.momentum, lr=lr, beta=beta,
                 weight_decay=weight_decay, eps=eps)
@@ -175,7 +242,8 @@ def sngm(schedule: Schedule,
                  "update_norm": global_norm(new_u)}
         return new_p, OptState(state.step + 1, new_u), stats
 
-    return Optimizer(f"sngm[{norm_mode}]", _init, step_fn)
+    init = init_flat_state if fused_mode == "multi_tensor" else _init
+    return Optimizer(f"sngm[{norm_mode}]", init, step_fn)
 
 
 def sngd(schedule: Schedule, weight_decay: float = 0.0, **kw) -> Optimizer:
@@ -200,6 +268,9 @@ def msgd(schedule: Schedule,
     def step_fn(grads, state, params):
         lr = schedule(state.step)
         if fused_mode == "multi_tensor":
+            if isinstance(state, FlatOptState):
+                return _flat_step("msgd", grads, state, lr=lr, beta=beta,
+                                  weight_decay=weight_decay)
             new_p, new_v, stats = multi_tensor_step(
                 "msgd", params, grads, state.momentum, lr=lr, beta=beta,
                 weight_decay=weight_decay)
@@ -214,7 +285,8 @@ def msgd(schedule: Schedule,
                  "update_norm": global_norm(new_v)}
         return new_p, OptState(state.step + 1, new_v), stats
 
-    return Optimizer("msgd", _init, step_fn)
+    init = init_flat_state if fused_mode == "multi_tensor" else _init
+    return Optimizer("msgd", init, step_fn)
 
 
 # ---------------------------------------------------------------------------
@@ -240,6 +312,10 @@ def lars(schedule: Schedule,
     def step_fn(grads, state, params):
         lr = schedule(state.step)
         if fused_mode == "multi_tensor":
+            if isinstance(state, FlatOptState):
+                return _flat_step("lars", grads, state, lr=lr, beta=beta,
+                                  weight_decay=weight_decay, eps=eps,
+                                  trust=trust)
             new_p, new_v, stats = multi_tensor_step(
                 "lars", params, grads, state.momentum, lr=lr, beta=beta,
                 weight_decay=weight_decay, eps=eps, trust=trust)
@@ -275,7 +351,8 @@ def lars(schedule: Schedule,
                  "update_norm": global_norm(new_v)}
         return new_p, OptState(state.step + 1, new_v), stats
 
-    return Optimizer("lars", _init, step_fn)
+    init = init_flat_state if fused_mode == "multi_tensor" else _init
+    return Optimizer("lars", init, step_fn)
 
 
 # ---------------------------------------------------------------------------

@@ -8,21 +8,29 @@ compile-only mode.
 
     PYTHONPATH=src python -m repro.launch.train --arch yi-9b \
         --steps 50 --batch 8 --seq 128 --reduced
+
+Checkpoint/resume: ``--ckpt DIR`` saves {"params", "opt"} at the end;
+``--resume`` restores from DIR (either optimizer state form — OptState
+pytree or flat-buffer-resident FlatOptState) and continues from the
+saved step, with ``--total-steps`` pinning the schedule horizon across
+the save/resume split (README: "Checkpoint format and resume").
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs import ARCHS, get_config, smoke_variant
 from repro.core import make_optimizer
-from repro.core.optim import OptState
+from repro.core.optim import FlatOptState, OptState, from_pytree, to_pytree
 from repro.core.schedules import poly_power
 from repro.data import SyntheticLM
 from repro.launch.mesh import data_axes_of
@@ -33,7 +41,28 @@ from repro.sharding import batch_spec, param_shardings, param_specs
 from repro.training import make_train_step
 
 
-def main():
+def _restore(path: str, params, state):
+    """Restore {"params", "opt"} regardless of which STATE FORM the
+    checkpoint holds (OptState pytree vs flat-buffer-resident
+    FlatOptState): detect the saved form from the archive's key set, load
+    via a matching template, and convert to the live form with
+    to_pytree/from_pytree (both lossless)."""
+    import os
+
+    import numpy as np
+    shard = os.path.join(path, f"shard_{jax.process_index():05d}.npz")
+    saved_flat = any("p_flats" in k for k in np.load(shard).files)
+    want_flat = isinstance(state, FlatOptState)
+    if saved_flat == want_flat:
+        return load_checkpoint(path, {"params": params, "opt": state})
+    alt = to_pytree(state) if want_flat else from_pytree(state, params)
+    restored, step = load_checkpoint(path, {"params": params, "opt": alt})
+    opt_state = (from_pytree(restored["opt"], restored["params"])
+                 if want_flat else to_pytree(restored["opt"]))
+    return {"params": restored["params"], "opt": opt_state}, step
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-9b", choices=sorted(ARCHS))
     ap.add_argument("--reduced", action="store_true",
@@ -57,8 +86,16 @@ def main():
                     help="data-mesh size (0 = all devices)")
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--ckpt", default="")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore {params, opt} from --ckpt (either state "
+                         "form) and continue from the saved step, so the "
+                         "schedule picks up at the right t")
+    ap.add_argument("--total-steps", type=int, default=0,
+                    help="schedule horizon (0 = --steps); set this when a "
+                         "run is split across save/resume segments so every "
+                         "segment builds the same poly_power schedule")
     ap.add_argument("--log-every", type=int, default=10)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -84,38 +121,99 @@ def main():
         gspecs = param_specs(defs, mesh)
 
     fused = None if args.fused == "none" else args.fused
+    horizon = args.total_steps or args.steps
+    if args.resume and args.ckpt:
+        # the schedule horizon is part of the run's identity: adopt the
+        # saved one when --total-steps is omitted, warn on a mismatch —
+        # otherwise poly_power silently decays on a different horizon and
+        # the resumed lr diverges from the uninterrupted run
+        tm_path = os.path.join(args.ckpt, "train_meta.json")
+        if os.path.exists(tm_path):
+            with open(tm_path) as f:
+                saved_horizon = json.load(f).get("total_steps")
+            if saved_horizon:
+                if not args.total_steps:
+                    horizon = saved_horizon
+                elif saved_horizon != horizon:
+                    print(f"[train] WARNING: --total-steps {horizon} != "
+                          f"checkpoint horizon {saved_horizon}; the lr "
+                          f"schedule will not match the original run")
     if args.optimizer == "lamb":
         if fused:
             raise SystemExit("--fused is not supported for lamb")
-        opt = make_optimizer("lamb", poly_power(args.lr, args.steps, 1.1),
+        opt = make_optimizer("lamb", poly_power(args.lr, horizon, 1.1),
                              weight_decay=args.weight_decay)
     else:
         kw = dict(beta=args.beta, weight_decay=args.weight_decay, fused=fused)
         if args.optimizer == "sngd":
             kw.pop("beta")
         opt = make_optimizer(args.optimizer,
-                             poly_power(args.lr, args.steps, 1.1), **kw)
+                             poly_power(args.lr, horizon, 1.1), **kw)
     state = opt.init(params)
+    start = 0
+    if args.resume:
+        if not args.ckpt:
+            raise SystemExit("--resume requires --ckpt")
+        if args.optimizer == "lamb":
+            restored, start = load_checkpoint(args.ckpt,
+                                              {"params": params, "opt": state})
+        else:
+            restored, start = _restore(args.ckpt, params, state)
+        params, state = restored["params"], restored["opt"]
+        if mesh is not None:
+            # re-place onto the mesh: load_checkpoint materialized every
+            # leaf on the default device.  Resident flat buffers are
+            # rebuilt FROM the sharded leaves (bitwise-identical values,
+            # same placement as an unresumed opt.init).
+            params = jax.device_put(params, psh)
+            if isinstance(state, FlatOptState):
+                state = from_pytree(
+                    OptState(state.step, state.momentum), params)
+            elif isinstance(state, OptState):
+                state = OptState(state.step,
+                                 jax.device_put(state.momentum, psh))
+            else:  # LambState: m and v both mirror the param tree
+                state = type(state)(state.step,
+                                    jax.device_put(state.m, psh),
+                                    jax.device_put(state.v, psh))
+        print(f"[train] resumed {args.ckpt} at step {start}")
     step = jax.jit(make_train_step(cfg, rt, opt, n_micro=args.n_micro,
                                    grad_specs=gspecs))
     data = SyntheticLM(cfg.vocab_size, args.seq, args.batch, branching=4)
 
     t0 = time.time()
-    for t in range(args.steps):
+    losses, pending = [], []
+    for t in range(start, args.steps):
         batch = data.batch_at(t)
         if cfg.is_encoder_decoder:
             batch["encoder_embeds"] = jax.random.normal(
                 jax.random.PRNGKey(t), (args.batch, cfg.encoder_len, cfg.d_model))
         params, state, stats = step(params, state, batch)
+        # keep the device scalar: float() every step would block and
+        # serialize dispatch.  Drain at log boundaries (which sync anyway)
+        # so retained device buffers stay bounded by --log-every.
+        pending.append(stats["loss"])
         if t % args.log_every == 0 or t == args.steps - 1:
-            print(f"  step {t:5d} loss={float(stats['loss']):.4f} "
+            losses.extend(float(l) for l in pending)
+            pending.clear()
+            print(f"  step {t:5d} loss={losses[-1]:.4f} "
                   f"||g||={float(stats['grad_norm']):.3f} "
                   f"lr={float(stats['lr']):.4f} "
-                  f"({(t+1)/(time.time()-t0):.2f} it/s)")
+                  f"({(t-start+1)/(time.time()-t0):.2f} it/s)")
+    losses.extend(float(l) for l in pending)
     if args.ckpt:
-        save_checkpoint(args.ckpt, {"params": params, "opt": state},
-                        step=args.steps)
+        # FlatOptState holds the params a second time (bit-equal by the
+        # padding invariant), so persist the pytree form — halves the
+        # checkpoint; --resume rebuilds the resident buffers losslessly
+        save_state = to_pytree(state) if isinstance(state, FlatOptState) \
+            else state
+        save_checkpoint(args.ckpt, {"params": params, "opt": save_state},
+                        step=max(start, args.steps))
+        with open(os.path.join(args.ckpt, "train_meta.json"), "w") as f:
+            json.dump({"total_steps": horizon, "optimizer": args.optimizer,
+                       "lr": args.lr}, f)
         print(f"[train] checkpoint -> {args.ckpt}")
+    return losses
 
 
 if __name__ == "__main__":

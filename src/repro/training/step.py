@@ -10,7 +10,10 @@ dtype, which is exactly the per-leaf dtype contract the multi-tensor
 engine buckets by (core/multi_tensor.py), so ``make_train_step`` works
 identically for jnp and fused optimizers — including under pjit, where
 the flat-buffer build is plain jnp and SPMD inserts the one scalar
-all-reduce for the norm.
+all-reduce for the norm.  The optimizer state threads through opaquely,
+so the flat-buffer-resident ``FlatOptState`` works here too: ``opt.step``
+consumes its resident buffers and hands back the pytree param view this
+step feeds to ``loss_fn`` (the two are bit-equal by construction).
 """
 from __future__ import annotations
 
@@ -44,6 +47,17 @@ def loss_fn(params, batch: Dict[str, Any], cfg: ModelConfig, rt: Runtime):
     return loss + aux, {"ce_loss": loss, "aux_loss": aux, "ntok": ntok}
 
 
+# How loss_fn's aux metrics combine across micro-batches, so logged stats
+# keep their global-batch semantics at any n_micro.  COUNT_METRICS sum to
+# the global total; TOKEN_WEIGHTED_METRICS are per-token means and combine
+# weighted by ntok (an unweighted mean of per-micro means diverges when
+# loss_mask density is ragged across micro-batches); everything else is a
+# plain mean.  Extend these when adding a metric to loss_fn, or it will
+# be silently averaged under gradient accumulation.
+COUNT_METRICS = ("ntok",)
+TOKEN_WEIGHTED_METRICS = ("ce_loss",)
+
+
 def make_train_step(cfg: ModelConfig, rt: Runtime, opt: Optimizer,
                     n_micro: int = 1, grad_specs=None):
     """Returns train_step(params, opt_state, batch) -> (params', state', stats).
@@ -75,26 +89,37 @@ def make_train_step(cfg: ModelConfig, rt: Runtime, opt: Optimizer,
             grads = constrain_g(grads)
         else:
             micro = jax.tree.map(
-                lambda x: jnp.moveaxis(
-                    x.reshape(n_micro, B // n_micro, *x.shape[1:]), 0, 0),
+                lambda x: x.reshape(n_micro, B // n_micro, *x.shape[1:]),
                 batch)
 
             def body(acc, mb):
                 g_acc, l_acc = acc
-                (l, _m), g = grad_fn(params, mb)
+                (l, m), g = grad_fn(params, mb)
                 g = constrain_g(g)
                 g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
-                return (constrain_g(g_acc), l_acc + l), None
+                return (constrain_g(g_acc), l_acc + l), m
 
             # accumulator in the parameter storage dtype: fp32 models get
             # exact accumulation; bf16-param models (jamba-398B) trade ~0.5%
             # gradient noise for fitting the accumulator in HBM
             g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
-            (g_sum, l_sum), _ = jax.lax.scan(body, (g0, jnp.zeros((), jnp.float32)),
-                                             micro)
+            (g_sum, l_sum), m_stack = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), micro)
             grads = jax.tree.map(lambda g: g / n_micro, g_sum)
             loss = l_sum / n_micro
-            metrics = {}
+            # every aux metric (scalar or not) keeps its global-batch
+            # semantics regardless of n_micro — so `metrics` has the same
+            # keys and shapes as the n_micro=1 branch
+            def combine(k, v):
+                if k in COUNT_METRICS:
+                    return jnp.sum(v, axis=0)
+                if k in TOKEN_WEIGHTED_METRICS and "ntok" in m_stack:
+                    w = m_stack["ntok"].astype(jnp.float32)
+                    w = w.reshape(w.shape[:1] + (1,) * (v.ndim - 1))
+                    return jnp.sum(v * w, axis=0) / jnp.sum(m_stack["ntok"])
+                return jnp.mean(v, axis=0)
+
+            metrics = {k: combine(k, v) for k, v in m_stack.items()}
 
         new_params, new_state, stats = opt.step(grads, opt_state, params)
         stats = dict(stats)

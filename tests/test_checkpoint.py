@@ -1,0 +1,135 @@
+"""Checkpoint round-trip fidelity (fast lane).
+
+The headline regression under test: ``np.savez`` stores bfloat16 as a
+void record (``|V2``), which used to make ``load_checkpoint`` crash —
+the dtype sidecar in meta.json must round-trip every extension dtype
+bit-exactly (values AND dtypes), for plain param trees and for both
+optimizer state forms (OptState pytree / flat-buffer-resident
+FlatOptState).  Restored leaves must also take the dtype of the ``like``
+template rather than trusting the file.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.core import FlatOptState, OptState, sngm, to_pytree
+from repro.core.schedules import constant
+
+KEY = jax.random.PRNGKey(0)
+
+SHAPES = [(33, 5), (129,), (), (4, 4, 4)]
+
+DTYPE_SPECS = {
+    "fp32": [jnp.float32] * len(SHAPES),
+    "bf16": [jnp.bfloat16] * len(SHAPES),
+    "mixed": [jnp.float32, jnp.bfloat16, jnp.float32, jnp.bfloat16],
+}
+
+
+def make_tree(spec):
+    return {f"p{i}": jax.random.normal(jax.random.fold_in(KEY, i), s).astype(d)
+            for i, (s, d) in enumerate(zip(SHAPES, DTYPE_SPECS[spec]))}
+
+
+def assert_tree_bit_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype, (x.dtype, y.dtype)
+        assert bool(jnp.array_equal(x, y))
+
+
+@pytest.mark.parametrize("spec", sorted(DTYPE_SPECS))
+def test_param_tree_roundtrip_bit_exact(spec, tmp_path):
+    tree = make_tree(spec)
+    save_checkpoint(str(tmp_path / "ck"), {"params": tree}, step=17)
+    restored, step = load_checkpoint(str(tmp_path / "ck"), {"params": tree})
+    assert step == 17
+    assert_tree_bit_equal(tree, restored["params"])
+
+
+@pytest.mark.parametrize("spec", sorted(DTYPE_SPECS))
+@pytest.mark.parametrize("form", ["pytree", "flat"])
+def test_opt_state_roundtrip_bit_exact(spec, form, tmp_path):
+    """Both state forms round-trip with non-zero momentum after a step."""
+    params = make_tree(spec)
+    grads = jax.tree.map(
+        lambda p: (2.0 * jax.random.normal(jax.random.fold_in(KEY, p.size),
+                                           p.shape)).astype(p.dtype), params)
+    opt = sngm(constant(0.3), beta=0.9, weight_decay=1e-4,
+               fused="multi_tensor" if form == "flat" else None)
+    state = opt.init(params)
+    assert isinstance(state, FlatOptState if form == "flat" else OptState)
+    params, state, _ = jax.jit(opt.step)(grads, state, params)
+
+    save_checkpoint(str(tmp_path / "ck"), {"params": params, "opt": state},
+                    step=1)
+    like = {"params": params, "opt": opt.init(params)}
+    restored, step = load_checkpoint(str(tmp_path / "ck"), like)
+    assert step == 1
+    assert_tree_bit_equal(params, restored["params"])
+    assert type(restored["opt"]) is type(state)
+    assert_tree_bit_equal(state, restored["opt"])      # buffers / momentum
+    assert_tree_bit_equal(state.momentum, restored["opt"].momentum)
+    assert int(restored["opt"].step) == 1
+
+
+def test_flat_state_roundtrips_through_pytree_form(tmp_path):
+    """A FlatOptState checkpoint can be restored as OptState and back —
+    the interconversion launch/train.py --resume relies on."""
+    from repro.core import from_pytree
+    params = make_tree("mixed")
+    grads = jax.tree.map(lambda p: jnp.ones(p.shape, p.dtype), params)
+    opt = sngm(constant(0.3), beta=0.9, fused="multi_tensor")
+    params, state, _ = jax.jit(opt.step)(grads, opt.init(params), params)
+    save_checkpoint(str(tmp_path / "ck"), {"opt": to_pytree(state)}, step=1)
+    like = {"opt": to_pytree(opt.init(params))}
+    restored, _ = load_checkpoint(str(tmp_path / "ck"), like)
+    back = from_pytree(restored["opt"], params)
+    assert_tree_bit_equal(state, back)
+
+
+def test_restored_leaf_cast_to_like_dtype(tmp_path):
+    """Restore must CAST to the template's dtype, not trust the file:
+    an fp32 checkpoint loads into a bf16 tree as bf16."""
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    save_checkpoint(str(tmp_path / "ck"), tree, step=0)
+    like = {"w": jnp.zeros((8,), jnp.bfloat16)}
+    restored, _ = load_checkpoint(str(tmp_path / "ck"), like)
+    assert restored["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(restored["w"], np.float32),
+                                  np.arange(8, dtype=np.float32))
+
+
+def test_meta_dtype_sidecar_written(tmp_path):
+    tree = make_tree("mixed")
+    save_checkpoint(str(tmp_path / "ck"), tree, step=0)
+    meta = json.load(open(tmp_path / "ck" / "meta.json"))
+    assert meta["format"] == 2
+    assert sorted(meta["dtypes"].values()) == sorted(
+        jnp.dtype(d).name for d in DTYPE_SPECS["mixed"])
+    # bf16 leaves must be stored as a uint16 view, not a void record
+    data = np.load(tmp_path / "ck" / "shard_00000.npz")
+    for k, name in meta["dtypes"].items():
+        if name == "bfloat16":
+            assert data[k].dtype == np.uint16
+
+
+def test_legacy_void_checkpoint_rescued(tmp_path):
+    """Pre-sidecar checkpoints stored bf16 as |V2: the bits are intact,
+    so restore must recover them via the `like` dtype."""
+    w = jax.random.normal(KEY, (6, 3)).astype(jnp.bfloat16)
+    os.makedirs(tmp_path / "ck")
+    np.savez(tmp_path / "ck" / "shard_00000.npz", w=np.asarray(w))
+    assert np.load(tmp_path / "ck" / "shard_00000.npz")["w"].dtype.kind == "V"
+    json.dump({"step": 5, "n_leaves": 1},
+              open(tmp_path / "ck" / "meta.json", "w"))
+    restored, step = load_checkpoint(str(tmp_path / "ck"), {"w": w})
+    assert step == 5
+    assert restored["w"].dtype == jnp.bfloat16
+    assert bool(jnp.array_equal(restored["w"], w))

@@ -4,7 +4,11 @@ The headline guarantees under test:
   * flatten/unflatten is a lossless round trip for any pytree;
   * the fused path is BIT-identical to the pure-jnp optimizer paths
     (params, momentum, and stats) for sngm / sngm[per_tensor] / msgd /
-    lars, fp32 and bf16, across multiple steps;
+    lars, fp32 and bf16, across multiple steps — and with fused init now
+    returning a flat-buffer-resident FlatOptState, those asserts cover
+    the RESIDENT path;
+  * the resident path is bit-identical to the per-step (OptState) fused
+    path and packs only gradient-sized buffers in steady state;
   * per-segment norms from the single reduction pass match
     jnp.linalg.norm per tensor;
   * the engine issues O(1) kernel launches per step vs O(n_leaves) for
@@ -19,8 +23,10 @@ import pytest
 
 from repro.core import lars, msgd, sngm
 from repro.core.multi_tensor import (
-    CHUNK, build_layout, flatten, leaf_sumsq, multi_tensor_step, unflatten,
+    CHUNK, FlatOptState, build_layout, count_packed_bytes, flatten,
+    init_flat_state, leaf_sumsq, multi_tensor_step, unflatten,
     _fold_sum, _segment_sums)
+from repro.core.optim import OptState, from_pytree, to_pytree
 from repro.core.schedules import constant
 from repro.kernels import count_pallas_launches
 from repro.kernels.multi_tensor import ops as mt_ops
@@ -270,6 +276,105 @@ def test_multi_tensor_rejects_grad_dtype_mismatch():
     mom = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
     with pytest.raises(ValueError, match="match the parameter dtype"):
         multi_tensor_step("sngm_global", params, grads, mom, lr=0.1, beta=0.9)
+
+
+# ---------------------------------------------------------------------------
+# flat-buffer residency: FlatOptState vs per-step path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("name", sorted(OPTIMIZERS))
+def test_resident_state_bit_identical_to_per_step(name, dtype):
+    """FlatOptState (flatten grads only, buffers carried across steps)
+    == OptState into the same fused optimizer (re-pack p+g+u each step),
+    bitwise, for every optimizer kind, fp32 and bf16, multi-step."""
+    params = make_tree(0, dtype)
+    grads = make_tree(1, dtype, scale=3.0)
+    opt = OPTIMIZERS[name](fused="multi_tensor")
+    s_flat = opt.init(params)
+    assert isinstance(s_flat, FlatOptState)
+    s_tree = to_pytree(s_flat)
+    assert isinstance(s_tree, OptState)
+    step = jax.jit(opt.step)
+    pf, pt = params, params
+    for _ in range(3):
+        pf, s_flat, st_f = step(grads, s_flat, pf)
+        pt, s_tree, st_t = step(grads, s_tree, pt)
+    assert isinstance(s_flat, FlatOptState) and isinstance(s_tree, OptState)
+    assert tree_bitwise_equal(pf, pt)
+    assert tree_bitwise_equal(s_flat.momentum, s_tree.momentum)
+    for k in st_f:
+        assert bool(jnp.array_equal(st_f[k], st_t[k])), k
+
+
+def test_resident_params_view_matches_loop_params():
+    """state.p_flats are authoritative; the pytree view handed back for
+    loss_fn must stay bit-equal to them every step."""
+    params, grads = make_tree(0), make_tree(1, scale=3.0)
+    opt = OPTIMIZERS["sngm"](fused="multi_tensor")
+    state = opt.init(params)
+    step = jax.jit(opt.step)
+    for _ in range(2):
+        params, state, _ = step(grads, state, params)
+        assert tree_bitwise_equal(params, state.params)
+
+
+def test_state_form_conversion_lossless():
+    """to_pytree / from_pytree round-trip bitwise (incl. zero padding),
+    on a mixed fp32+bf16 tree with non-zero momentum."""
+    params = make_tree(0)
+    params.update({f"b{i}": v.astype(jnp.bfloat16)
+                   for i, v in enumerate(make_tree(2).values())})
+    grads = jax.tree.map(
+        lambda p: (3.0 * jax.random.normal(
+            jax.random.fold_in(KEY, p.size), p.shape)).astype(p.dtype), params)
+    opt = OPTIMIZERS["sngm"](fused="multi_tensor")
+    params, state, _ = jax.jit(opt.step)(grads, opt.init(params), params)
+    back = from_pytree(to_pytree(state), params)
+    assert back.layout == state.layout
+    assert tree_bitwise_equal(tuple(back.p_flats), tuple(state.p_flats))
+    assert tree_bitwise_equal(tuple(back.u_flats), tuple(state.u_flats))
+
+
+def test_flat_state_accepted_by_jnp_path():
+    """State-form dispatch: a FlatOptState fed to the pure-jnp optimizer
+    materializes its momentum view and produces the same numbers."""
+    params, grads = make_tree(0), make_tree(1, scale=3.0)
+    opt_jnp = OPTIMIZERS["sngm"]()
+    flat = init_flat_state(params)
+    p_a, s_a, _ = jax.jit(opt_jnp.step)(grads, flat, params)
+    p_b, s_b, _ = jax.jit(opt_jnp.step)(grads, opt_jnp.init(params), params)
+    assert isinstance(s_a, OptState)
+    assert tree_bitwise_equal(p_a, p_b)
+    assert tree_bitwise_equal(s_a.momentum, s_b.momentum)
+
+
+def test_resident_path_packs_only_gradients():
+    """The residency win: steady-state steps pack gradient-sized buffers
+    only — exactly 1/3 of the per-step path on an all-fp32 tree."""
+    params, grads = make_tree(0), make_tree(1, scale=3.0)
+    opt = OPTIMIZERS["sngm"](fused="multi_tensor")
+    s_flat = opt.init(params)
+    s_tree = to_pytree(s_flat)
+
+    def packed(state):
+        with count_packed_bytes() as c:
+            # fresh lambda: a cached jit would skip tracing and recording
+            jax.jit(lambda g, s, p: opt.step(g, s, p)).lower(
+                grads, state, params)
+        return c["bytes"]
+
+    n_bytes = sum(b.n_elems * 4 for b in s_flat.layout.buckets)
+    assert packed(s_flat) == n_bytes           # grads only
+    assert packed(s_tree) == 3 * n_bytes       # params + grads + momentum
+
+
+def test_resident_rejects_grad_dtype_mismatch():
+    params = make_tree(0, jnp.bfloat16)
+    grads = make_tree(1, jnp.float32, scale=3.0)
+    opt = OPTIMIZERS["sngm"](fused="multi_tensor")
+    with pytest.raises(ValueError, match="match the parameter dtype"):
+        opt.step(grads, opt.init(params), params)
 
 
 # ---------------------------------------------------------------------------

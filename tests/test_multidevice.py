@@ -158,6 +158,75 @@ FUSED_OPT_SCRIPT = textwrap.dedent("""
 """)
 
 
+RESIDENT_BF16_SHARDED_SCRIPT = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import sngm
+    from repro.core.multi_tensor import FlatOptState
+    from repro.core.optim import to_pytree
+    from repro.core.schedules import constant
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+
+    def bit_eq(a, b):
+        return all(bool(jnp.array_equal(x, y)) and x.dtype == y.dtype
+                   for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+    # bf16 params sharded over the mesh (2D leaves), replicated 1D leaves
+    k = jax.random.PRNGKey(0)
+    shapes = {"wq": (256, 128), "wk": (256, 128), "scale": (256,),
+              "emb": (1000, 64), "bias": (7,)}
+    params = {n: jax.random.normal(jax.random.fold_in(k, i), s)
+                 .astype(jnp.bfloat16)
+              for i, (n, s) in enumerate(sorted(shapes.items()))}
+    grads = {n: (3.0 * jax.random.normal(jax.random.fold_in(k, 100 + i), s))
+                .astype(jnp.bfloat16)
+             for i, (n, s) in enumerate(sorted(shapes.items()))}
+    mesh = jax.make_mesh((8,), ("data",))
+    shard = {n: NamedSharding(mesh, P("data") if len(s) == 2 else P())
+             for n, s in shapes.items()}
+    params_s = jax.device_put(params, shard)
+    grads_s = jax.device_put(grads, shard)
+
+    opt = sngm(constant(0.3), beta=0.9, weight_decay=1e-4,
+               fused="multi_tensor")
+    opt_jnp = sngm(constant(0.3), beta=0.9, weight_decay=1e-4)
+
+    s_res = opt.init(params_s)
+    assert isinstance(s_res, FlatOptState)
+    s_per = to_pytree(s_res)
+    s_ref = opt_jnp.init(params_s)
+    step, step_ref = jax.jit(opt.step), jax.jit(opt_jnp.step)
+    p_res = p_per = p_ref = params_s
+    for _ in range(2):
+        p_res, s_res, st_res = step(grads_s, s_res, p_res)
+        p_per, s_per, st_per = step(grads_s, s_per, p_per)
+        p_ref, s_ref, st_ref = step_ref(grads_s, s_ref, p_ref)
+
+    # resident == per-step fused == jnp, bitwise, on sharded bf16 params
+    assert bit_eq(p_res, p_per)
+    assert bit_eq(s_res.momentum, s_per.momentum)
+    assert bit_eq(p_res, p_ref), "resident vs jnp params differ"
+    assert bit_eq(s_res.momentum, s_ref.momentum)
+    assert bool(jnp.array_equal(st_res["grad_norm"], st_ref["grad_norm"]))
+    print("RESIDENT-SHARDED-BF16-OK")
+
+    # sharded bf16 checkpoint round-trip, both state forms
+    for tag, state in (("flat", s_res), ("tree", s_per)):
+        d = tempfile.mkdtemp()
+        save_checkpoint(d, {"params": p_res, "opt": state}, step=2)
+        like = {"params": params_s, "opt": opt.init(params_s) if tag == "flat"
+                else to_pytree(opt.init(params_s))}
+        restored, t = load_checkpoint(d, like, shardings=None)
+        assert t == 2
+        assert bit_eq(restored["params"], p_res)
+        assert bit_eq(restored["opt"], state)
+    print("SHARDED-CKPT-OK")
+""")
+
+
 def _run(script):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -180,3 +249,11 @@ def test_moe_expert_parallel_matches_oracle():
 def test_multi_tensor_engine_matches_jnp_on_sharded_params():
     r = _run(FUSED_OPT_SCRIPT)
     assert "FUSED-SHARDED-OK" in r.stdout, r.stdout[-2000:] + r.stderr[-3000:]
+
+
+def test_resident_state_bitwise_and_checkpoint_on_sharded_bf16():
+    r = _run(RESIDENT_BF16_SHARDED_SCRIPT)
+    assert "RESIDENT-SHARDED-BF16-OK" in r.stdout, \
+        r.stdout[-2000:] + r.stderr[-3000:]
+    assert "SHARDED-CKPT-OK" in r.stdout, \
+        r.stdout[-2000:] + r.stderr[-3000:]

@@ -55,6 +55,34 @@ def test_sngm_stays_finite_at_any_lr(tiny_cfg):
     assert all(np.isfinite(l) for l in losses), losses
 
 
+def test_stats_keys_consistent_across_n_micro(tiny_cfg):
+    """Regression: the scan branch used to drop ce_loss/aux_loss/ntok
+    (metrics = {}), so logged stats silently changed shape with n_micro.
+    Metrics must survive accumulation with global-batch semantics:
+    ce_loss combines token-weighted (a plain mean of per-micro means
+    diverges when mask density is ragged), ntok sums to the total."""
+    params = materialize(model_defs(tiny_cfg), jax.random.PRNGKey(0))
+    data = SyntheticLM(tiny_cfg.vocab_size, 32, 8, branching=4)
+    batch = dict(data.batch_at(0))
+    # ragged mask density across the micro-batch split: rows 0-3 keep 1/4
+    # of their tokens, rows 4-7 all of them
+    mask = np.ones((8, 32), np.float32)
+    mask[:4, 8:] = 0.0
+    batch["loss_mask"] = jnp.asarray(mask)
+    stats_by_n = {}
+    for n_micro in (1, 4):
+        opt = sngm(poly_power(0.1, 10, 1.1), beta=0.9)
+        step = jax.jit(make_train_step(tiny_cfg, CPU_RUNTIME, opt,
+                                       n_micro=n_micro))
+        _, _, stats = step(params, opt.init(params), batch)
+        stats_by_n[n_micro] = stats
+    assert set(stats_by_n[1]) == set(stats_by_n[4])
+    assert {"ce_loss", "aux_loss", "ntok"} <= set(stats_by_n[1])
+    np.testing.assert_allclose(float(stats_by_n[1]["ce_loss"]),
+                               float(stats_by_n[4]["ce_loss"]), rtol=1e-4)
+    assert float(stats_by_n[1]["ntok"]) == float(stats_by_n[4]["ntok"])
+
+
 def test_grad_accumulation_equals_full_batch(tiny_cfg):
     """n_micro=4 accumulated gradient == single full-batch gradient
     (the optimizer sees the SAME global-batch gradient, Algorithm 1)."""
@@ -120,3 +148,34 @@ def test_checkpoint_roundtrip(tmp_path, tiny_cfg):
     assert step == 17
     for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored["params"])):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_train_launcher_save_resume_loss_continuity(tmp_path):
+    """End-to-end --resume: a 12-step run must equal 6 steps + save +
+    resume for 6 more — including across STATE FORMS (a FlatOptState
+    checkpoint resumed on the jnp path), since poly_power picks up at the
+    restored t and the engine paths are bit-identical."""
+    from repro.launch.train import main as train_main
+
+    def run(extra):
+        return train_main(
+            ["--arch", "gemma-2b", "--reduced", "--batch", "4", "--seq", "16",
+             "--n-micro", "2", "--optimizer", "sngm", "--fused",
+             "multi_tensor", "--lr", "0.5", "--total-steps", "12",
+             "--log-every", "100"] + extra)
+
+    full = run(["--steps", "12"])
+    part1 = run(["--steps", "6", "--ckpt", str(tmp_path / "ck1")])
+    part1b = run(["--steps", "6", "--ckpt", str(tmp_path / "ck2")])
+    np.testing.assert_allclose(part1, full[:6], rtol=1e-6)
+    np.testing.assert_allclose(part1b, part1, rtol=0)   # deterministic
+
+    resumed = run(["--steps", "12", "--ckpt", str(tmp_path / "ck1"),
+                   "--resume"])
+    assert len(resumed) == 6
+    np.testing.assert_allclose(resumed, full[6:], rtol=1e-5, atol=1e-6)
+
+    # cross-form resume: FlatOptState checkpoint -> jnp (OptState) run
+    resumed_jnp = run(["--steps", "12", "--ckpt", str(tmp_path / "ck2"),
+                       "--resume", "--fused", "none"])
+    np.testing.assert_allclose(resumed_jnp, full[6:], rtol=1e-4, atol=1e-5)
