@@ -16,6 +16,10 @@ flat-buffer-resident state (FlatOptState) must pack only gradient-sized
 buffers per steady-state step, ~1/3 of the per-step path's
 params+grads+momentum re-pack on an fp32 tree.
 
+Also benchmarks the gradient-transform chain interpreter on a novel
+composition (clip -> normalize -> trace -> schedule) against the
+compiled sngm chain, so the jnp-fallback overhead stays visible.
+
 CLI:  python -m benchmarks.bench_optimizer_overhead [--quick] [--json OUT]
 ``--quick`` shrinks the tree and iteration counts for the CI smoke lane;
 ``--json`` writes the result rows as a JSON artifact.
@@ -31,7 +35,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row
-from repro.core import count_packed_bytes, lars, lamb, msgd, sngd, sngm, to_pytree
+from repro.core import (compile_chain, count_packed_bytes, lars, lamb, msgd,
+                        sngd, sngm, to_pytree)
+from repro.core import transform as T
 from repro.core.schedules import constant
 from repro.kernels import count_pallas_launches
 
@@ -104,6 +110,13 @@ def run(quick: bool = False, json_path: str | None = None):
                       ("lars", lars(constant(0.1), beta=0.9, weight_decay=1e-4)),
                       ("lamb", lamb(constant(0.1), weight_decay=1e-4))]:
         bench(name, opt)
+
+    # --- chain interpreter: a novel composition no fused kind covers ----
+    # (clip -> normalize -> momentum -> schedule); measures the jnp
+    # fallback's overhead relative to the compiled sngm path above
+    novel = T.chain(T.clip_by_global_norm(1.0), T.normalize_by_global_norm(),
+                    T.trace(0.9), T.scale_by_schedule(constant(0.1)))
+    bench("chain_interpreter_novel", compile_chain(novel))
 
     # --- fused: per-leaf (O(n_leaves) launches) vs multi-tensor (O(1)) --
     us_pl, l_pl = bench("sngm_fused_per_leaf",

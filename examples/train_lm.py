@@ -20,7 +20,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import save_checkpoint
 from repro.configs import ARCHS
 from repro.core import make_optimizer
-from repro.core.optim import OptState
+from repro.core.optim import OptState, builder_accepts, optimizer_names
 from repro.core.schedules import poly_power
 from repro.data import SyntheticLM
 from repro.models import model_defs
@@ -41,7 +41,7 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--n-micro", type=int, default=4)
     ap.add_argument("--optimizer", default="sngm",
-                    choices=["sngm", "sngd", "msgd", "lars", "lamb"])
+                    choices=list(optimizer_names()))
     ap.add_argument("--lr", type=float, default=0.3)
     ap.add_argument("--ckpt", default="")
     args = ap.parse_args()
@@ -64,8 +64,10 @@ def main():
         psh = param_shardings(defs, mesh)
         params = jax.device_put(params, psh)
 
+    kw = {k: v for k, v in (("beta", 0.9), ("weight_decay", 1e-4))
+          if builder_accepts(args.optimizer, k)}
     opt = make_optimizer(args.optimizer, poly_power(args.lr, args.steps, 1.1),
-                         beta=0.9, weight_decay=1e-4)
+                         **kw)
     state = opt.init(params)
     step = jax.jit(make_train_step(cfg, rt, opt, n_micro=args.n_micro))
     data = SyntheticLM(cfg.vocab_size, args.seq, args.batch, branching=8)

@@ -10,8 +10,12 @@ and record the true dtype of EVERY leaf in a per-key ``dtypes`` map in
 casts every leaf to the dtype of the ``like`` template, so a checkpoint
 round-trip is bit-exact in both values and dtypes while old/drifted
 checkpoints still load.  Works for any state form — plain param trees,
-``OptState`` pytrees, or flat-buffer-resident ``FlatOptState`` (whose
-static ``TreeLayout`` is pytree aux data and never touches disk).
+``OptState`` pytrees, flat-buffer-resident ``FlatOptState`` (whose
+static ``TreeLayout`` is pytree aux data and never touches disk), or the
+chain interpreter's ``ChainOptState`` (a NamedTuple-of-NamedTuples whose
+keys come from the tuple positions, so a chain's state layout — i.e. the
+transform sequence — must match between save and load; the optimizer
+spec in ``train_meta.json`` is what guarantees that on ``--resume``).
 """
 from __future__ import annotations
 
@@ -81,6 +85,13 @@ def load_checkpoint(path: str, like: Any, shardings: Optional[Any] = None):
         meta = json.load(f)
     dtypes = meta.get("dtypes", {})
     flat_like = _flatten(like)
+    missing = sorted(set(flat_like) - set(data.files))
+    if missing:
+        raise KeyError(
+            f"checkpoint at {path!r} lacks {len(missing)} leaves the "
+            f"template expects (template/archive structure mismatch — "
+            f"e.g. a different optimizer or chain layout than the one "
+            f"saved): first missing {missing[:5]}")
     restored = {}
     for k, leaf in flat_like.items():
         a = data[k]

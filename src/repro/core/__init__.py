@@ -1,20 +1,31 @@
 """repro.core — the paper's contribution: SNGM and its large-batch
-optimizer family, schedules, distributed-norm utilities, and the
-multi-tensor fused optimizer engine."""
+optimizer family expressed as composable gradient-transform chains
+(core/transform.py), compiled onto the multi-tensor fused optimizer
+engine (core/multi_tensor.py), plus schedules and distributed-norm
+utilities."""
 from repro.core.optim import (
-    Optimizer, OptState, sngm, sngd, msgd, lars, lamb, make_optimizer,
+    Optimizer, OptState, OptimizerSpec, sngm, sngd, msgd, lars, lamb,
+    make_optimizer, optimizer_names, register_optimizer,
     global_norm, tree_squared_norm, to_pytree, from_pytree,
 )
 from repro.core.multi_tensor import (
     FlatOptState, TreeLayout, build_layout, count_packed_bytes, flatten,
     unflatten, init_flat_state, leaf_sumsq, multi_tensor_step,
-    multi_tensor_step_flat,
+    multi_tensor_step_flat, resident_step,
+)
+from repro.core import transform
+from repro.core.transform import (
+    ChainOptState, GradientTransform, chain, compile_chain, as_optimizer,
 )
 from repro.core import schedules
+from repro.core.schedules import make_schedule
 
-__all__ = ["Optimizer", "OptState", "sngm", "sngd", "msgd", "lars", "lamb",
-           "make_optimizer", "global_norm", "tree_squared_norm", "schedules",
-           "to_pytree", "from_pytree",
+__all__ = ["Optimizer", "OptState", "OptimizerSpec", "sngm", "sngd", "msgd",
+           "lars", "lamb", "make_optimizer", "optimizer_names",
+           "register_optimizer", "global_norm", "tree_squared_norm",
+           "schedules", "make_schedule", "to_pytree", "from_pytree",
            "FlatOptState", "TreeLayout", "build_layout", "count_packed_bytes",
            "flatten", "unflatten", "init_flat_state", "leaf_sumsq",
-           "multi_tensor_step", "multi_tensor_step_flat"]
+           "multi_tensor_step", "multi_tensor_step_flat", "resident_step",
+           "transform", "ChainOptState", "GradientTransform", "chain",
+           "compile_chain", "as_optimizer"]

@@ -121,6 +121,19 @@ def leaf_sumsq(x) -> jnp.ndarray:
     return _fold_sum(jnp.sum(jnp.square(xf.reshape(-1, CHUNK)), axis=1))
 
 
+def tree_squared_norm(tree: PyTree) -> jnp.ndarray:
+    """Sum of squared entries over the whole pytree (fp32 accumulate), in
+    the canonical chunked order — the one reduction every optimizer path
+    (jnp, gradient-transform interpreter, fused engine) shares, which is
+    what keeps their norms bit-identical."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(leaf_sumsq(l) for l in leaves)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(tree_squared_norm(tree))
+
+
 # ---------------------------------------------------------------------------
 # layout: dtype buckets of chunk-aligned segments
 # ---------------------------------------------------------------------------
@@ -288,6 +301,25 @@ def init_flat_state(params: PyTree) -> FlatOptState:
         u_flats=tuple(jnp.zeros((b.n_elems,), jnp.float32)
                       for b in layout.buckets),
         layout=layout)
+
+
+def resident_step(kind: str, grads: PyTree, state: FlatOptState, *, lr,
+                  beta: float, weight_decay: float = 0.0, eps: float = 1e-12,
+                  trust: float = 0.001) -> Tuple[PyTree, FlatOptState, dict]:
+    """The resident fast path: flatten ONLY the gradients; params and
+    momentum stay in the buffers carried by ``state``.  Returns
+    ``(params_view, new_state, stats)`` where the pytree view is bit-equal
+    to what the per-step path returns (buffer padding is invariantly
+    zero, see module docstring)."""
+    layout = state.layout
+    check_grad_dtypes(grads, layout)
+    g_flats = flatten(grads, layout)
+    po, uo, stats = multi_tensor_step_flat(
+        kind, layout, state.p_flats, g_flats, state.u_flats, lr=lr,
+        beta=beta, weight_decay=weight_decay, eps=eps, trust=trust)
+    new_state = FlatOptState(step=state.step + 1, p_flats=tuple(po),
+                             u_flats=tuple(uo), layout=layout)
+    return unflatten(po, layout), new_state, stats
 
 
 def check_grad_dtypes(grads: PyTree, layout: TreeLayout) -> None:

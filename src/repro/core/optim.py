@@ -1,11 +1,28 @@
-"""Optimizers: SNGM (the paper, Algorithm 1) and its baselines.
+"""Optimizers: SNGM (the paper, Algorithm 1) and its baselines, built as
+gradient-transform chains.
 
-All optimizers share a tiny optax-like interface that is pytree- and
-mesh-agnostic: state pytrees mirror the parameter pytree exactly, so
-under pjit the optimizer state inherits the parameter sharding and the
-update is fully local except for the norm reductions (a scalar
-all-reduce), which is precisely the property that makes SNGM cheap to
-distribute (DESIGN.md §3).
+Every optimizer here is a one-line composition over ``core.transform``::
+
+    sngm  =  add_decayed_weights . normalize_by_global_norm . trace
+             . scale_by_schedule
+    msgd  =  add_decayed_weights . trace . scale_by_schedule
+    lars  =  trust_ratio . scale_by_schedule . trace
+    lamb  =  scale_by_adam . add_decayed_weights . scale_by_trust_ratio
+             . scale_by_schedule
+
+``compile_chain`` pattern-matches those shapes onto the multi-tensor
+engine's fused kinds, so the chain builders return exactly the same
+optimizers the monolithic implementations used to: bit-identical
+numerics in every execution mode, ``OptState``/``FlatOptState`` state
+forms, and O(1) Pallas launches per step when fused.  Novel chains (any
+composition the compiler does not recognize) run on the jnp interpreter
+with a ``ChainOptState`` — see ``core/transform.py``.
+
+The shared optax-like interface is pytree- and mesh-agnostic: state
+pytrees mirror the parameter pytree exactly, so under pjit the optimizer
+state inherits the parameter sharding and the update is fully local
+except for the norm reductions (a scalar all-reduce), which is precisely
+the property that makes SNGM cheap to distribute (DESIGN.md §3).
 
     opt = sngm(schedule, beta=0.9, weight_decay=1e-4)
     state = opt.init(params)
@@ -23,8 +40,9 @@ Fused execution: ``sngm``/``msgd``/``lars`` accept ``fused=``
                          the baseline bench_optimizer_overhead.py compares
                          against.
 
-``use_pallas=True`` is the legacy spelling and now routes to
-``"multi_tensor"`` when ``fused`` is not given.
+``use_pallas=True`` is the DEPRECATED legacy spelling of
+``fused="multi_tensor"`` and emits a ``DeprecationWarning``; migrate by
+passing ``fused="multi_tensor"`` explicitly (README "Optimizer API").
 
 State forms: with ``fused="multi_tensor"``, ``opt.init(params)`` returns
 a ``FlatOptState`` — params and momentum resident as dtype-bucketed flat
@@ -40,41 +58,36 @@ With a resident state, ``opt.step``'s ``params`` argument is only a
 convenience view: the authoritative parameter values are
 ``state.p_flats`` (the two agree by construction when params come from
 the previous step's output, as in ``make_train_step``).
+
+Serialization: ``OptimizerSpec`` is the JSON-safe identity of an
+optimizer (registry name + kwargs + a declarative schedule spec).
+``make_optimizer`` accepts one directly, and ``launch/train.py``
+round-trips it through ``train_meta.json`` so ``--resume`` reconstructs
+the exact optimizer of the original run.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
+import inspect
+import warnings
+from typing import Any, Callable, Mapping, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import transform as T
 from repro.core.multi_tensor import (
-    FlatOptState, build_layout, check_grad_dtypes, flatten, init_flat_state,
-    leaf_sumsq, multi_tensor_step, multi_tensor_step_flat, unflatten)
-from repro.core.schedules import Schedule, constant
+    FlatOptState, build_layout, flatten, global_norm, init_flat_state,
+    leaf_sumsq, multi_tensor_step, resident_step, tree_squared_norm)
+from repro.core.schedules import Schedule, make_schedule
 
 PyTree = Any
 
 
 # ---------------------------------------------------------------------------
-# tree utilities
+# tree utilities (canonical reductions live in core.multi_tensor; re-exported
+# here because this module has always been their public home)
 # ---------------------------------------------------------------------------
-
-def tree_squared_norm(tree: PyTree) -> jnp.ndarray:
-    """Sum of squared entries over the whole pytree (fp32 accumulate).
-
-    Uses the engine's canonical chunked reduction (``leaf_sumsq``) so the
-    jnp optimizer paths and the multi-tensor fused paths see bit-identical
-    norms."""
-    leaves = jax.tree_util.tree_leaves(tree)
-    return sum(leaf_sumsq(l) for l in leaves)
-
-
-def global_norm(tree: PyTree) -> jnp.ndarray:
-    return jnp.sqrt(tree_squared_norm(tree))
-
 
 def tree_add_scaled(a: PyTree, b: PyTree, scale) -> PyTree:
     return jax.tree.map(lambda x, y: x + scale * y, a, b)
@@ -96,11 +109,14 @@ class OptState(NamedTuple):
 @dataclasses.dataclass(frozen=True)
 class Optimizer:
     """init/step pair.  ``step`` returns (new_params, new_state, stats).
-    The state is an ``OptState`` pytree or, for ``fused="multi_tensor"``,
-    a flat-buffer-resident ``FlatOptState``; ``step`` accepts either."""
+    The state is an ``OptState`` pytree, a flat-buffer-resident
+    ``FlatOptState`` (``fused="multi_tensor"``), or a ``ChainOptState``
+    (interpreter-run novel chains).  ``kind`` names the fused engine kind
+    a compiled chain matched, or None for interpreter-run chains."""
     name: str
     init: Callable[[PyTree], Any]
     step: Callable[[PyTree, Any, PyTree], Tuple[PyTree, Any, dict]]
+    kind: Optional[str] = None
 
 
 def _init(params: PyTree) -> OptState:
@@ -136,24 +152,6 @@ def from_pytree(state: AnyOptState, params: PyTree) -> FlatOptState:
         layout=layout)
 
 
-def _flat_step(kind: str, grads: PyTree, state: FlatOptState, *, lr,
-               beta: float, weight_decay: float = 0.0, eps: float = 1e-12,
-               trust: float = 0.001):
-    """The resident fast path: flatten ONLY the gradients; params and
-    momentum stay in the buffers carried by ``state``."""
-    layout = state.layout
-    check_grad_dtypes(grads, layout)
-    g_flats = flatten(grads, layout)
-    po, uo, stats = multi_tensor_step_flat(
-        kind, layout, state.p_flats, g_flats, state.u_flats, lr=lr,
-        beta=beta, weight_decay=weight_decay, eps=eps, trust=trust)
-    new_state = FlatOptState(step=state.step + 1, p_flats=tuple(po),
-                             u_flats=tuple(uo), layout=layout)
-    # pytree view for loss_fn/logging; bit-equal to what the per-step
-    # path returns (buffer padding is invariantly zero, see multi_tensor)
-    return unflatten(po, layout), new_state, stats
-
-
 def _decayed(grads: PyTree, params: PyTree, weight_decay: float) -> PyTree:
     """PyTorch-SGD-style coupled weight decay: g <- g + wd * w (paper §5)."""
     if weight_decay == 0.0:
@@ -163,11 +161,133 @@ def _decayed(grads: PyTree, params: PyTree, weight_decay: float) -> PyTree:
 
 def _resolve_fused(use_pallas: bool, fused: Optional[str],
                    allowed=("per_leaf", "multi_tensor")) -> Optional[str]:
+    if use_pallas:
+        warnings.warn(
+            "use_pallas=True is deprecated; pass fused='multi_tensor' "
+            "instead (it routes to the same multi-tensor engine). "
+            "use_pallas will be removed in a future release.",
+            DeprecationWarning, stacklevel=3)
     if fused is None:
         return "multi_tensor" if use_pallas else None
     if fused not in allowed:
         raise ValueError(f"fused={fused!r}; expected one of {allowed} or None")
     return fused
+
+
+# ---------------------------------------------------------------------------
+# kind-level execution: one implementation per fused-engine kind, shared by
+# every chain the compiler matches.  The jnp branch below is the bit-exact
+# reference the engine is validated against — its expression graphs must
+# not change.
+# ---------------------------------------------------------------------------
+
+_PER_LEAF_KINDS = ("sngm_global", "lars")
+
+
+def _jnp_kind_step(kind: str, grads: PyTree, momentum: PyTree, params: PyTree,
+                   *, lr, beta: float, weight_decay: float, eps: float,
+                   trust: float):
+    """Pure-jnp reference step for one engine kind.  Returns
+    (new_params, new_momentum, stats)."""
+    if kind == "lars":
+        def upd(v, g, w):
+            g = g.astype(jnp.float32)
+            wn = jnp.sqrt(leaf_sumsq(w))
+            gn = jnp.sqrt(leaf_sumsq(g))
+            local = trust * wn / (gn + weight_decay * wn + eps)
+            # scalars (biases/norm scales, ||w|| ~ 0 at init) fall back to 1
+            local = jnp.where(wn > 0, local, 1.0)
+            return beta * v + lr * local * (g + weight_decay * w)
+
+        new_u = jax.tree.map(upd, momentum, grads, params)
+        new_p = jax.tree.map(lambda w, v: (w - v).astype(w.dtype),
+                             params, new_u)
+        gnorm = global_norm(grads)
+    else:
+        g = _decayed(grads, params, weight_decay)
+        gnorm = global_norm(g)
+        if kind == "sngm_global":
+            inv = 1.0 / (gnorm + eps)
+            new_u = jax.tree.map(
+                lambda u, gi: beta * u + gi.astype(jnp.float32) * inv,
+                momentum, g)
+        elif kind == "sngm_per_tensor":
+            def upd(u, gi):
+                n = jnp.sqrt(leaf_sumsq(gi))
+                return beta * u + gi.astype(jnp.float32) * (1.0 / (n + eps))
+            new_u = jax.tree.map(upd, momentum, g)
+        else:  # msgd
+            new_u = jax.tree.map(
+                lambda v, gi: beta * v + gi.astype(jnp.float32), momentum, g)
+        new_p = jax.tree.map(lambda w, u: (w - lr * u).astype(w.dtype),
+                             params, new_u)
+    stats = {"grad_norm": gnorm, "lr": lr, "update_norm": global_norm(new_u)}
+    return new_p, new_u, stats
+
+
+def _per_leaf_kind_step(kind: str, grads: PyTree, momentum: PyTree,
+                        params: PyTree, *, lr, beta: float,
+                        weight_decay: float, eps: float, trust: float):
+    """The original one-kernel-per-tensor Pallas path (the O(n_leaves)
+    baseline the multi-tensor engine is benchmarked against)."""
+    if kind == "sngm_global":
+        from repro.kernels.fused_sngm import ops as _k
+        g = _decayed(grads, params, weight_decay)
+        gnorm = global_norm(g)
+        inv = 1.0 / (gnorm + eps)
+        new_p, new_u = _k.fused_sngm_tree(params, g, momentum, inv, beta, lr)
+    else:  # lars
+        from repro.kernels.fused_lars.ops import lars_update
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_v = jax.tree_util.tree_leaves(momentum)
+        ps, vs = [], []
+        for w, g, v in zip(flat_p, flat_g, flat_v):
+            wn, vn = lars_update(w, g, v, lr, beta=beta, wd=weight_decay,
+                                 trust=trust, eps=eps)
+            ps.append(wn.astype(w.dtype))
+            vs.append(vn)
+        new_p = jax.tree_util.tree_unflatten(treedef, ps)
+        new_v = jax.tree_util.tree_unflatten(treedef, vs)
+        new_u = new_v
+        gnorm = global_norm(grads)
+    stats = {"grad_norm": gnorm, "lr": lr, "update_norm": global_norm(new_u)}
+    return new_p, new_u, stats
+
+
+def _kind_optimizer(kind: str, schedule: Schedule, *, beta: float,
+                    weight_decay: float = 0.0, eps: float = 1e-12,
+                    trust: float = 0.001, fused_mode: Optional[str] = None,
+                    name: Optional[str] = None) -> Optimizer:
+    """Build the Optimizer for one fused-engine kind in the requested
+    execution mode.  This is ``compile_chain``'s target for matched
+    chains; all chains matching the same kind share this one
+    implementation instead of re-implementing the four-way
+    jnp/per_leaf/multi_tensor/resident dispatch."""
+    if fused_mode == "per_leaf" and kind not in _PER_LEAF_KINDS:
+        raise ValueError(f"fused='per_leaf' is not available for kind "
+                         f"{kind!r}; only {_PER_LEAF_KINDS} have per-leaf "
+                         f"kernels — use fused='multi_tensor'")
+    kw = dict(beta=beta, weight_decay=weight_decay, eps=eps, trust=trust)
+
+    def step_fn(grads, state, params):
+        lr = schedule(state.step)
+        if fused_mode == "multi_tensor":
+            if isinstance(state, FlatOptState):
+                return resident_step(kind, grads, state, lr=lr, **kw)
+            new_p, new_u, stats = multi_tensor_step(
+                kind, params, grads, state.momentum, lr=lr, **kw)
+            return new_p, OptState(state.step + 1, new_u), stats
+        step_impl = (_per_leaf_kind_step if fused_mode == "per_leaf"
+                     else _jnp_kind_step)
+        # a FlatOptState fed to a non-engine path materializes its
+        # momentum view and hands back a plain OptState
+        new_p, new_u, stats = step_impl(kind, grads, state.momentum, params,
+                                        lr=lr, **kw)
+        return new_p, OptState(state.step + 1, new_u), stats
+
+    init = init_flat_state if fused_mode == "multi_tensor" else _init
+    return Optimizer(name or kind, init, step_fn, kind=kind)
 
 
 # ---------------------------------------------------------------------------
@@ -201,55 +321,25 @@ def sngm(schedule: Schedule,
     if fused_mode == "per_leaf" and norm_mode != "global":
         raise ValueError("fused='per_leaf' supports norm_mode='global' only; "
                          "use fused='multi_tensor' for per_tensor")
-
-    def step_fn(grads, state, params):
-        lr = schedule(state.step)
-        if fused_mode == "multi_tensor":
-            kind = ("sngm_global" if norm_mode == "global"
-                    else "sngm_per_tensor")
-            if isinstance(state, FlatOptState):
-                return _flat_step(kind, grads, state, lr=lr, beta=beta,
-                                  weight_decay=weight_decay, eps=eps)
-            new_p, new_u, stats = multi_tensor_step(
-                kind, params, grads, state.momentum, lr=lr, beta=beta,
-                weight_decay=weight_decay, eps=eps)
-            return new_p, OptState(state.step + 1, new_u), stats
-
-        g = _decayed(grads, params, weight_decay)
-        if norm_mode == "global":
-            gnorm = global_norm(g)
-            inv = 1.0 / (gnorm + eps)
-            if fused_mode == "per_leaf":
-                from repro.kernels.fused_sngm import ops as _k
-                new_p, new_u = _k.fused_sngm_tree(params, g, state.momentum,
-                                                  inv, beta, lr)
-            else:
-                new_u = jax.tree.map(
-                    lambda u, gi: beta * u + gi.astype(jnp.float32) * inv,
-                    state.momentum, g)
-                new_p = jax.tree.map(
-                    lambda w, u: (w - lr * u).astype(w.dtype), params, new_u)
-        else:
-            gnorm = global_norm(g)  # reported only
-
-            def upd(u, gi):
-                n = jnp.sqrt(leaf_sumsq(gi))
-                return beta * u + gi.astype(jnp.float32) * (1.0 / (n + eps))
-            new_u = jax.tree.map(upd, state.momentum, g)
-            new_p = jax.tree.map(
-                lambda w, u: (w - lr * u).astype(w.dtype), params, new_u)
-        stats = {"grad_norm": gnorm, "lr": lr,
-                 "update_norm": global_norm(new_u)}
-        return new_p, OptState(state.step + 1, new_u), stats
-
-    init = init_flat_state if fused_mode == "multi_tensor" else _init
-    return Optimizer(f"sngm[{norm_mode}]", init, step_fn)
+    normalize = (T.normalize_by_global_norm if norm_mode == "global"
+                 else T.normalize_per_tensor)
+    tx = T.chain(T.add_decayed_weights(weight_decay),
+                 normalize(eps),
+                 T.trace(beta),
+                 T.scale_by_schedule(schedule))
+    return T.compile_chain(tx, fused=fused_mode, name=f"sngm[{norm_mode}]")
 
 
-def sngd(schedule: Schedule, weight_decay: float = 0.0, **kw) -> Optimizer:
+def sngd(schedule: Schedule,
+         weight_decay: float = 0.0,
+         eps: float = 1e-12,
+         norm_mode: str = "global",
+         use_pallas: bool = False,
+         fused: Optional[str] = None) -> Optimizer:
     """Stochastic normalized gradient descent (Hazan et al. 2015) =
     SNGM with beta = 0 (the paper's degenerate case)."""
-    opt = sngm(schedule, beta=0.0, weight_decay=weight_decay, **kw)
+    opt = sngm(schedule, beta=0.0, weight_decay=weight_decay, eps=eps,
+               norm_mode=norm_mode, use_pallas=use_pallas, fused=fused)
     return dataclasses.replace(opt, name="sngd")
 
 
@@ -264,29 +354,10 @@ def msgd(schedule: Schedule,
          fused: Optional[str] = None) -> Optimizer:
     """Momentum SGD:  v_{t+1} = beta v_t + g_t ;  w_{t+1} = w_t - eta v_{t+1}."""
     fused_mode = _resolve_fused(use_pallas, fused, allowed=("multi_tensor",))
-
-    def step_fn(grads, state, params):
-        lr = schedule(state.step)
-        if fused_mode == "multi_tensor":
-            if isinstance(state, FlatOptState):
-                return _flat_step("msgd", grads, state, lr=lr, beta=beta,
-                                  weight_decay=weight_decay)
-            new_p, new_v, stats = multi_tensor_step(
-                "msgd", params, grads, state.momentum, lr=lr, beta=beta,
-                weight_decay=weight_decay)
-            return new_p, OptState(state.step + 1, new_v), stats
-
-        g = _decayed(grads, params, weight_decay)
-        new_v = jax.tree.map(lambda v, gi: beta * v + gi.astype(jnp.float32),
-                             state.momentum, g)
-        new_p = jax.tree.map(lambda w, v: (w - lr * v).astype(w.dtype),
-                             params, new_v)
-        stats = {"grad_norm": global_norm(g), "lr": lr,
-                 "update_norm": global_norm(new_v)}
-        return new_p, OptState(state.step + 1, new_v), stats
-
-    init = init_flat_state if fused_mode == "multi_tensor" else _init
-    return Optimizer("msgd", init, step_fn)
+    tx = T.chain(T.add_decayed_weights(weight_decay),
+                 T.trace(beta),
+                 T.scale_by_schedule(schedule))
+    return T.compile_chain(tx, fused=fused_mode, name="msgd")
 
 
 # ---------------------------------------------------------------------------
@@ -306,102 +377,122 @@ def lars(schedule: Schedule,
         local_lr = trust * ||w|| / (||g|| + wd * ||w|| + eps)   per tensor
         v = beta v + eta * local_lr * (g + wd * w)
         w = w - v
+
+    Note the chain order: the schedule scales what ENTERS the momentum
+    (eta inside the v update), so ``scale_by_schedule`` precedes
+    ``trace`` — the shape the compiler maps to the ``lars`` kind.
     """
     fused_mode = _resolve_fused(use_pallas, fused)
-
-    def step_fn(grads, state, params):
-        lr = schedule(state.step)
-        if fused_mode == "multi_tensor":
-            if isinstance(state, FlatOptState):
-                return _flat_step("lars", grads, state, lr=lr, beta=beta,
-                                  weight_decay=weight_decay, eps=eps,
-                                  trust=trust)
-            new_p, new_v, stats = multi_tensor_step(
-                "lars", params, grads, state.momentum, lr=lr, beta=beta,
-                weight_decay=weight_decay, eps=eps, trust=trust)
-            return new_p, OptState(state.step + 1, new_v), stats
-
-        if fused_mode == "per_leaf":
-            from repro.kernels.fused_lars.ops import lars_update
-            flat_p, treedef = jax.tree_util.tree_flatten(params)
-            flat_g = jax.tree_util.tree_leaves(grads)
-            flat_v = jax.tree_util.tree_leaves(state.momentum)
-            ps, vs = [], []
-            for w, g, v in zip(flat_p, flat_g, flat_v):
-                wn, vn = lars_update(w, g, v, lr, beta=beta, wd=weight_decay,
-                                     trust=trust, eps=eps)
-                ps.append(wn.astype(w.dtype))
-                vs.append(vn)
-            new_p = jax.tree_util.tree_unflatten(treedef, ps)
-            new_v = jax.tree_util.tree_unflatten(treedef, vs)
-        else:
-            def upd(v, g, w):
-                g = g.astype(jnp.float32)
-                wn = jnp.sqrt(leaf_sumsq(w))
-                gn = jnp.sqrt(leaf_sumsq(g))
-                local = trust * wn / (gn + weight_decay * wn + eps)
-                # scalars (biases/norm scales, ||w|| ~ 0 at init) fall back to 1
-                local = jnp.where(wn > 0, local, 1.0)
-                return beta * v + lr * local * (g + weight_decay * w)
-
-            new_v = jax.tree.map(upd, state.momentum, grads, params)
-            new_p = jax.tree.map(lambda w, v: (w - v).astype(w.dtype),
-                                 params, new_v)
-        stats = {"grad_norm": global_norm(grads), "lr": lr,
-                 "update_norm": global_norm(new_v)}
-        return new_p, OptState(state.step + 1, new_v), stats
-
-    init = init_flat_state if fused_mode == "multi_tensor" else _init
-    return Optimizer("lars", init, step_fn)
+    tx = T.chain(T.trust_ratio(trust, weight_decay, eps),
+                 T.scale_by_schedule(schedule),
+                 T.trace(beta))
+    return T.compile_chain(tx, fused=fused_mode, name="lars")
 
 
 # ---------------------------------------------------------------------------
 # LAMB — beyond-paper reference point (Adam-based layer-wise scaling)
 # ---------------------------------------------------------------------------
 
-class LambState(NamedTuple):
-    step: jnp.ndarray
-    m: PyTree
-    v: PyTree
-
-
 def lamb(schedule: Schedule,
          b1: float = 0.9, b2: float = 0.999,
-         weight_decay: float = 0.0, eps: float = 1e-6) -> Optimizer:
-    def init(params):
-        return LambState(jnp.zeros((), jnp.int32),
-                         tree_zeros_like(params), tree_zeros_like(params))
+         weight_decay: float = 0.0, eps: float = 1e-6,
+         fused: Optional[str] = None) -> Optimizer:
+    """LAMB (You et al. 2020): bias-corrected Adam direction, decoupled
+    weight decay, per-tensor trust-ratio rescale, schedule last.
 
-    def step_fn(grads, state, params):
-        lr = schedule(state.step)
-        t = state.step.astype(jnp.float32) + 1.0
-        new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
-                             state.m, grads)
-        new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
-                             state.v, grads)
-
-        def upd(w, m, v):
-            mh = m / (1 - b1 ** t)
-            vh = v / (1 - b2 ** t)
-            r = mh / (jnp.sqrt(vh) + eps) + weight_decay * w
-            wn = jnp.linalg.norm(w.astype(jnp.float32))
-            rn = jnp.linalg.norm(r)
-            ratio = jnp.where((wn > 0) & (rn > 0), wn / rn, 1.0)
-            return w - lr * ratio * r
-
-        new_p = jax.tree.map(upd, params, new_m, new_v)
-        stats = {"grad_norm": global_norm(grads), "lr": lr}
-        return new_p, LambState(state.step + 1, new_m, new_v), stats
-
-    return Optimizer("lamb", init, step_fn)
+    Runs on the chain interpreter (there is no fused LAMB kind yet, so a
+    ``fused=`` request warns and falls back to jnp).  All norms use the
+    canonical ``leaf_sumsq`` chunked reduction and all moment math is
+    f32, so LAMB's norms are bit-consistent with every other path; stats
+    report {grad_norm, lr, update_norm} like the rest of the family,
+    with update_norm taken pre-lr (the trust-rescaled direction).
+    """
+    tx = T.chain(T.scale_by_adam(b1, b2, eps),
+                 T.add_decayed_weights(weight_decay),
+                 T.scale_by_trust_ratio(),
+                 T.scale_by_schedule(schedule))
+    return T.compile_chain(tx, fused=fused, name="lamb")
 
 
 # ---------------------------------------------------------------------------
-# registry
+# registry + serializable specs
 # ---------------------------------------------------------------------------
 
-def make_optimizer(name: str, schedule: Schedule, **kw) -> Optimizer:
-    table = {"sngm": sngm, "sngd": sngd, "msgd": msgd, "lars": lars, "lamb": lamb}
-    if name not in table:
-        raise KeyError(f"unknown optimizer {name!r}; available {sorted(table)}")
-    return table[name](schedule, **kw)
+OPTIMIZERS = {"sngm": sngm, "sngd": sngd, "msgd": msgd, "lars": lars,
+              "lamb": lamb}
+
+
+def optimizer_names() -> Tuple[str, ...]:
+    """Registry keys, sorted — the single source for CLI choices."""
+    return tuple(sorted(OPTIMIZERS))
+
+
+def register_optimizer(name: str, builder: Callable[..., Optimizer]) -> None:
+    """Add a builder (``builder(schedule, **kwargs) -> Optimizer``) to the
+    registry, making it reachable from ``make_optimizer``, CLI flags, and
+    ``OptimizerSpec`` round-trips."""
+    OPTIMIZERS[name] = builder
+
+
+def builder_accepts(name: str, key: str) -> bool:
+    """Whether the registered builder takes ``key`` as a keyword (the
+    builders have explicit signatures, so this is exact — used by the
+    launcher to map its fixed flag set onto each optimizer)."""
+    return key in inspect.signature(OPTIMIZERS[name]).parameters
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerSpec:
+    """The JSON-safe identity of an optimizer: registry ``name`` plus the
+    builder kwargs, with the schedule as a declarative
+    ``{"name", "kwargs"}`` spec under ``kwargs["schedule"]`` (see
+    ``core.schedules.make_schedule``).  Persisted in ``train_meta.json``
+    so ``--resume`` rebuilds the exact optimizer of the original run."""
+    name: str
+    kwargs: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.name not in OPTIMIZERS:
+            raise KeyError(f"unknown optimizer {self.name!r}; "
+                           f"available {optimizer_names()}")
+        if "schedule" not in self.kwargs:
+            raise ValueError("OptimizerSpec.kwargs must carry a 'schedule' "
+                             "spec ({'name': ..., 'kwargs': {...}})")
+
+    def to_json(self) -> dict:
+        import json
+        out = {"name": self.name, "kwargs": dict(self.kwargs)}
+        json.dumps(out)   # fail fast on non-serializable kwargs
+        return out
+
+    @classmethod
+    def from_json(cls, d: Mapping[str, Any]) -> "OptimizerSpec":
+        return cls(name=d["name"], kwargs=dict(d["kwargs"]))
+
+    def build(self) -> Optimizer:
+        kwargs = dict(self.kwargs)
+        schedule = make_schedule(kwargs.pop("schedule"))
+        return OPTIMIZERS[self.name](schedule, **kwargs)
+
+
+def make_optimizer(name: Union[str, OptimizerSpec],
+                   schedule: Optional[Schedule] = None, **kw) -> Optimizer:
+    """Build an optimizer from the registry.
+
+    Two forms:
+      * ``make_optimizer("sngm", schedule, beta=0.9, ...)`` — direct.
+      * ``make_optimizer(spec)`` — from a serializable ``OptimizerSpec``
+        (schedule built from its declarative spec; no extra kwargs).
+    """
+    if isinstance(name, OptimizerSpec):
+        if schedule is not None or kw:
+            raise TypeError("make_optimizer(spec) takes no extra arguments; "
+                            "the spec already carries schedule and kwargs")
+        return name.build()
+    if name not in OPTIMIZERS:
+        raise KeyError(f"unknown optimizer {name!r}; "
+                       f"available {optimizer_names()}")
+    if schedule is None:
+        raise TypeError("make_optimizer(name, schedule, ...) requires a "
+                        "schedule")
+    return OPTIMIZERS[name](schedule, **kw)

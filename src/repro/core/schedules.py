@@ -56,3 +56,35 @@ def cosine(lr0: float, total_steps: int, final_frac: float = 0.0) -> Schedule:
         c = 0.5 * (1 + jnp.cos(jnp.pi * frac))
         return lr0 * (final_frac + (1 - final_frac) * c)
     return sched
+
+
+# ---------------------------------------------------------------------------
+# registry + declarative specs (so OptimizerSpec can serialize a schedule)
+# ---------------------------------------------------------------------------
+
+SCHEDULES = {
+    "constant": constant,
+    "poly_power": poly_power,
+    "step_decay": step_decay,
+    "warmup": warmup,
+    "cosine": cosine,
+}
+
+
+def schedule_names():
+    return tuple(sorted(SCHEDULES))
+
+
+def make_schedule(spec) -> Schedule:
+    """Build a schedule from a JSON-safe ``{"name": ..., "kwargs": {...}}``
+    spec (the form ``OptimizerSpec`` persists in ``train_meta.json``).
+    ``warmup`` nests its base schedule as another spec under
+    ``kwargs["base"]``."""
+    name = spec["name"]
+    if name not in SCHEDULES:
+        raise KeyError(f"unknown schedule {name!r}; "
+                       f"available {schedule_names()}")
+    kwargs = dict(spec.get("kwargs", {}))
+    if name == "warmup":
+        kwargs["base"] = make_schedule(kwargs["base"])
+    return SCHEDULES[name](**kwargs)

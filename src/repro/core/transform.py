@@ -1,0 +1,501 @@
+"""Composable gradient-transform algebra and the chain -> engine compiler.
+
+The paper's SNGM (Algorithm 1) is structurally a pipeline — normalize ->
+momentum -> scale-by-schedule — and so are all its large-batch baselines.
+This module makes that pipeline a first-class object: a
+``GradientTransform`` is an optax-style ``(init, update)`` pair, and
+``chain()`` composes them left to right::
+
+    tx = chain(add_decayed_weights(1e-4),
+               normalize_by_global_norm(),
+               trace(beta=0.9),
+               scale_by_schedule(poly_power(1.6, 1000)))
+    opt = compile_chain(tx, fused="multi_tensor")   # an Optimizer
+
+Every norm-taking transform uses the engine's canonical ``leaf_sumsq``
+chunked reduction, so numerics are path-independent by construction.
+
+Execution is two-tier:
+
+  * ``compile_chain`` pattern-matches the chain's shape against the
+    multi-tensor engine's fused kinds (``sngm_global``,
+    ``sngm_per_tensor``, ``msgd``, ``lars``).  A match compiles to the
+    kind-level optimizer in ``core.optim`` — the bit-exact jnp reference
+    path, the O(1)-launch Pallas engine, and the ``FlatOptState``
+    resident fast path all stay available, exactly as before the chain
+    API existed.
+  * A chain that matches no kind falls back to the **interpreter**: the
+    transforms run leaf-wise in pure jnp, state is a ``ChainOptState``
+    (a pytree, so it jits / shards / checkpoints like any other), and the
+    final update is applied as ``w <- (w - u).astype(w.dtype)``.  If a
+    fused mode was requested for such a chain a ``UserWarning`` is
+    emitted — novel compositions train correctly but without fusion.
+
+Weight-decay coupling is positional, not a flag: ``add_decayed_weights``
+placed *before* a normalize/trust transform is coupled decay (the decayed
+gradient is what gets normalized — the paper's setup), placed *after* it
+is decoupled decay (pure shrinkage, AdamW-style).
+
+Stats: transforms report into a dict merged left to right (later
+transforms win).  ``normalize_*`` / ``clip_by_global_norm`` /
+``trust_ratio`` report ``grad_norm`` of their input; ``trace`` reports
+``update_norm`` of the momentum; ``scale_by_schedule`` reports ``lr``
+and the pre-scaling ``update_norm`` — so every chain built by the
+``core.optim`` builders reports the same three keys the monolithic
+optimizers always did.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.multi_tensor import global_norm, leaf_sumsq
+from repro.core.schedules import Schedule
+
+PyTree = Any
+Stats = Dict[str, jnp.ndarray]
+InitFn = Callable[[PyTree], Any]
+UpdateFn = Callable[[PyTree, Any, PyTree], Tuple[PyTree, Any, Stats]]
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientTransform:
+    """One stage of an optimizer pipeline.
+
+    ``update(updates, state, params) -> (updates, new_state, stats)``
+    maps an update pytree (initially the gradients) to a transformed
+    update pytree.  ``meta`` carries the transform's static parameters as
+    ``(key, value)`` pairs for ``compile_chain``'s pattern matcher;
+    ``parts`` is non-empty only for ``chain()`` results.
+    """
+    name: str
+    init: InitFn
+    update: UpdateFn
+    meta: Tuple[Tuple[str, Any], ...] = ()
+    parts: Tuple["GradientTransform", ...] = ()
+
+    def get(self, key: str, default=None):
+        return dict(self.meta).get(key, default)
+
+
+# ---------------------------------------------------------------------------
+# transform states (NamedTuples => automatically pytrees: they jit, shard,
+# and checkpoint like any parameter tree)
+# ---------------------------------------------------------------------------
+
+class EmptyState(NamedTuple):
+    """Stateless transform marker."""
+
+
+class TraceState(NamedTuple):
+    momentum: PyTree               # f32, mirrors params
+
+
+class ScaleByScheduleState(NamedTuple):
+    count: jnp.ndarray             # scalar int32
+
+
+class ScaleByAdamState(NamedTuple):
+    count: jnp.ndarray             # scalar int32
+    m: PyTree                      # f32 first moment
+    v: PyTree                      # f32 second moment
+
+
+class EmaParamsState(NamedTuple):
+    ema: PyTree                    # f32 shadow of the params
+
+
+class ChainOptState(NamedTuple):
+    """Interpreter-path optimizer state: step counter + one sub-state per
+    chained transform (in chain order)."""
+    step: jnp.ndarray
+    inner: Tuple[Any, ...]
+
+
+def _zeros_f32_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), tree)
+
+
+def _stateless(name: str, update_fn, meta=()) -> GradientTransform:
+    def init(params):
+        del params
+        return EmptyState()
+
+    def update(updates, state, params):
+        out, stats = update_fn(updates, params)
+        return out, state, stats
+
+    return GradientTransform(name, init, update, tuple(meta))
+
+
+# ---------------------------------------------------------------------------
+# the transforms
+# ---------------------------------------------------------------------------
+
+def add_decayed_weights(weight_decay: float = 0.0) -> GradientTransform:
+    """u <- u + wd * w, leaf-wise in the incoming dtype.
+
+    Coupled vs decoupled is positional (module docstring): before a
+    normalize/trust transform this is the paper's coupled decay (§5);
+    after ``trace``/``scale_by_adam`` it is decoupled shrinkage."""
+    wd = float(weight_decay)
+
+    def fn(updates, params):
+        if wd == 0.0:
+            return updates, {}
+        return jax.tree.map(lambda g, w: g + wd * w, updates, params), {}
+
+    return _stateless("add_decayed_weights", fn,
+                      meta=(("weight_decay", wd),))
+
+
+def normalize_by_global_norm(eps: float = 1e-12) -> GradientTransform:
+    """u <- u / (||u||_2 + eps) over the WHOLE tree — Algorithm 1's
+    normalization (Lemma 4: the traced momentum stays <= 1/(1-beta))."""
+    def fn(updates, params):
+        del params
+        gnorm = global_norm(updates)
+        inv = 1.0 / (gnorm + eps)
+        out = jax.tree.map(lambda g: g.astype(jnp.float32) * inv, updates)
+        return out, {"grad_norm": gnorm}
+
+    return _stateless("normalize_by_global_norm", fn, meta=(("eps", eps),))
+
+
+def normalize_per_tensor(eps: float = 1e-12) -> GradientTransform:
+    """Block-normalized SNGM variant: each leaf divided by its own norm
+    (LARS-flavoured; Lemma 4 then holds per tensor).  Reports the global
+    norm, matching the monolithic optimizer's stats."""
+    def fn(updates, params):
+        del params
+        gnorm = global_norm(updates)
+
+        def upd(g):
+            n = jnp.sqrt(leaf_sumsq(g))
+            return g.astype(jnp.float32) * (1.0 / (n + eps))
+
+        return jax.tree.map(upd, updates), {"grad_norm": gnorm}
+
+    return _stateless("normalize_per_tensor", fn, meta=(("eps", eps),))
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransform:
+    """u <- u * min(1, max_norm / ||u||) — the standard large-batch guard
+    against loss spikes (Keskar et al. 2017 pathologies)."""
+    max_norm = float(max_norm)
+
+    def fn(updates, params):
+        del params
+        gnorm = global_norm(updates)
+        scale = max_norm / jnp.maximum(gnorm, max_norm)   # <= 1, no eps
+        out = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                      ).astype(g.dtype), updates)
+        return out, {"grad_norm": gnorm}
+
+    return _stateless("clip_by_global_norm", fn, meta=(("max_norm", max_norm),))
+
+
+def trace(beta: float = 0.9, nesterov: bool = False) -> GradientTransform:
+    """Polyak momentum (f32 accumulator): m <- beta * m + u; output m, or
+    beta * m + u for ``nesterov=True``."""
+    beta = float(beta)
+
+    def init(params):
+        return TraceState(momentum=_zeros_f32_like(params))
+
+    def update(updates, state, params):
+        del params
+        new_m = jax.tree.map(lambda m, u: beta * m + u.astype(jnp.float32),
+                             state.momentum, updates)
+        out = (jax.tree.map(lambda m, u: beta * m + u.astype(jnp.float32),
+                            new_m, updates) if nesterov else new_m)
+        return out, TraceState(new_m), {"update_norm": global_norm(out)}
+
+    return GradientTransform("trace", init, update,
+                             (("beta", beta), ("nesterov", bool(nesterov))))
+
+
+def trust_ratio(trust: float = 0.001, weight_decay: float = 0.0,
+                eps: float = 1e-12) -> GradientTransform:
+    """LARS layer-wise adaptive scaling (You et al. 2017), matching the
+    pytorch-lars implementation the paper benchmarked against::
+
+        local = trust * ||w|| / (||g|| + wd * ||w|| + eps)    per tensor
+        u <- local * (g + wd * w)        (local = 1 where ||w|| == 0)
+
+    Weight decay is entangled with the ratio here (it appears in both the
+    denominator and the decayed gradient), which is why LARS chains do
+    not carry a separate ``add_decayed_weights`` stage."""
+    trust, wd = float(trust), float(weight_decay)
+
+    def fn(updates, params):
+        def upd(g, w):
+            g32 = g.astype(jnp.float32)
+            wn = jnp.sqrt(leaf_sumsq(w))
+            gn = jnp.sqrt(leaf_sumsq(g32))
+            local = trust * wn / (gn + wd * wn + eps)
+            local = jnp.where(wn > 0, local, 1.0)
+            return local * (g32 + wd * w)
+
+        out = jax.tree.map(upd, updates, params)
+        return out, {"grad_norm": global_norm(updates)}
+
+    return _stateless("trust_ratio", fn,
+                      (("trust", trust), ("weight_decay", wd), ("eps", eps)))
+
+
+def scale_by_trust_ratio(eps: float = 0.0) -> GradientTransform:
+    """LAMB-style per-tensor rescale: u <- (||w|| / ||u||) * u, with the
+    ratio defaulting to 1 where either norm is zero (You et al. 2020)."""
+    eps = float(eps)
+
+    def fn(updates, params):
+        def upd(u, w):
+            wn = jnp.sqrt(leaf_sumsq(w))
+            un = jnp.sqrt(leaf_sumsq(u))
+            ratio = jnp.where((wn > 0) & (un > 0), wn / (un + eps), 1.0)
+            return ratio * u.astype(jnp.float32)
+
+        return jax.tree.map(upd, updates, params), {}
+
+    return _stateless("scale_by_trust_ratio", fn, (("eps", eps),))
+
+
+def scale_by_adam(b1: float = 0.9, b2: float = 0.999,
+                  eps: float = 1e-6) -> GradientTransform:
+    """Bias-corrected Adam direction (f32 moments): u <- m_hat /
+    (sqrt(v_hat) + eps).  Gradients are cast to f32 before both moments."""
+    b1, b2, eps = float(b1), float(b2), float(eps)
+
+    def init(params):
+        return ScaleByAdamState(count=jnp.zeros((), jnp.int32),
+                                m=_zeros_f32_like(params),
+                                v=_zeros_f32_like(params))
+
+    def update(updates, state, params):
+        del params
+        t = state.count.astype(jnp.float32) + 1.0
+        new_m = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.m, updates)
+        new_v = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.v, updates)
+        out = jax.tree.map(
+            lambda m, v: (m / (1 - b1 ** t)) / (jnp.sqrt(v / (1 - b2 ** t))
+                                                + eps),
+            new_m, new_v)
+        return out, ScaleByAdamState(state.count + 1, new_m, new_v), {}
+
+    return GradientTransform("scale_by_adam", init, update,
+                             (("b1", b1), ("b2", b2), ("eps", eps)))
+
+
+def scale_by_schedule(schedule: Schedule) -> GradientTransform:
+    """u <- lr_t * u with lr_t from the schedule at the transform's own
+    step count.  Reports ``lr`` and the PRE-scaling ``update_norm`` (the
+    norm of what lr multiplies — for the canonical chains that is the
+    momentum, matching the monolithic optimizers' stats)."""
+    def init(params):
+        del params
+        return ScaleByScheduleState(count=jnp.zeros((), jnp.int32))
+
+    def update(updates, state, params):
+        del params
+        lr = schedule(state.count)
+        out = jax.tree.map(lambda u: lr * u, updates)
+        return out, ScaleByScheduleState(state.count + 1), \
+            {"lr": lr, "update_norm": global_norm(updates)}
+
+    return GradientTransform("scale_by_schedule", init, update,
+                             (("schedule", schedule),))
+
+
+def ema_params(decay: float = 0.999) -> GradientTransform:
+    """Polyak-averaged shadow parameters for evaluation: maintains
+    ``ema <- decay * ema + (1 - decay) * w`` (f32) and passes updates
+    through untouched.  Read the shadow tree out of the chain state
+    (``ChainOptState.inner[i].ema``)."""
+    decay = float(decay)
+
+    def init(params):
+        return EmaParamsState(
+            ema=jax.tree.map(lambda p: p.astype(jnp.float32), params))
+
+    def update(updates, state, params):
+        new_ema = jax.tree.map(
+            lambda e, w: decay * e + (1 - decay) * w.astype(jnp.float32),
+            state.ema, params)
+        return updates, EmaParamsState(new_ema), {}
+
+    return GradientTransform("ema_params", init, update, (("decay", decay),))
+
+
+# ---------------------------------------------------------------------------
+# composition
+# ---------------------------------------------------------------------------
+
+def chain(*transforms: GradientTransform) -> GradientTransform:
+    """Compose transforms left to right.  Nested chains are flattened, so
+    the compiler always sees the primitive sequence."""
+    parts: Tuple[GradientTransform, ...] = ()
+    for t in transforms:
+        parts += t.parts if t.parts else (t,)
+
+    def init(params):
+        return tuple(p.init(params) for p in parts)
+
+    def update(updates, state, params):
+        stats: Stats = {}
+        new_state = []
+        for p, s in zip(parts, state):
+            updates, ns, st = p.update(updates, s, params)
+            stats.update(st)
+            new_state.append(ns)
+        return updates, tuple(new_state), stats
+
+    return GradientTransform("chain", init, update, parts=parts)
+
+
+# ---------------------------------------------------------------------------
+# the chain -> multi-tensor compiler
+# ---------------------------------------------------------------------------
+
+# Chain shapes the compiler recognizes, mapped to the engine's fused kinds.
+# ``add_decayed_weights`` is optional where listed (absent == wd 0); a
+# nesterov trace or any other deviation falls through to the interpreter.
+_PATTERNS = (
+    ("sngm_global",
+     ("add_decayed_weights?", "normalize_by_global_norm", "trace",
+      "scale_by_schedule")),
+    ("sngm_per_tensor",
+     ("add_decayed_weights?", "normalize_per_tensor", "trace",
+      "scale_by_schedule")),
+    ("msgd",
+     ("add_decayed_weights?", "trace", "scale_by_schedule")),
+    ("lars",
+     ("trust_ratio", "scale_by_schedule", "trace")),
+)
+
+
+def _try_match(parts, pattern):
+    """Return {name: transform} for a full match of ``pattern`` (with
+    optional '?'-suffixed stages) against the chain parts, else None."""
+    got: Dict[str, GradientTransform] = {}
+    i = 0
+    for want in pattern:
+        optional = want.endswith("?")
+        want = want.rstrip("?")
+        if i < len(parts) and parts[i].name == want:
+            got[want] = parts[i]
+            i += 1
+        elif not optional:
+            return None
+    return got if i == len(parts) else None
+
+
+def match_chain(tx: GradientTransform) -> Optional[Tuple[str, Dict[str, Any]]]:
+    """Pattern-match a chain onto a fused kind.  Returns ``(kind,
+    params)`` with params ``{schedule, beta, weight_decay, eps, trust}``,
+    or None when the chain is a novel composition."""
+    parts = tx.parts if tx.parts else (tx,)
+    for kind, pattern in _PATTERNS:
+        got = _try_match(parts, pattern)
+        if got is None:
+            continue
+        if got["trace"].get("nesterov"):
+            return None                       # no fused nesterov kind
+        kp = {"schedule": got["scale_by_schedule"].get("schedule"),
+              "beta": got["trace"].get("beta"),
+              "weight_decay": 0.0, "eps": 1e-12, "trust": 0.001}
+        if "add_decayed_weights" in got:
+            kp["weight_decay"] = got["add_decayed_weights"].get("weight_decay")
+        for src in ("normalize_by_global_norm", "normalize_per_tensor"):
+            if src in got:
+                kp["eps"] = got[src].get("eps")
+        if "trust_ratio" in got:
+            tr = got["trust_ratio"]
+            kp.update(trust=tr.get("trust"),
+                      weight_decay=tr.get("weight_decay"),
+                      eps=tr.get("eps"))
+        return kind, kp
+    return None
+
+
+def compile_chain(tx: GradientTransform, *, fused: Optional[str] = None,
+                  name: Optional[str] = None, interpret: bool = False):
+    """Compile a chain into an ``Optimizer``.
+
+    Known shapes (``match_chain``) compile onto the kind-level optimizer:
+    bit-identical to the pre-chain monolithic implementations in every
+    execution mode — pure jnp, ``fused="per_leaf"``,
+    ``fused="multi_tensor"``, and the ``FlatOptState`` resident path with
+    its O(1) Pallas launches per step.  Novel shapes run on the jnp
+    interpreter (``ChainOptState``); requesting a fused mode for one
+    warns and falls back rather than silently changing numerics.
+    ``interpret=True`` skips the matcher and runs ANY chain on the
+    interpreter — the oracle the compiler is validated against.
+    """
+    from repro.core import optim   # deferred: optim builds chains from here
+
+    matched = None if interpret else match_chain(tx)
+    if matched is not None:
+        kind, kp = matched
+        return optim._kind_optimizer(
+            kind, kp["schedule"], beta=kp["beta"],
+            weight_decay=kp["weight_decay"], eps=kp["eps"], trust=kp["trust"],
+            fused_mode=fused, name=name or kind)
+    if fused is not None:
+        warnings.warn(
+            f"chain {tuple(p.name for p in (tx.parts or (tx,)))} does not "
+            f"match any fused kind; fused={fused!r} is ignored and the "
+            f"chain runs on the jnp interpreter", UserWarning, stacklevel=2)
+
+    def init(params):
+        return ChainOptState(step=jnp.zeros((), jnp.int32),
+                             inner=tx.init(params))
+
+    def step_fn(grads, state, params):
+        updates, inner, stats = tx.update(grads, state.inner, params)
+        new_p = jax.tree.map(lambda w, u: (w - u).astype(w.dtype),
+                             params, updates)
+        stats = dict(stats)
+        if "grad_norm" not in stats:
+            stats["grad_norm"] = global_norm(grads)
+        if "update_norm" not in stats:
+            stats["update_norm"] = global_norm(updates)
+        if "lr" not in stats:
+            stats["lr"] = jnp.float32(float("nan"))
+        return new_p, ChainOptState(state.step + 1, inner), stats
+
+    return optim.Optimizer(name=name or "chain", init=init, step=step_fn)
+
+
+def as_optimizer(opt_or_tx, *, fused: Optional[str] = None):
+    """Accept either an ``Optimizer`` or a raw ``GradientTransform`` chain
+    (compiled on the spot) — the coercion ``make_train_step`` applies so
+    novel chains plug straight into training."""
+    if isinstance(opt_or_tx, GradientTransform):
+        return compile_chain(opt_or_tx, fused=fused)
+    return opt_or_tx
+
+
+def place_chain_state(state: ChainOptState, shardings) -> ChainOptState:
+    """Re-place a restored ChainOptState onto a mesh: any sub-state field
+    whose tree structure mirrors the parameter tree (momentum, Adam
+    moments, EMA shadows) is device_put with the parameter shardings;
+    counters and scalars keep their default placement."""
+    pstruct = jax.tree_util.tree_structure(shardings)
+
+    def place_field(x):
+        if jax.tree_util.tree_structure(x) == pstruct:
+            return jax.device_put(x, shardings)
+        return x
+
+    inner = tuple(type(s)(*(place_field(getattr(s, f)) for f in s._fields))
+                  for s in state.inner)
+    return ChainOptState(step=state.step, inner=inner)

@@ -30,8 +30,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs import ARCHS, get_config, smoke_variant
 from repro.core import make_optimizer
-from repro.core.optim import FlatOptState, OptState, from_pytree, to_pytree
-from repro.core.schedules import poly_power
+from repro.core.optim import (FlatOptState, OptState, OptimizerSpec,
+                              builder_accepts, from_pytree, optimizer_names,
+                              to_pytree)
+from repro.core.transform import ChainOptState, place_chain_state
 from repro.data import SyntheticLM
 from repro.launch.mesh import data_axes_of
 from repro.models import model_defs
@@ -46,7 +48,8 @@ def _restore(path: str, params, state):
     checkpoint holds (OptState pytree vs flat-buffer-resident
     FlatOptState): detect the saved form from the archive's key set, load
     via a matching template, and convert to the live form with
-    to_pytree/from_pytree (both lossless)."""
+    to_pytree/from_pytree (both lossless).  ChainOptState (interpreter-run
+    chains: lamb, novel compositions) has one form and loads directly."""
     import os
 
     import numpy as np
@@ -72,7 +75,7 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--n-micro", type=int, default=2)
     ap.add_argument("--optimizer", default="sngm",
-                    choices=["sngm", "sngd", "msgd", "lars", "lamb"])
+                    choices=list(optimizer_names()))
     ap.add_argument("--fused", default="none",
                     choices=["none", "per_leaf", "multi_tensor"],
                     help="optimizer execution path: pure jnp (none), one "
@@ -122,6 +125,7 @@ def main(argv=None):
 
     fused = None if args.fused == "none" else args.fused
     horizon = args.total_steps or args.steps
+    saved_meta = {}
     if args.resume and args.ckpt:
         # the schedule horizon is part of the run's identity: adopt the
         # saved one when --total-steps is omitted, warn on a mismatch —
@@ -130,7 +134,8 @@ def main(argv=None):
         tm_path = os.path.join(args.ckpt, "train_meta.json")
         if os.path.exists(tm_path):
             with open(tm_path) as f:
-                saved_horizon = json.load(f).get("total_steps")
+                saved_meta = json.load(f)
+            saved_horizon = saved_meta.get("total_steps")
             if saved_horizon:
                 if not args.total_steps:
                     horizon = saved_horizon
@@ -138,27 +143,45 @@ def main(argv=None):
                     print(f"[train] WARNING: --total-steps {horizon} != "
                           f"checkpoint horizon {saved_horizon}; the lr "
                           f"schedule will not match the original run")
-    if args.optimizer == "lamb":
-        if fused:
-            raise SystemExit("--fused is not supported for lamb")
-        opt = make_optimizer("lamb", poly_power(args.lr, horizon, 1.1),
-                             weight_decay=args.weight_decay)
+    if args.resume and saved_meta.get("optimizer_spec"):
+        # the optimizer's identity travels with the run: reconstruct it
+        # from the saved spec so the resumed steps are bit-identical to
+        # an uninterrupted run.  Only the execution mode (--fused) stays
+        # a per-run hardware choice; the schedule horizon is re-pinned
+        # in case the user forced a different --total-steps above.
+        spec = OptimizerSpec.from_json(saved_meta["optimizer_spec"])
+        if spec.name != args.optimizer and \
+                args.optimizer != ap.get_default("optimizer"):
+            print(f"[train] WARNING: --optimizer {args.optimizer} ignored; "
+                  f"resuming the checkpoint's {spec.name!r} spec")
+        kwargs = dict(spec.kwargs)
+        if builder_accepts(spec.name, "fused"):
+            kwargs["fused"] = fused
+        sched = dict(kwargs["schedule"])
+        skw = dict(sched.get("kwargs", {}))
+        if "total_steps" in skw and skw["total_steps"] != horizon:
+            skw["total_steps"] = horizon
+            sched["kwargs"] = skw
+            kwargs["schedule"] = sched
+        spec = OptimizerSpec(spec.name, kwargs)
     else:
-        kw = dict(beta=args.beta, weight_decay=args.weight_decay, fused=fused)
-        if args.optimizer == "sngd":
-            kw.pop("beta")
-        opt = make_optimizer(args.optimizer,
-                             poly_power(args.lr, horizon, 1.1), **kw)
+        kwargs = {"schedule": {"name": "poly_power",
+                               "kwargs": {"lr0": args.lr,
+                                          "total_steps": horizon,
+                                          "power": 1.1}}}
+        for k, v in (("beta", args.beta),
+                     ("weight_decay", args.weight_decay),
+                     ("fused", fused)):
+            if builder_accepts(args.optimizer, k):
+                kwargs[k] = v
+        spec = OptimizerSpec(args.optimizer, kwargs)
+    opt = make_optimizer(spec)
     state = opt.init(params)
     start = 0
     if args.resume:
         if not args.ckpt:
             raise SystemExit("--resume requires --ckpt")
-        if args.optimizer == "lamb":
-            restored, start = load_checkpoint(args.ckpt,
-                                              {"params": params, "opt": state})
-        else:
-            restored, start = _restore(args.ckpt, params, state)
+        restored, start = _restore(args.ckpt, params, state)
         params, state = restored["params"], restored["opt"]
         if mesh is not None:
             # re-place onto the mesh: load_checkpoint materialized every
@@ -172,10 +195,11 @@ def main(argv=None):
             elif isinstance(state, OptState):
                 state = OptState(state.step,
                                  jax.device_put(state.momentum, psh))
-            else:  # LambState: m and v both mirror the param tree
-                state = type(state)(state.step,
-                                    jax.device_put(state.m, psh),
-                                    jax.device_put(state.v, psh))
+            elif isinstance(state, ChainOptState):
+                # interpreter-run chains (lamb, novel compositions): every
+                # sub-state tree mirroring the params (moments, EMA
+                # shadows) takes the param shardings
+                state = place_chain_state(state, psh)
         print(f"[train] resumed {args.ckpt} at step {start}")
     step = jax.jit(make_train_step(cfg, rt, opt, n_micro=args.n_micro,
                                    grad_specs=gspecs))
@@ -210,8 +234,8 @@ def main(argv=None):
         save_checkpoint(args.ckpt, {"params": params, "opt": save_state},
                         step=max(start, args.steps))
         with open(os.path.join(args.ckpt, "train_meta.json"), "w") as f:
-            json.dump({"total_steps": horizon, "optimizer": args.optimizer,
-                       "lr": args.lr}, f)
+            json.dump({"total_steps": horizon, "optimizer": spec.name,
+                       "lr": args.lr, "optimizer_spec": spec.to_json()}, f)
         print(f"[train] checkpoint -> {args.ckpt}")
     return losses
 

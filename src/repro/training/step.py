@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.optim import Optimizer
+from repro.core.transform import as_optimizer
 from repro.models.runtime import Runtime
 from repro.models.transformer import forward, unembed_matrix
 from repro.training.loss import lm_loss
@@ -62,6 +63,11 @@ def make_train_step(cfg: ModelConfig, rt: Runtime, opt: Optimizer,
                     n_micro: int = 1, grad_specs=None):
     """Returns train_step(params, opt_state, batch) -> (params', state', stats).
 
+    ``opt`` is an ``Optimizer`` — or a raw ``GradientTransform`` chain,
+    which is compiled on the spot (``core.transform.as_optimizer``): a
+    recognized shape lands on the fused-kind implementation, a novel
+    composition trains through the jnp chain interpreter.
+
     batch["tokens"]: (B, S) global batch; accumulated over ``n_micro``
     micro-batches of size B/n_micro inside one jit step.
 
@@ -70,6 +76,7 @@ def make_train_step(cfg: ModelConfig, rt: Runtime, opt: Optimizer,
     gradient reduction lowers as reduce-scatter instead of a full
     all-reduce (§Perf: 16x collective-bytes difference at n_micro=16).
     """
+    opt = as_optimizer(opt)
     grad_fn = jax.value_and_grad(partial(loss_fn, cfg=cfg, rt=rt), has_aux=True)
 
     def constrain_g(g):

@@ -93,6 +93,24 @@ def test_lamb_runs_and_is_finite():
     assert np.all(np.isfinite(np.asarray(p["w"])))
 
 
+def test_lamb_reports_full_stats_with_canonical_norms():
+    """lamb is a chain now: it must report {grad_norm, lr, update_norm}
+    like the rest of the family, with grad_norm from the canonical
+    leaf_sumsq reduction (bit-identical to global_norm) instead of the
+    old jnp.linalg.norm per-leaf path."""
+    from repro.core import global_norm
+    opt = lamb(constant(0.01), weight_decay=0.01)
+    st = opt.init(params())
+    g = grads(10.0)
+    p, st, stats = opt.step(g, st, params())
+    assert {"grad_norm", "lr", "update_norm"} <= set(stats)
+    assert bool(jnp.array_equal(stats["grad_norm"], global_norm(g)))
+    assert np.isfinite(float(stats["update_norm"]))
+    # two steps: the Adam bias correction advances with the chain state
+    p, st, stats2 = opt.step(g, st, p)
+    assert int(st.step) == 2
+
+
 def test_make_optimizer_registry():
     for name in ("sngm", "sngd", "msgd", "lars", "lamb"):
         opt = make_optimizer(name, constant(0.1))

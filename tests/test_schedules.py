@@ -1,0 +1,112 @@
+"""Schedule edge cases (fast lane) + the declarative schedule registry.
+
+The boundary/clamping behaviours here are the ones the training loop
+actually hits: the first post-warm-up step, milestone-free step decay,
+and schedules evaluated at or past their horizon (which --resume with a
+shorter remaining segment does every run).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.schedules import (
+    SCHEDULES, constant, cosine, make_schedule, poly_power, schedule_names,
+    step_decay, warmup)
+
+
+# ---------------------------------------------------------------------------
+# warmup boundary
+# ---------------------------------------------------------------------------
+
+def test_warmup_boundary_hands_off_exactly_at_warmup_steps():
+    """step == warmup_steps must evaluate the BASE schedule (the where()
+    branch flips), and agree bit-exactly with the warm ramp's endpoint —
+    no lr discontinuity at the hand-off."""
+    base = poly_power(2.4, 100, 1.1)
+    s = warmup(base, 5, init_lr=0.1)
+    at = float(s(jnp.int32(5)))
+    assert at == float(base(jnp.int32(5)))
+    # one step before: still on the ramp, strictly between init and target
+    before = float(s(jnp.int32(4)))
+    assert 0.1 < before < at or 0.1 > before > at
+
+
+def test_warmup_zero_steps_is_base_everywhere():
+    base = constant(1.3)
+    s = warmup(base, 0, init_lr=0.0)
+    for t in (0, 1, 7):
+        assert float(s(jnp.int32(t))) == pytest.approx(1.3)
+
+
+def test_warmup_step_zero_starts_at_init_lr():
+    s = warmup(constant(2.0), 10, init_lr=0.25)
+    assert float(s(jnp.int32(0))) == pytest.approx(0.25)
+
+
+# ---------------------------------------------------------------------------
+# step_decay
+# ---------------------------------------------------------------------------
+
+def test_step_decay_empty_milestones_is_constant():
+    s = step_decay(0.1, [])
+    for t in (0, 1, 1000):
+        assert float(s(jnp.int32(t))) == pytest.approx(0.1)
+
+
+def test_step_decay_at_milestone_applies_factor():
+    s = step_decay(1.0, [10], factor=0.5)
+    assert float(s(jnp.int32(9))) == pytest.approx(1.0)
+    assert float(s(jnp.int32(10))) == pytest.approx(0.5)   # >= milestone
+
+
+# ---------------------------------------------------------------------------
+# horizon clamping (t >= T)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t", [100, 101, 10_000])
+def test_poly_power_clamps_at_and_past_horizon(t):
+    s = poly_power(1.6, 100, 1.1)
+    v = float(s(jnp.int32(t)))
+    assert v == 0.0 and np.isfinite(v)    # clipped frac: never negative/NaN
+
+
+@pytest.mark.parametrize("t", [100, 150])
+def test_cosine_clamps_to_final_frac_past_horizon(t):
+    s = cosine(2.0, 100, final_frac=0.1)
+    assert float(s(jnp.int32(t))) == pytest.approx(0.2, rel=1e-6)
+
+
+def test_poly_power_full_lr_at_step_zero():
+    assert float(poly_power(1.6, 100, 1.1)(jnp.int32(0))) == pytest.approx(1.6)
+
+
+# ---------------------------------------------------------------------------
+# registry / declarative specs (what OptimizerSpec serializes)
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_all_schedules():
+    assert schedule_names() == ("constant", "cosine", "poly_power",
+                                "step_decay", "warmup")
+    assert all(callable(b) for b in SCHEDULES.values())
+
+
+def test_make_schedule_builds_equivalent_schedule():
+    spec = {"name": "poly_power",
+            "kwargs": {"lr0": 1.6, "total_steps": 100, "power": 1.1}}
+    s, ref = make_schedule(spec), poly_power(1.6, 100, 1.1)
+    for t in (0, 37, 100, 200):
+        assert float(s(jnp.int32(t))) == float(ref(jnp.int32(t)))
+
+
+def test_make_schedule_nested_warmup():
+    spec = {"name": "warmup",
+            "kwargs": {"warmup_steps": 5, "init_lr": 0.1,
+                       "base": {"name": "constant", "kwargs": {"lr": 2.4}}}}
+    s = make_schedule(spec)
+    assert float(s(jnp.int32(0))) == pytest.approx(0.1)
+    assert float(s(jnp.int32(5))) == pytest.approx(2.4)
+
+
+def test_make_schedule_unknown_name():
+    with pytest.raises(KeyError, match="unknown schedule"):
+        make_schedule({"name": "linear_tri", "kwargs": {}})

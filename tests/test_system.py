@@ -179,3 +179,37 @@ def test_train_launcher_save_resume_loss_continuity(tmp_path):
     resumed_jnp = run(["--steps", "12", "--ckpt", str(tmp_path / "ck2"),
                        "--resume", "--fused", "none"])
     np.testing.assert_allclose(resumed_jnp, full[6:], rtol=1e-4, atol=1e-5)
+
+
+def test_optimizer_spec_round_trips_through_resume(tmp_path):
+    """The OptimizerSpec saved in train_meta.json is the optimizer's
+    identity: --resume reconstructs from it (conflicting CLI hyperparams
+    are ignored), and the resumed steps are bit-identical to the
+    uninterrupted run."""
+    import json
+    from repro.launch.train import main as train_main
+
+    base = ["--arch", "gemma-2b", "--reduced", "--batch", "4", "--seq", "16",
+            "--n-micro", "2", "--total-steps", "12", "--log-every", "100"]
+
+    full = train_main(base + ["--steps", "12", "--optimizer", "sngm",
+                              "--lr", "0.5", "--weight-decay", "1e-3"])
+    train_main(base + ["--steps", "6", "--optimizer", "sngm", "--lr", "0.5",
+                       "--weight-decay", "1e-3",
+                       "--ckpt", str(tmp_path / "ck")])
+
+    meta = json.load(open(tmp_path / "ck" / "train_meta.json"))
+    spec = meta["optimizer_spec"]
+    assert spec["name"] == "sngm"
+    assert spec["kwargs"]["weight_decay"] == pytest.approx(1e-3)
+    assert spec["kwargs"]["schedule"] == {
+        "name": "poly_power",
+        "kwargs": {"lr0": 0.5, "total_steps": 12, "power": 1.1}}
+
+    # resume with WRONG CLI hyperparams: the saved spec must win
+    resumed = train_main(base + ["--steps", "12", "--lr", "999.0",
+                                 "--weight-decay", "0.7",
+                                 "--ckpt", str(tmp_path / "ck"), "--resume"])
+    assert len(resumed) == 6
+    np.testing.assert_array_equal(np.asarray(resumed),
+                                  np.asarray(full[6:]))

@@ -1,0 +1,398 @@
+"""Gradient-transform algebra, the chain -> multi-tensor compiler, and
+OptimizerSpec serialization.
+
+The headline guarantees under test:
+  * the chain-built optimizers (sngm global/per_tensor, msgd, lars) are
+    BIT-identical to the pre-redesign monolithic implementations — a
+    frozen golden copy of the old jnp closures lives in this file — in
+    every execution mode (jnp, multi_tensor, FlatOptState-resident),
+    fp32 and bf16, across multiple steps, params AND state AND stats;
+  * the generic jnp interpreter agrees with the compiled kinds;
+  * a novel chain matching no fused kind trains end-to-end through
+    ``make_train_step`` (and issues zero Pallas launches);
+  * ``compile_chain`` maps exactly the canonical shapes onto kinds and
+    warns when a fused request must fall back;
+  * ``OptimizerSpec`` round-trips through JSON and rebuilds an optimizer
+    whose steps are bit-identical to the directly-built one.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChainOptState, FlatOptState, OptState, OptimizerSpec, as_optimizer,
+    chain, compile_chain, global_norm, lamb, lars, leaf_sumsq, make_optimizer,
+    msgd, sngd, sngm, to_pytree)
+from repro.core import transform as T
+from repro.core.optim import builder_accepts, optimizer_names
+from repro.core.schedules import constant, poly_power
+from repro.kernels import count_pallas_launches
+
+KEY = jax.random.PRNGKey(0)
+SHAPES = [(300, 17), (1025,), (), (4,), (64, 64), (3, 5, 7)]
+
+
+def make_tree(seed, dtype=jnp.float32, scale=1.0):
+    k = jax.random.fold_in(KEY, seed)
+    return {f"p{i}": (scale * jax.random.normal(jax.random.fold_in(k, i), s)
+                      ).astype(dtype)
+            for i, s in enumerate(SHAPES)}
+
+
+def tree_bitwise_equal(a, b):
+    return all(bool(jnp.array_equal(x, y)) and x.dtype == y.dtype
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# frozen golden: the pre-redesign monolithic jnp optimizer steps, verbatim.
+# The chain-built optimizers must reproduce these bit-for-bit forever.
+# ---------------------------------------------------------------------------
+
+def _golden_step(kind, grads, momentum, params, *, lr, beta, wd,
+                 eps=1e-12, trust=0.001):
+    if kind == "lars":
+        def upd(v, g, w):
+            g = g.astype(jnp.float32)
+            wn = jnp.sqrt(leaf_sumsq(w))
+            gn = jnp.sqrt(leaf_sumsq(g))
+            local = trust * wn / (gn + wd * wn + eps)
+            local = jnp.where(wn > 0, local, 1.0)
+            return beta * v + lr * local * (g + wd * w)
+
+        new_u = jax.tree.map(upd, momentum, grads, params)
+        new_p = jax.tree.map(lambda w, v: (w - v).astype(w.dtype),
+                             params, new_u)
+        gnorm = global_norm(grads)
+    else:
+        g = (grads if wd == 0.0 else
+             jax.tree.map(lambda gi, w: gi + wd * w, grads, params))
+        gnorm = global_norm(g)
+        if kind == "sngm_global":
+            inv = 1.0 / (gnorm + eps)
+            new_u = jax.tree.map(
+                lambda u, gi: beta * u + gi.astype(jnp.float32) * inv,
+                momentum, g)
+        elif kind == "sngm_per_tensor":
+            def upd(u, gi):
+                n = jnp.sqrt(leaf_sumsq(gi))
+                return beta * u + gi.astype(jnp.float32) * (1.0 / (n + eps))
+            new_u = jax.tree.map(upd, momentum, g)
+        else:  # msgd
+            new_u = jax.tree.map(
+                lambda v, gi: beta * v + gi.astype(jnp.float32), momentum, g)
+        new_p = jax.tree.map(lambda w, u: (w - lr * u).astype(w.dtype),
+                             params, new_u)
+    return new_p, new_u, {"grad_norm": gnorm, "lr": lr,
+                          "update_norm": global_norm(new_u)}
+
+
+def _golden_run(kind, params, grads, schedule, n=3, **kw):
+    momentum = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    step = jax.jit(lambda g, u, p, lr: _golden_step(kind, g, u, p, lr=lr,
+                                                    **kw))
+    stats = None
+    for t in range(n):
+        params, momentum, stats = step(grads, momentum, params,
+                                       schedule(jnp.int32(t)))
+    return params, momentum, stats
+
+
+SCHED = poly_power(0.3, 10, 1.1)   # lr varies per step: exercises counters
+
+CASES = {
+    "sngm_global": (
+        lambda **kw: sngm(SCHED, beta=0.9, weight_decay=1e-4, **kw),
+        dict(beta=0.9, wd=1e-4)),
+    "sngm_per_tensor": (
+        lambda **kw: sngm(SCHED, beta=0.9, weight_decay=1e-4,
+                          norm_mode="per_tensor", **kw),
+        dict(beta=0.9, wd=1e-4)),
+    "msgd": (
+        lambda **kw: msgd(SCHED, beta=0.9, weight_decay=1e-4, **kw),
+        dict(beta=0.9, wd=1e-4)),
+    "lars": (
+        lambda **kw: lars(SCHED, beta=0.9, weight_decay=1e-4, **kw),
+        dict(beta=0.9, wd=1e-4)),
+}
+
+
+def _run(opt, params, grads, state, n=3):
+    step = jax.jit(opt.step)
+    stats = None
+    for _ in range(n):
+        params, state, stats = step(grads, state, params)
+    return params, state, stats
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode", ["jnp", "multi_tensor", "resident"])
+@pytest.mark.parametrize("kind", sorted(CASES))
+def test_chain_built_bit_equal_to_golden(kind, mode, dtype):
+    """The acceptance bar: chain builders == pre-redesign monoliths,
+    bitwise, in every execution mode."""
+    params = make_tree(0, dtype)
+    grads = make_tree(1, dtype, scale=3.0)
+    build, kw = CASES[kind]
+    p_g, u_g, st_g = _golden_run(kind, params, grads, SCHED, **kw)
+
+    opt = build(fused=None if mode == "jnp" else "multi_tensor")
+    state = opt.init(params)
+    if mode == "multi_tensor":
+        state = to_pytree(state)         # force the per-step packing path
+    p_c, s_c, st_c = _run(opt, params, grads, state)
+    if mode == "resident":
+        assert isinstance(s_c, FlatOptState)
+    assert opt.kind == kind
+    assert tree_bitwise_equal(p_g, p_c)
+    assert tree_bitwise_equal(u_g, s_c.momentum)
+    for k in st_g:
+        assert bool(jnp.array_equal(st_g[k], st_c[k])), (k, st_g[k], st_c[k])
+
+
+@pytest.mark.parametrize("kind", ["sngm_global", "msgd"])
+def test_interpreter_bit_identical_for_matched_shapes(kind):
+    """compile_chain(interpret=True) runs the raw transforms; for the
+    sngm/msgd shapes the interpreter's expression graphs are the same as
+    the kind implementations', so even the fallback is bit-exact."""
+    params, grads = make_tree(0), make_tree(1, scale=3.0)
+    build, _ = CASES[kind]
+    opt_c = build()
+    tx = (T.chain(T.add_decayed_weights(1e-4), T.normalize_by_global_norm(),
+                  T.trace(0.9), T.scale_by_schedule(SCHED))
+          if kind == "sngm_global" else
+          T.chain(T.add_decayed_weights(1e-4), T.trace(0.9),
+                  T.scale_by_schedule(SCHED)))
+    opt_i = compile_chain(tx, interpret=True)
+    p_c, s_c, st_c = _run(opt_c, params, grads, opt_c.init(params))
+    p_i, s_i, st_i = _run(opt_i, params, grads, opt_i.init(params))
+    assert isinstance(s_i, ChainOptState)
+    assert tree_bitwise_equal(p_c, p_i)
+    # grad_norm: the msgd-shaped chain has no norm-emitting stage, so the
+    # interpreter's default reports the RAW gradient norm where the kind
+    # implementation reports the coupled-decayed one — a documented
+    # fallback-semantics difference; everything else must agree bitwise.
+    keys = set(st_c) - ({"grad_norm"} if kind == "msgd" else set())
+    for k in keys:
+        assert bool(jnp.array_equal(st_c[k], st_i[k])), k
+
+
+def test_interpreter_close_for_lars_lamb_shapes():
+    """lars/lamb associate the lr product differently in the interpreter;
+    they still agree to float tolerance (bit-exactness for the named
+    builders comes from the compiled kinds, asserted above)."""
+    params, grads = make_tree(0), make_tree(1, scale=3.0)
+    opt_c = CASES["lars"][0]()
+    tx = T.chain(T.trust_ratio(0.001, 1e-4, 1e-12),
+                 T.scale_by_schedule(SCHED), T.trace(0.9))
+    opt_i = compile_chain(tx, interpret=True)
+    p_c, _, _ = _run(opt_c, params, grads, opt_c.init(params))
+    p_i, _, _ = _run(opt_i, params, grads, opt_i.init(params))
+    for a, b in zip(jax.tree.leaves(p_c), jax.tree.leaves(p_i)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6,
+                                   atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# the compiler: what matches, what falls back
+# ---------------------------------------------------------------------------
+
+def test_compile_chain_kind_assignment():
+    assert sngm(constant(0.1)).kind == "sngm_global"
+    assert sngm(constant(0.1), norm_mode="per_tensor").kind == \
+        "sngm_per_tensor"
+    assert sngd(constant(0.1)).kind == "sngm_global"    # beta=0 sngm
+    assert msgd(constant(0.1)).kind == "msgd"
+    assert lars(constant(0.1)).kind == "lars"
+    assert lamb(constant(0.1)).kind is None             # interpreter-run
+
+
+def test_chain_without_decay_matches_with_wd0():
+    """add_decayed_weights is optional in the patterns: omitting it
+    compiles to the kind with weight_decay=0."""
+    params, grads = make_tree(0), make_tree(1, scale=3.0)
+    tx = T.chain(T.normalize_by_global_norm(), T.trace(0.9),
+                 T.scale_by_schedule(SCHED))
+    opt = compile_chain(tx)
+    assert opt.kind == "sngm_global"
+    ref = sngm(SCHED, beta=0.9, weight_decay=0.0)
+    p_a, _, _ = _run(opt, params, grads, opt.init(params))
+    p_b, _, _ = _run(ref, params, grads, ref.init(params))
+    assert tree_bitwise_equal(p_a, p_b)
+
+
+def test_nesterov_trace_falls_back_to_interpreter():
+    tx = T.chain(T.normalize_by_global_norm(), T.trace(0.9, nesterov=True),
+                 T.scale_by_schedule(constant(0.1)))
+    assert T.match_chain(tx) is None
+    opt = compile_chain(tx)
+    assert opt.kind is None
+
+
+def test_fused_request_on_novel_chain_warns_and_falls_back():
+    tx = T.chain(T.clip_by_global_norm(1.0), T.trace(0.9),
+                 T.scale_by_schedule(constant(0.1)), T.ema_params(0.99))
+    with pytest.warns(UserWarning, match="does not match any fused kind"):
+        opt = compile_chain(tx, fused="multi_tensor")
+    assert opt.kind is None
+    params, grads = make_tree(0), make_tree(1)
+    p, s, st = jax.jit(opt.step)(grads, opt.init(params), params)
+    assert all(np.all(np.isfinite(np.asarray(l))) for l in jax.tree.leaves(p))
+
+
+def test_per_leaf_restricted_to_kinds_with_kernels():
+    with pytest.raises(ValueError, match="per_leaf"):
+        msgd(constant(0.1), fused="per_leaf")
+    with pytest.raises(ValueError, match="norm_mode='global' only"):
+        sngm(constant(0.1), norm_mode="per_tensor", fused="per_leaf")
+
+
+def test_use_pallas_deprecated_but_still_routes():
+    with pytest.deprecated_call():
+        opt = sngm(constant(0.1), use_pallas=True)
+    assert isinstance(opt.init(make_tree(0)), FlatOptState)
+
+
+# ---------------------------------------------------------------------------
+# individual transforms
+# ---------------------------------------------------------------------------
+
+def test_clip_by_global_norm_clips_only_above_threshold():
+    clip = T.clip_by_global_norm(1.0)
+    big = {"w": jnp.full((8,), 10.0)}
+    small = {"w": jnp.full((8,), 1e-3)}
+    out_b, _, st = clip.update(big, clip.init(big), big)
+    np.testing.assert_allclose(float(global_norm(out_b)), 1.0, rtol=1e-6)
+    assert float(st["grad_norm"]) > 1.0
+    out_s, _, _ = clip.update(small, clip.init(small), small)
+    assert tree_bitwise_equal(out_s, small)    # untouched below the bound
+
+
+def test_nesterov_trace_differs_from_plain():
+    g = {"w": jnp.ones((4,))}
+    plain, nest = T.trace(0.9), T.trace(0.9, nesterov=True)
+    o_p, s_p, _ = plain.update(g, plain.init(g), g)
+    o_n, s_n, _ = nest.update(g, nest.init(g), g)
+    assert tree_bitwise_equal(s_p.momentum, s_n.momentum)   # same state
+    assert not np.allclose(np.asarray(o_p["w"]), np.asarray(o_n["w"]))
+    np.testing.assert_allclose(np.asarray(o_n["w"]), 0.9 * 1.0 + 1.0)
+
+
+def test_decay_coupling_is_positional():
+    """Before normalize = coupled (decay gets normalized too); after =
+    decoupled (pure shrinkage added to the unit-norm direction)."""
+    params = {"w": jnp.full((4,), 100.0)}
+    grads = {"w": jnp.full((4,), 1e-3)}
+    coupled = T.chain(T.add_decayed_weights(0.1),
+                      T.normalize_by_global_norm())
+    decoupled = T.chain(T.normalize_by_global_norm(),
+                        T.add_decayed_weights(0.1))
+    u_c, _, _ = coupled.update(grads, coupled.init(params), params)
+    u_d, _, _ = decoupled.update(grads, decoupled.init(params), params)
+    # coupled: wd*w dominates the gradient, then everything is normalized
+    np.testing.assert_allclose(float(global_norm(u_c)), 1.0, rtol=1e-5)
+    # decoupled: unit direction PLUS wd*w => norm ~ ||0.1*100*ones(4)||
+    assert float(global_norm(u_d)) > 10.0
+
+
+def test_ema_params_tracks_parameters():
+    ema = T.ema_params(0.5)
+    params = {"w": jnp.full((3,), 4.0)}
+    grads = {"w": jnp.ones((3,))}
+    state = ema.init(params)
+    out, state, _ = ema.update(grads, state, params)
+    assert tree_bitwise_equal(out, grads)               # passthrough
+    np.testing.assert_allclose(np.asarray(state.ema["w"]), 4.0)
+    out, state, _ = ema.update(grads, state, {"w": jnp.zeros((3,))})
+    np.testing.assert_allclose(np.asarray(state.ema["w"]), 2.0)
+
+
+def test_chain_flattens_nested_chains():
+    tx = T.chain(T.chain(T.add_decayed_weights(1e-4),
+                         T.normalize_by_global_norm()),
+                 T.chain(T.trace(0.9), T.scale_by_schedule(SCHED)))
+    assert tuple(p.name for p in tx.parts) == (
+        "add_decayed_weights", "normalize_by_global_norm", "trace",
+        "scale_by_schedule")
+    assert compile_chain(tx).kind == "sngm_global"
+
+
+# ---------------------------------------------------------------------------
+# novel chain end-to-end through make_train_step (jnp fallback)
+# ---------------------------------------------------------------------------
+
+def test_novel_chain_trains_end_to_end():
+    from repro.configs import ARCHS, smoke_variant
+    from repro.data import SyntheticLM
+    from repro.models import CPU_RUNTIME, model_defs
+    from repro.models.param import materialize
+    from repro.training import make_train_step
+
+    cfg = dataclasses.replace(smoke_variant(ARCHS["gemma-2b"]),
+                              vocab_size=64, compute_dtype="float32")
+    tx = chain(T.clip_by_global_norm(1.0), T.normalize_by_global_norm(),
+               T.trace(0.9), T.scale_by_schedule(constant(0.5)))
+    assert T.match_chain(tx) is None
+    opt = as_optimizer(tx)
+    assert opt.kind is None
+    params = materialize(model_defs(cfg), jax.random.PRNGKey(0))
+    state = opt.init(params)
+    assert isinstance(state, ChainOptState)
+
+    with count_pallas_launches() as c:
+        # the interpreter is pure jnp: zero kernel launches
+        step = jax.jit(make_train_step(cfg, CPU_RUNTIME, tx, n_micro=2))
+        data = SyntheticLM(cfg.vocab_size, 16, 4, branching=4)
+        losses = []
+        for t in range(4):
+            params, state, stats = step(params, state, data.batch_at(t))
+            losses.append(float(stats["loss"]))
+    assert c["launches"] == 0
+    assert all(np.isfinite(l) for l in losses), losses
+    assert {"grad_norm", "lr", "update_norm", "loss"} <= set(stats)
+    assert float(stats["lr"]) == 0.5
+    assert int(state.step) == 4
+
+
+# ---------------------------------------------------------------------------
+# OptimizerSpec serialization
+# ---------------------------------------------------------------------------
+
+def test_optimizer_spec_json_round_trip_bit_identical():
+    spec = OptimizerSpec("sngm", {
+        "beta": 0.9, "weight_decay": 1e-4,
+        "schedule": {"name": "poly_power",
+                     "kwargs": {"lr0": 0.3, "total_steps": 10,
+                                "power": 1.1}}})
+    rebuilt = OptimizerSpec.from_json(json.loads(json.dumps(spec.to_json())))
+    opt_a = make_optimizer(rebuilt)
+    opt_b = sngm(poly_power(0.3, 10, 1.1), beta=0.9, weight_decay=1e-4)
+    params, grads = make_tree(0), make_tree(1, scale=3.0)
+    p_a, _, _ = _run(opt_a, params, grads, opt_a.init(params))
+    p_b, _, _ = _run(opt_b, params, grads, opt_b.init(params))
+    assert opt_a.kind == opt_b.kind == "sngm_global"
+    assert tree_bitwise_equal(p_a, p_b)
+
+
+def test_optimizer_spec_validates():
+    with pytest.raises(KeyError, match="unknown optimizer"):
+        OptimizerSpec("adamw", {"schedule": {"name": "constant",
+                                             "kwargs": {"lr": 0.1}}})
+    with pytest.raises(ValueError, match="schedule"):
+        OptimizerSpec("sngm", {"beta": 0.9})
+    with pytest.raises(TypeError, match="no extra arguments"):
+        make_optimizer(OptimizerSpec("sngm", {
+            "schedule": {"name": "constant", "kwargs": {"lr": 0.1}}}),
+            constant(0.1))
+
+
+def test_registry_and_builder_introspection():
+    assert optimizer_names() == ("lamb", "lars", "msgd", "sngd", "sngm")
+    assert builder_accepts("sngm", "beta")
+    assert not builder_accepts("sngd", "beta")      # pinned to 0 by design
+    assert not builder_accepts("lamb", "beta")      # b1/b2 instead
+    assert builder_accepts("lamb", "fused")         # accepted, warns+falls back
