@@ -112,10 +112,14 @@ def run(quick: bool = False, json_path: str | None = None):
         bench(name, opt)
 
     # --- chain interpreter: a novel composition no fused kind covers ----
-    # (clip -> normalize -> momentum -> schedule); measures the jnp
-    # fallback's overhead relative to the compiled sngm path above
-    novel = T.chain(T.clip_by_global_norm(1.0), T.normalize_by_global_norm(),
-                    T.trace(0.9), T.scale_by_schedule(constant(0.1)))
+    # (normalize -> nesterov momentum -> schedule -> EMA; clip-PREFIXED
+    # chains compile onto the engine now, so the novel row needs a shape
+    # the matcher genuinely rejects); measures the jnp fallback's
+    # overhead relative to the compiled sngm path above
+    novel = T.chain(T.normalize_by_global_norm(),
+                    T.trace(0.9, nesterov=True),
+                    T.scale_by_schedule(constant(0.1)), T.ema_params(0.99))
+    assert T.match_chain(novel) is None
     bench("chain_interpreter_novel", compile_chain(novel))
 
     # --- fused: per-leaf (O(n_leaves) launches) vs multi-tensor (O(1)) --
@@ -131,6 +135,19 @@ def run(quick: bool = False, json_path: str | None = None):
     bench("msgd_fused_multi_tensor",
           msgd(constant(0.1), beta=0.9, weight_decay=1e-4,
                fused="multi_tensor"))
+
+    # --- fused LAMB (Adam-moment pass + apply pass, 2 launches) ---------
+    opt_lamb = lamb(constant(0.1), weight_decay=1e-4, fused="multi_tensor")
+    us_lamb, l_lamb = bench("lamb_fused_multi_tensor", opt_lamb)
+
+    # --- clip->sngm: the two-round-norm compilation (3 launches) --------
+    clip_sngm_tx = T.chain(T.clip_by_global_norm(1.0),
+                           T.add_decayed_weights(1e-4),
+                           T.normalize_by_global_norm(), T.trace(0.9),
+                           T.scale_by_schedule(constant(0.1)))
+    opt_clip = compile_chain(clip_sngm_tx, fused="multi_tensor")
+    assert opt_clip.kind == "sngm_global"
+    us_clip, l_clip = bench("clip_sngm_fused_multi_tensor", opt_clip)
 
     assert l_pl == n_leaves, (l_pl, n_leaves)
     assert l_mt <= 3, l_mt          # norm pass + update pass per dtype bucket
@@ -159,6 +176,19 @@ def run(quick: bool = False, json_path: str | None = None):
                         "OptState: params+grads+momentum"))
     print(f"  flat-buffer packing: resident {b_res} B/step vs per-step "
           f"{b_per} B/step ({b_res / b_per:.2f}x)")
+    # fused lamb: Adam moments resident too, so steady state still packs
+    # only the gradients; clip->sngm packs the gradients twice (raw for
+    # the round-0 norm + clipped for the update)
+    b_lamb = packed_bytes_per_step(opt_lamb, grads, opt_lamb.init(params),
+                                   params)
+    b_clip = packed_bytes_per_step(opt_clip, grads, opt_clip.init(params),
+                                   params)
+    rows.append(csv_row("lamb_packed_bytes_per_step_resident", b_lamb,
+                        "FlatOptState(m,v): gradients only"))
+    rows.append(csv_row("clip_sngm_packed_bytes_per_step_resident", b_clip,
+                        "raw + clipped gradient packing"))
+    print(f"  lamb resident packing {b_lamb} B/step; clip->sngm {b_clip} "
+          f"B/step (2x grads: raw norm round + clipped update)")
 
     # HBM-traffic model (bytes/param): naive = read g,u,p + write u,p each
     # pass of {decay, scale+momentum, apply} vs fused single pass
@@ -170,11 +200,16 @@ def run(quick: bool = False, json_path: str | None = None):
     print(f"  fused-kernel HBM model: {naive:.0f} -> {fused:.0f} bytes/param")
 
     out = {"rows": rows, "n_params": n_params, "n_leaves": n_leaves,
-           "launches_per_step": {"per_leaf": l_pl, "multi_tensor": l_mt},
-           "us_per_step": {"per_leaf": us_pl, "multi_tensor": us_mt},
+           "launches_per_step": {"per_leaf": l_pl, "multi_tensor": l_mt,
+                                 "lamb_fused": l_lamb,
+                                 "clip_sngm": l_clip},
+           "us_per_step": {"per_leaf": us_pl, "multi_tensor": us_mt,
+                           "lamb_fused": us_lamb, "clip_sngm": us_clip},
            "packed_bytes_per_step": {"resident": int(b_res),
                                      "per_step": int(b_per),
-                                     "ratio": b_res / b_per},
+                                     "ratio": b_res / b_per,
+                                     "lamb_resident": int(b_lamb),
+                                     "clip_sngm_resident": int(b_clip)},
            "quick": quick}
     if json_path:
         with open(json_path, "w") as f:

@@ -12,6 +12,12 @@ and report the best computation complexity C = T*B to reach
   * SNGM accepts any lr (Theorem 5); with B growing, the tuned lr grows
     and T shrinks ~proportionally: C stays near-flat (Corollary 7's
     B = sqrt(C) regime).
+
+``run(with_lamb=True)`` (CLI ``--with-lamb``) adds the paper's
+state-of-the-art large-batch baseline, LAMB, running on the SAME
+multi-tensor fused engine as the others since the fused lamb kind landed
+— so the headline complexity comparison is apples-to-apples on the hot
+path (every optimizer O(1) Pallas launches per step).
 """
 from __future__ import annotations
 
@@ -19,7 +25,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import msgd, sngm
+from repro.core import lamb, msgd, sngm
 from repro.core.schedules import constant
 
 DIM = 64
@@ -67,13 +73,16 @@ def best_complexity(make_opt, H, w0, batch):
     return best, best_lr
 
 
-def run():
+def run(with_lamb: bool = False):
     H, w0 = make_problem()
     batches = [4, 16, 64, 256, 1024]
     out = {}
     print(f"  quadratic with L={L}; tuned constant lr per (optimizer, B); "
           f"C = T*B to ||grad||<= {EPS}")
-    print(f"  {'B':>6} | {'MSGD C':>10} {'lr*':>9} | {'SNGM C':>10} {'lr*':>9}")
+    head = f"  {'B':>6} | {'MSGD C':>10} {'lr*':>9} | {'SNGM C':>10} {'lr*':>9}"
+    if with_lamb:
+        head += f" | {'LAMB C':>10} {'lr*':>9}"
+    print(head)
     for B in batches:
         c_m, lr_m = best_complexity(
             lambda lr: msgd(constant(lr), beta=0.9), H, w0, B)
@@ -81,14 +90,36 @@ def run():
             lambda lr: sngm(constant(lr), beta=0.9), H, w0, B)
         out[f"msgd_b{B}"] = {"C": c_m, "lr": lr_m}
         out[f"sngm_b{B}"] = {"C": c_s, "lr": lr_s}
-        print(f"  {B:>6} | {c_m:>10} {lr_m if lr_m else '-':>9.2g} "
-              f"| {c_s:>10} {lr_s if lr_s else '-':>9.2g}")
+
+        def cell(lr):
+            # lr is None when no grid point converged: print '-', and
+            # never feed the string through the float format code
+            return f"{lr:>9.2g}" if lr else f"{'-':>9}"
+
+        line = (f"  {B:>6} | {c_m:>10} {cell(lr_m)} "
+                f"| {c_s:>10} {cell(lr_s)}")
+        if with_lamb:
+            # the fused engine kind: same O(1)-launch hot path as the rest
+            c_l, lr_l = best_complexity(
+                lambda lr: lamb(constant(lr), fused="multi_tensor"),
+                H, w0, B)
+            out[f"lamb_b{B}"] = {"C": c_l, "lr": lr_l}
+            line += f" | {c_l:>10} {cell(lr_l)}"
+        print(line)
     r_m = out["msgd_b1024"]["C"] / max(out["msgd_b4"]["C"], 1)
     r_s = out["sngm_b1024"]["C"] / max(out["sngm_b4"]["C"], 1)
-    print(f"  -> C(B=1024)/C(B=4):  MSGD {r_m:.1f}x   SNGM {r_s:.1f}x  "
-          f"(paper: SNGM's complexity is batch-size-robust, Table 1)")
+    msg = (f"  -> C(B=1024)/C(B=4):  MSGD {r_m:.1f}x   SNGM {r_s:.1f}x  "
+           f"(paper: SNGM's complexity is batch-size-robust, Table 1)")
+    if with_lamb:
+        r_l = out["lamb_b1024"]["C"] / max(out["lamb_b4"]["C"], 1)
+        msg += f"   LAMB {r_l:.1f}x"
+    print(msg)
     return out
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--with-lamb", action="store_true",
+                    help="add the LAMB baseline (fused multi-tensor kind)")
+    run(with_lamb=ap.parse_args().with_lamb)

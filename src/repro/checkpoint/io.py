@@ -11,11 +11,13 @@ casts every leaf to the dtype of the ``like`` template, so a checkpoint
 round-trip is bit-exact in both values and dtypes while old/drifted
 checkpoints still load.  Works for any state form — plain param trees,
 ``OptState`` pytrees, flat-buffer-resident ``FlatOptState`` (whose
-static ``TreeLayout`` is pytree aux data and never touches disk), or the
-chain interpreter's ``ChainOptState`` (a NamedTuple-of-NamedTuples whose
-keys come from the tuple positions, so a chain's state layout — i.e. the
-transform sequence — must match between save and load; the optimizer
-spec in ``train_meta.json`` is what guarantees that on ``--resume``).
+static ``TreeLayout``/``form`` are pytree aux data and never touch disk;
+the Adam family's ``m_flats``/``v_flats`` moment slots are ordinary
+child buffers and round-trip like any leaf), or the chain interpreter's
+``ChainOptState`` (a NamedTuple-of-NamedTuples whose keys come from the
+tuple positions, so a chain's state layout — i.e. the transform
+sequence — must match between save and load; the optimizer spec in
+``train_meta.json`` is what guarantees that on ``--resume``).
 """
 from __future__ import annotations
 

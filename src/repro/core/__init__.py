@@ -10,8 +10,9 @@ from repro.core.optim import (
 )
 from repro.core.multi_tensor import (
     FlatOptState, TreeLayout, build_layout, count_packed_bytes, flatten,
-    unflatten, init_flat_state, leaf_sumsq, multi_tensor_step,
-    multi_tensor_step_flat, resident_step,
+    unflatten, init_flat_adam_state, init_flat_state, leaf_sumsq,
+    multi_tensor_lamb_step, multi_tensor_lamb_step_flat, multi_tensor_step,
+    multi_tensor_step_flat, resident_lamb_step, resident_step,
 )
 from repro.core import transform
 from repro.core.transform import (
@@ -25,7 +26,9 @@ __all__ = ["Optimizer", "OptState", "OptimizerSpec", "sngm", "sngd", "msgd",
            "register_optimizer", "global_norm", "tree_squared_norm",
            "schedules", "make_schedule", "to_pytree", "from_pytree",
            "FlatOptState", "TreeLayout", "build_layout", "count_packed_bytes",
-           "flatten", "unflatten", "init_flat_state", "leaf_sumsq",
-           "multi_tensor_step", "multi_tensor_step_flat", "resident_step",
+           "flatten", "unflatten", "init_flat_adam_state", "init_flat_state",
+           "leaf_sumsq", "multi_tensor_lamb_step",
+           "multi_tensor_lamb_step_flat", "multi_tensor_step",
+           "multi_tensor_step_flat", "resident_lamb_step", "resident_step",
            "transform", "ChainOptState", "GradientTransform", "chain",
            "compile_chain", "as_optimizer"]

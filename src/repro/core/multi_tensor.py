@@ -6,9 +6,13 @@ flattens the parameter/gradient/momentum pytrees into dtype-bucketed
 contiguous flat buffers, computes global AND per-segment squared norms in
 one Pallas reduction pass per bucket, then applies momentum + update for
 the whole bucket in one fused second pass — O(1) kernel launches per step
-regardless of tree size.  One coefficient parameterization covers all four
-optimizers (see ``kernels/multi_tensor/kernel.py``): SNGM (global norm),
-SNGM[per_tensor] and LARS (per-segment norms), and MSGD.
+regardless of tree size.  One coefficient parameterization covers the four
+momentum optimizers (see ``kernels/multi_tensor/kernel.py``): SNGM (global
+norm), SNGM[per_tensor] and LARS (per-segment norms), and MSGD.  The Adam
+family (LAMB) gets its own two-pass pipeline — a fused Adam-moment pass
+plus the same apply pass — and ``clip_by_global_norm``-prefixed chains
+add one raw-norm round (``_clip_round``) whose scalar scale is applied
+inside the later kernels, keeping everything O(1) launches per step.
 
 Numerics are bit-identical to the pure-jnp optimizer paths in
 ``core.optim`` because both sides share one canonical reduction order:
@@ -113,11 +117,13 @@ def leaf_sumsq(x) -> jnp.ndarray:
     """Sum of squared entries of one array, f32 accumulate, in the engine's
     canonical order: CHUNK-sized row partials, then a pairwise fold over the
     partials.  ``tree_squared_norm`` and the per-tensor jnp norms use this
-    so the fused path is bit-identical to the jnp path."""
+    so the fused path is bit-identical to the jnp path.  A size-0 leaf
+    contributes exactly 0.0 (one all-zero pad chunk), matching its empty
+    segment in the flat buffer."""
     xf = x.astype(jnp.float32).ravel()
     pad = -xf.size % CHUNK
-    if pad:
-        xf = jnp.pad(xf, (0, pad))
+    if pad or xf.size == 0:
+        xf = jnp.pad(xf, (0, pad or CHUNK))
     return _fold_sum(jnp.sum(jnp.square(xf.reshape(-1, CHUNK)), axis=1))
 
 
@@ -259,29 +265,44 @@ def _per_chunk(bucket: Bucket, seg_vals: Sequence[jnp.ndarray],
 class FlatOptState:
     """Optimizer state kept resident in the engine's flat-buffer form.
 
-    ``p_flats`` hold the parameters in their bucket (storage) dtype and
-    ``u_flats`` the momentum in f32, one buffer per layout bucket; the
-    ``layout`` rides along as static pytree aux data, so a jitted step
-    never rebuilds or re-packs it.  The resident buffers are authoritative:
-    materialize pytree views via ``.params`` / ``.momentum`` only for
-    ``loss_fn``, logging, and checkpointing.
+    ``p_flats`` hold the parameters in their bucket (storage) dtype, one
+    buffer per layout bucket.  The per-leaf slots depend on the engine
+    family: momentum kinds (sngm/msgd/lars) carry the f32 momentum in
+    ``u_flats``; the Adam family (lamb) instead carries the f32 first and
+    second moments in ``m_flats``/``v_flats`` (``u_flats`` is empty).
+    ``layout`` and ``form`` ride along as static pytree aux data, so a
+    jitted step never rebuilds or re-packs them; ``form`` records which
+    family (and, for compiled chains, the stateless-prefix arity) so
+    ``to_pytree`` can rebuild the matching pytree-form state.  The
+    resident buffers are authoritative: materialize pytree views via
+    ``.params`` / ``.momentum`` / ``.moments`` only for ``loss_fn``,
+    logging, and checkpointing.
     """
     step: jnp.ndarray                    # scalar int32
     p_flats: Tuple[jnp.ndarray, ...]
     u_flats: Tuple[jnp.ndarray, ...]
     layout: TreeLayout
+    m_flats: Tuple[jnp.ndarray, ...] = ()
+    v_flats: Tuple[jnp.ndarray, ...] = ()
+    form: Any = "momentum"               # static; "momentum" | ("lamb", ...)
 
     def tree_flatten_with_keys(self):
         G = jax.tree_util.GetAttrKey
         return (((G("step"), self.step),
                  (G("p_flats"), tuple(self.p_flats)),
-                 (G("u_flats"), tuple(self.u_flats))), self.layout)
+                 (G("u_flats"), tuple(self.u_flats)),
+                 (G("m_flats"), tuple(self.m_flats)),
+                 (G("v_flats"), tuple(self.v_flats))),
+                (self.layout, self.form))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        step, p_flats, u_flats = children
+        step, p_flats, u_flats, m_flats, v_flats = children
+        layout, form = aux
         return cls(step=step, p_flats=tuple(p_flats),
-                   u_flats=tuple(u_flats), layout=aux)
+                   u_flats=tuple(u_flats), layout=layout,
+                   m_flats=tuple(m_flats), v_flats=tuple(v_flats),
+                   form=form)
 
     @property
     def params(self) -> PyTree:
@@ -290,6 +311,12 @@ class FlatOptState:
     @property
     def momentum(self) -> PyTree:
         return unflatten(self.u_flats, self.layout, keep_dtype=True)
+
+    @property
+    def moments(self) -> Tuple[PyTree, PyTree]:
+        """(m, v) pytree views of the Adam moments (f32)."""
+        return (unflatten(self.m_flats, self.layout, keep_dtype=True),
+                unflatten(self.v_flats, self.layout, keep_dtype=True))
 
 
 def init_flat_state(params: PyTree) -> FlatOptState:
@@ -303,9 +330,28 @@ def init_flat_state(params: PyTree) -> FlatOptState:
         layout=layout)
 
 
+def init_flat_adam_state(params: PyTree,
+                         form: Any = ("lamb", 0, 2)) -> FlatOptState:
+    """Resident state for the Adam family: params packed once, both
+    moments zeros (f32), no momentum slot.  ``form`` encodes the compiled
+    chain's shape — ("lamb", n stateless transforms before scale_by_adam,
+    n stateless transforms between it and scale_by_schedule) — which is
+    exactly what ``optim.to_pytree`` needs to rebuild the interpreter's
+    ``ChainOptState`` layout."""
+    layout = build_layout(params)
+    zeros = tuple(jnp.zeros((b.n_elems,), jnp.float32)
+                  for b in layout.buckets)
+    return FlatOptState(
+        step=jnp.zeros((), jnp.int32),
+        p_flats=tuple(flatten(params, layout)),
+        u_flats=(), layout=layout,
+        m_flats=zeros, v_flats=zeros, form=form)
+
+
 def resident_step(kind: str, grads: PyTree, state: FlatOptState, *, lr,
                   beta: float, weight_decay: float = 0.0, eps: float = 1e-12,
-                  trust: float = 0.001) -> Tuple[PyTree, FlatOptState, dict]:
+                  trust: float = 0.001, clip: Optional[float] = None
+                  ) -> Tuple[PyTree, FlatOptState, dict]:
     """The resident fast path: flatten ONLY the gradients; params and
     momentum stay in the buffers carried by ``state``.  Returns
     ``(params_view, new_state, stats)`` where the pytree view is bit-equal
@@ -313,12 +359,42 @@ def resident_step(kind: str, grads: PyTree, state: FlatOptState, *, lr,
     zero, see module docstring)."""
     layout = state.layout
     check_grad_dtypes(grads, layout)
+    stat_gnorm = None
+    if clip is not None:
+        grads, stat_gnorm = _clip_tree_round(grads, layout, float(clip),
+                                             "pallas")
     g_flats = flatten(grads, layout)
     po, uo, stats = multi_tensor_step_flat(
         kind, layout, state.p_flats, g_flats, state.u_flats, lr=lr,
-        beta=beta, weight_decay=weight_decay, eps=eps, trust=trust)
+        beta=beta, weight_decay=weight_decay, eps=eps, trust=trust,
+        stat_gnorm=stat_gnorm)
     new_state = FlatOptState(step=state.step + 1, p_flats=tuple(po),
-                             u_flats=tuple(uo), layout=layout)
+                             u_flats=tuple(uo), layout=layout,
+                             form=state.form)
+    return unflatten(po, layout), new_state, stats
+
+
+def resident_lamb_step(grads: PyTree, state: FlatOptState, *, lr, b1: float,
+                       b2: float, eps: float, weight_decay: float = 0.0,
+                       trust_eps: float = 0.0, clip: Optional[float] = None
+                       ) -> Tuple[PyTree, FlatOptState, dict]:
+    """Resident fast path for the Adam family: flatten ONLY the gradients;
+    params and both moments stay in the buffers carried by ``state``."""
+    layout = state.layout
+    check_grad_dtypes(grads, layout)
+    stat_gnorm = None
+    if clip is not None:
+        grads, stat_gnorm = _clip_tree_round(grads, layout, float(clip),
+                                             "pallas")
+    g_flats = flatten(grads, layout)
+    po, mo, vo, stats = multi_tensor_lamb_step_flat(
+        layout, state.p_flats, g_flats, state.m_flats, state.v_flats,
+        count=state.step, lr=lr, b1=b1, b2=b2, eps=eps,
+        weight_decay=weight_decay, trust_eps=trust_eps,
+        stat_gnorm=stat_gnorm)
+    new_state = FlatOptState(step=state.step + 1, p_flats=tuple(po),
+                             u_flats=(), layout=layout, m_flats=tuple(mo),
+                             v_flats=tuple(vo), form=state.form)
     return unflatten(po, layout), new_state, stats
 
 
@@ -347,10 +423,41 @@ def check_grad_dtypes(grads: PyTree, layout: TreeLayout) -> None:
 KINDS = ("sngm_global", "sngm_per_tensor", "msgd", "lars")
 
 
+def _leaf_values(parts_per_bucket, layout: TreeLayout) -> List[jnp.ndarray]:
+    """Fold per-chunk partials to one scalar per LEAF, indexed in the
+    original leaf order (the order every canonical reduction sums in)."""
+    out = [None] * layout.n_leaves
+    for b, parts in zip(layout.buckets, parts_per_bucket):
+        for s, v in zip(b.segments, _segment_sums(parts, b)):
+            out[s.index] = v
+    return out
+
+
+def _clip_tree_round(grads: PyTree, layout: TreeLayout, clip: float,
+                     backend: str):
+    """Round 0 of a clip-prefixed chain: pack the raw gradients and reduce
+    their global norm in one ``chunk_sumsq`` launch per bucket, then apply
+    the interpreter's exact ``clip_by_global_norm`` expression LEAF-WISE on
+    the gradient tree.  Clipping at the tree level (rather than on the
+    flat buffer) keeps the downstream kernels' input producers — a
+    pad/concat of per-leaf casts — the same graph shape as the un-clipped
+    chains', which is what keeps their last-ulp contraction behaviour
+    under XLA fusion (and hence bit-identity against the per-leaf jnp
+    reference) stable.  Costs one extra gradient packing per step.
+    Returns (clipped_grads, raw_gnorm)."""
+    parts = [_ops.chunk_sumsq(gf, backend=backend)
+             for gf in flatten(grads, layout)]
+    gnorm = jnp.sqrt(sum(_leaf_values(parts, layout)))
+    scale = clip / jnp.maximum(gnorm, clip)
+    clipped = jax.tree.map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+    return clipped, gnorm
+
+
 def multi_tensor_step(kind: str, params: PyTree, grads: PyTree,
                       momentum: PyTree, *, lr, beta: float,
                       weight_decay: float = 0.0, eps: float = 1e-12,
-                      trust: float = 0.001,
+                      trust: float = 0.001, clip: Optional[float] = None,
                       backend: str = "pallas") -> Tuple[PyTree, PyTree, dict]:
     """One fused optimizer step over the whole tree (pytree in/out).
 
@@ -365,12 +472,17 @@ def multi_tensor_step(kind: str, params: PyTree, grads: PyTree,
     """
     layout = build_layout(params)
     check_grad_dtypes(grads, layout)
+    stat_gnorm = None
+    if clip is not None:
+        grads, stat_gnorm = _clip_tree_round(grads, layout, float(clip),
+                                             backend)
     p_flats = flatten(params, layout)
     g_flats = flatten(grads, layout)
     u_flats = flatten(momentum, layout, cast_to=jnp.float32)
     po_flats, uo_flats, stats = multi_tensor_step_flat(
         kind, layout, p_flats, g_flats, u_flats, lr=lr, beta=beta,
-        weight_decay=weight_decay, eps=eps, trust=trust, backend=backend)
+        weight_decay=weight_decay, eps=eps, trust=trust,
+        stat_gnorm=stat_gnorm, backend=backend)
     return (unflatten(po_flats, layout),
             unflatten(uo_flats, layout, keep_dtype=True), stats)
 
@@ -380,13 +492,25 @@ def multi_tensor_step_flat(kind: str, layout: TreeLayout,
                            g_flats: Sequence[jnp.ndarray],
                            u_flats: Sequence[jnp.ndarray], *, lr, beta: float,
                            weight_decay: float = 0.0, eps: float = 1e-12,
-                           trust: float = 0.001, backend: str = "pallas"
+                           trust: float = 0.001,
+                           stat_gnorm: Optional[jnp.ndarray] = None,
+                           backend: str = "pallas"
                            ) -> Tuple[List[jnp.ndarray], List[jnp.ndarray],
                                       dict]:
     """The engine core: flat-in/flat-out, one (p, g, u) buffer triple per
     layout bucket.  Returns (new_p_flats, new_u_flats, stats) without ever
     materializing a pytree — the resident path calls this with the buffers
     held in ``FlatOptState`` and only the gradients freshly packed.
+
+    Clip-prefixed chains are compiled by the TREE-level wrappers
+    (``multi_tensor_step`` / ``resident_step``): they run the raw-norm
+    round (``_clip_tree_round``), pass the CLIPPED gradients in here, and
+    supply ``stat_gnorm`` — the raw norm the interpreter's clip stage
+    reported.  For msgd a supplied ``stat_gnorm`` also skips pass 1
+    entirely (its coefficients are constant and its chain has no
+    norm-emitting stage after the clip, so the decayed norm is never
+    needed); sngm/lars ignore ``stat_gnorm`` for stats because their
+    chains re-report the norm downstream of the clip.
     """
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
@@ -397,24 +521,23 @@ def multi_tensor_step_flat(kind: str, layout: TreeLayout,
     # the kernel); lars needs raw ||g|| and ||w|| per tensor instead.
     g_parts = []
     w_parts = []
-    for b, pf, gf in zip(layout.buckets, p_flats, g_flats):
-        if kind == "lars":
-            g_parts.append(_ops.chunk_sumsq(gf, backend=backend))
-            w_parts.append(_ops.chunk_sumsq(pf, backend=backend))
-        else:
-            g_parts.append(_ops.chunk_sumsq(gf, pf, wd=wd, backend=backend))
+    if not (kind == "msgd" and stat_gnorm is not None):
+        for b, pf, gf in zip(layout.buckets, p_flats, g_flats):
+            if kind == "lars":
+                g_parts.append(_ops.chunk_sumsq(gf, backend=backend))
+                w_parts.append(_ops.chunk_sumsq(pf, backend=backend))
+            else:
+                g_parts.append(_ops.chunk_sumsq(gf, pf, wd=wd,
+                                                backend=backend))
 
     # per-segment and global sums, in ORIGINAL leaf order so the sequential
     # accumulation matches tree_squared_norm exactly
-    gsq_by_leaf = [None] * layout.n_leaves
-    wsq_by_leaf = [None] * layout.n_leaves
-    for bi, b in enumerate(layout.buckets):
-        for s, v in zip(b.segments, _segment_sums(g_parts[bi], b)):
-            gsq_by_leaf[s.index] = v
-        if kind == "lars":
-            for s, v in zip(b.segments, _segment_sums(w_parts[bi], b)):
-                wsq_by_leaf[s.index] = v
-    gnorm = jnp.sqrt(sum(gsq_by_leaf))
+    if g_parts:
+        gsq_by_leaf = _leaf_values(g_parts, layout)
+        gnorm = jnp.sqrt(sum(gsq_by_leaf))
+    else:
+        gsq_by_leaf, gnorm = None, stat_gnorm
+    wsq_by_leaf = _leaf_values(w_parts, layout) if kind == "lars" else None
 
     # ---- coefficients ----------------------------------------------------
     lr = jnp.asarray(lr, jnp.float32)
@@ -446,8 +569,7 @@ def multi_tensor_step_flat(kind: str, layout: TreeLayout,
         cast_g_first = True
 
     # ---- pass 2: fused momentum + apply per bucket -----------------------
-    po_flats, uo_flats = [], []
-    usq_by_leaf = [None] * layout.n_leaves
+    po_flats, uo_flats, usq_parts = [], [], []
     for b, pf, gf, uf, ac in zip(layout.buckets, p_flats, g_flats, u_flats,
                                  a_chunks):
         po, uo, usq = _ops.fused_update(pf, gf, uf, ac, c, beta=beta, wd=wd,
@@ -455,9 +577,122 @@ def multi_tensor_step_flat(kind: str, layout: TreeLayout,
                                         backend=backend)
         po_flats.append(po)
         uo_flats.append(uo)
-        for s, v in zip(b.segments, _segment_sums(usq, b)):
-            usq_by_leaf[s.index] = v
+        usq_parts.append(usq)
 
     stats = {"grad_norm": gnorm, "lr": lr,
-             "update_norm": jnp.sqrt(sum(usq_by_leaf))}
+             "update_norm": jnp.sqrt(sum(_leaf_values(usq_parts, layout)))}
     return po_flats, uo_flats, stats
+
+
+# ---------------------------------------------------------------------------
+# the LAMB/Adam engine step
+# ---------------------------------------------------------------------------
+
+def multi_tensor_lamb_step(params: PyTree, grads: PyTree, count, m: PyTree,
+                           v: PyTree, *, lr, b1: float, b2: float,
+                           eps: float, weight_decay: float = 0.0,
+                           trust_eps: float = 0.0,
+                           clip: Optional[float] = None,
+                           backend: str = "pallas"
+                           ) -> Tuple[PyTree, PyTree, PyTree, dict]:
+    """One fused LAMB step, pytree in/out (the per-step packing path).
+    ``count`` is the Adam step counter BEFORE this step (bias correction
+    uses t = count + 1).  Returns (new_params, new_m, new_v, stats)."""
+    layout = build_layout(params)
+    check_grad_dtypes(grads, layout)
+    stat_gnorm = None
+    if clip is not None:
+        grads, stat_gnorm = _clip_tree_round(grads, layout, float(clip),
+                                             backend)
+    p_flats = flatten(params, layout)
+    g_flats = flatten(grads, layout)
+    m_flats = flatten(m, layout, cast_to=jnp.float32)
+    v_flats = flatten(v, layout, cast_to=jnp.float32)
+    po, mo, vo, stats = multi_tensor_lamb_step_flat(
+        layout, p_flats, g_flats, m_flats, v_flats, count=count, lr=lr,
+        b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+        trust_eps=trust_eps, stat_gnorm=stat_gnorm, backend=backend)
+    return (unflatten(po, layout), unflatten(mo, layout, keep_dtype=True),
+            unflatten(vo, layout, keep_dtype=True), stats)
+
+
+def multi_tensor_lamb_step_flat(layout: TreeLayout,
+                                p_flats: Sequence[jnp.ndarray],
+                                g_flats: Sequence[jnp.ndarray],
+                                m_flats: Sequence[jnp.ndarray],
+                                v_flats: Sequence[jnp.ndarray], *, count,
+                                lr, b1: float, b2: float, eps: float,
+                                weight_decay: float = 0.0,
+                                trust_eps: float = 0.0,
+                                stat_gnorm: Optional[jnp.ndarray] = None,
+                                backend: str = "pallas"
+                                ) -> Tuple[List[jnp.ndarray],
+                                           List[jnp.ndarray],
+                                           List[jnp.ndarray], dict]:
+    """The LAMB engine core: two launches per bucket (Adam-moment pass +
+    apply pass); the tree-level wrappers add the round-0 raw-norm launch
+    and pass clipped gradients + ``stat_gnorm`` for clip-prefixed chains.
+
+    The Adam pass advances both f32 moments and forms the bias-corrected,
+    decoupled-decayed direction in one kernel, emitting the per-chunk
+    sumsq partials of direction / params / grads; the host folds them
+    per segment (canonical order) into the LAMB trust ratios, and the
+    ``scale_apply`` pass applies the per-segment ratio and the lr — so
+    ``p <- p - lr*(ratio*u)`` and the ``update_norm`` partials come out
+    of the same launch, with no momentum operand read.  ``eps`` must
+    be > 0 (zero-pad invariance; the chain compiler enforces this).
+    Numerics mirror the chain interpreter's
+    ``scale_by_adam -> add_decayed_weights -> scale_by_trust_ratio ->
+    scale_by_schedule`` stages expression-for-expression.
+    """
+    assert eps > 0.0, "fused lamb requires adam eps > 0 (pad invariance)"
+    wd = float(weight_decay)
+    t = jnp.asarray(count).astype(jnp.float32) + 1.0
+    bc1 = 1 - b1 ** t          # the interpreter's exact bias-correction
+    bc2 = 1 - b2 ** t
+
+    # ---- pass 1: fused Adam moments + direction + norm partials ----------
+    mo_flats, vo_flats, u_flats = [], [], []
+    usq_parts, psq_parts, gsq_parts = [], [], []
+    for pf, gf, mf, vf in zip(p_flats, g_flats, m_flats, v_flats):
+        mo, vo, ud, usq, psq, gsq = _ops.adam_update(
+            pf, gf, mf, vf, bc1, bc2, b1=b1, b2=b2, eps=eps,
+            wd=wd, backend=backend)
+        mo_flats.append(mo)
+        vo_flats.append(vo)
+        u_flats.append(ud)
+        usq_parts.append(usq)
+        psq_parts.append(psq)
+        gsq_parts.append(gsq)
+
+    # grad_norm stat: the interpreter chain reports the raw-gradient norm
+    # (the clip stage's report, or the fallback default) — never the
+    # decayed one.  For clip chains the raw norm arrives as stat_gnorm.
+    if stat_gnorm is not None:
+        gnorm = stat_gnorm
+    else:
+        gnorm = jnp.sqrt(sum(_leaf_values(gsq_parts, layout)))
+
+    # ---- per-segment trust ratios ----------------------------------------
+    usq_by_leaf = _leaf_values(usq_parts, layout)
+    wsq_by_leaf = _leaf_values(psq_parts, layout)
+
+    def ratio(s):
+        wn = jnp.sqrt(wsq_by_leaf[s.index])
+        un = jnp.sqrt(usq_by_leaf[s.index])
+        return jnp.where((wn > 0) & (un > 0), wn / (un + trust_eps), 1.0)
+
+    a_chunks = [_per_chunk(b, [ratio(s) for s in b.segments])
+                for b in layout.buckets]
+
+    # ---- pass 2: trust-scale + apply -------------------------------------
+    lr = jnp.asarray(lr, jnp.float32)
+    po_flats, ssq_parts = [], []
+    for pf, ud, ac in zip(p_flats, u_flats, a_chunks):
+        po, ssq = _ops.scale_apply(pf, ud, ac, lr, backend=backend)
+        po_flats.append(po)
+        ssq_parts.append(ssq)
+
+    stats = {"grad_norm": gnorm, "lr": lr,
+             "update_norm": jnp.sqrt(sum(_leaf_values(ssq_parts, layout)))}
+    return po_flats, mo_flats, vo_flats, stats

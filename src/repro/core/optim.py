@@ -28,7 +28,7 @@ the property that makes SNGM cheap to distribute (DESIGN.md §3).
     state = opt.init(params)
     params, state, stats = opt.step(grads, state, params)
 
-Fused execution: ``sngm``/``msgd``/``lars`` accept ``fused=``
+Fused execution: ``sngm``/``msgd``/``lars``/``lamb`` accept ``fused=``
 
   * ``None``           — pure jnp (the reference path).
   * ``"multi_tensor"`` — the multi-tensor engine (core/multi_tensor.py):
@@ -77,8 +77,9 @@ import jax.numpy as jnp
 
 from repro.core import transform as T
 from repro.core.multi_tensor import (
-    FlatOptState, build_layout, flatten, global_norm, init_flat_state,
-    leaf_sumsq, multi_tensor_step, resident_step, tree_squared_norm)
+    FlatOptState, build_layout, flatten, global_norm, init_flat_adam_state,
+    init_flat_state, leaf_sumsq, multi_tensor_step, resident_lamb_step,
+    resident_step, tree_squared_norm)
 from repro.core.schedules import Schedule, make_schedule
 
 PyTree = Any
@@ -128,22 +129,68 @@ def _init(params: PyTree) -> OptState:
 AnyOptState = Union[OptState, FlatOptState]
 
 
-def to_pytree(state: AnyOptState) -> OptState:
-    """FlatOptState -> OptState (pytree momentum), lossless; OptState
-    passes through.  Use to hand a resident state to code that expects
-    per-leaf momentum (old checkpoints, external tooling)."""
-    if isinstance(state, OptState):
+def _chain_state_of_flat(state: FlatOptState) -> T.ChainOptState:
+    """Rebuild the interpreter's ChainOptState for an Adam-family flat
+    state: the ``form`` aux records the compiled chain's stateless-stage
+    arities, and every per-stage counter equals the step (they advance in
+    lockstep by construction)."""
+    _, n_prefix, n_mid = state.form
+    m, v = state.moments
+    inner = ((T.EmptyState(),) * n_prefix
+             + (T.ScaleByAdamState(count=state.step, m=m, v=v),)
+             + (T.EmptyState(),) * n_mid
+             + (T.ScaleByScheduleState(count=state.step),))
+    return T.ChainOptState(step=state.step, inner=inner)
+
+
+def to_pytree(state) -> Union[OptState, "T.ChainOptState"]:
+    """FlatOptState -> its pytree form, lossless: OptState (pytree
+    momentum) for the momentum kinds, the interpreter's ChainOptState for
+    the Adam family (so a fused-lamb checkpoint loads straight into the
+    interpreter path).  OptState/ChainOptState pass through.  Use to hand
+    a resident state to code that expects per-leaf state (checkpoints,
+    external tooling)."""
+    if not isinstance(state, FlatOptState):
         return state
+    if state.m_flats:
+        return _chain_state_of_flat(state)
     return OptState(step=state.step, momentum=state.momentum)
 
 
-def from_pytree(state: AnyOptState, params: PyTree) -> FlatOptState:
-    """OptState -> FlatOptState (flat-buffer-resident), lossless;
+def from_pytree(state, params: PyTree) -> FlatOptState:
+    """pytree form -> FlatOptState (flat-buffer-resident), lossless;
     FlatOptState passes through.  ``params`` supplies the layout and the
-    resident parameter buffers."""
+    resident parameter buffers.  A ChainOptState is accepted when it has
+    the canonical Adam-family shape (one ScaleByAdamState, schedule
+    last); its per-stage counters are assumed equal to the step, which
+    the chain update guarantees."""
     if isinstance(state, FlatOptState):
         return state
     layout = build_layout(params)
+    if isinstance(state, T.ChainOptState):
+        adam_i = [i for i, s in enumerate(state.inner)
+                  if isinstance(s, T.ScaleByAdamState)]
+        # every other stage must be STATELESS: a flat form that silently
+        # dropped a TraceState/EmaParamsState would corrupt a resumed run
+        others_ok = all(isinstance(s, T.EmptyState)
+                        for i, s in enumerate(state.inner)
+                        if i not in adam_i and i != len(state.inner) - 1)
+        if len(adam_i) != 1 or not others_ok or not isinstance(
+                state.inner[-1], T.ScaleByScheduleState):
+            raise TypeError(
+                "from_pytree: only the canonical (clip ->) scale_by_adam "
+                "-> stateless... -> scale_by_schedule chain state has a "
+                "flat form; "
+                f"got inner types {[type(s).__name__ for s in state.inner]}")
+        adam = state.inner[adam_i[0]]
+        n_mid = len(state.inner) - adam_i[0] - 2
+        return FlatOptState(
+            step=state.step,
+            p_flats=tuple(flatten(params, layout)),
+            u_flats=(), layout=layout,
+            m_flats=tuple(flatten(adam.m, layout, cast_to=jnp.float32)),
+            v_flats=tuple(flatten(adam.v, layout, cast_to=jnp.float32)),
+            form=("lamb", adam_i[0], n_mid))
     return FlatOptState(
         step=state.step,
         p_flats=tuple(flatten(params, layout)),
@@ -184,11 +231,24 @@ def _resolve_fused(use_pallas: bool, fused: Optional[str],
 _PER_LEAF_KINDS = ("sngm_global", "lars")
 
 
+def _clip_tree(grads: PyTree, clip: float):
+    """The interpreter's exact clip_by_global_norm: returns the clipped
+    gradient tree (scaled in f32, cast back per leaf) and the RAW norm."""
+    raw = global_norm(grads)
+    scale = clip / jnp.maximum(raw, clip)
+    clipped = jax.tree.map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+    return clipped, raw
+
+
 def _jnp_kind_step(kind: str, grads: PyTree, momentum: PyTree, params: PyTree,
                    *, lr, beta: float, weight_decay: float, eps: float,
-                   trust: float):
+                   trust: float, clip: Optional[float] = None):
     """Pure-jnp reference step for one engine kind.  Returns
     (new_params, new_momentum, stats)."""
+    raw_gnorm = None
+    if clip is not None:
+        grads, raw_gnorm = _clip_tree(grads, clip)
     if kind == "lars":
         def upd(v, g, w):
             g = g.astype(jnp.float32)
@@ -221,6 +281,10 @@ def _jnp_kind_step(kind: str, grads: PyTree, momentum: PyTree, params: PyTree,
                 lambda v, gi: beta * v + gi.astype(jnp.float32), momentum, g)
         new_p = jax.tree.map(lambda w, u: (w - lr * u).astype(w.dtype),
                              params, new_u)
+    if clip is not None and kind == "msgd":
+        # a clipped msgd chain has no norm-emitting stage after the clip,
+        # so the interpreter reports the RAW gradient norm
+        gnorm = raw_gnorm
     stats = {"grad_norm": gnorm, "lr": lr, "update_norm": global_norm(new_u)}
     return new_p, new_u, stats
 
@@ -257,18 +321,25 @@ def _per_leaf_kind_step(kind: str, grads: PyTree, momentum: PyTree,
 
 def _kind_optimizer(kind: str, schedule: Schedule, *, beta: float,
                     weight_decay: float = 0.0, eps: float = 1e-12,
-                    trust: float = 0.001, fused_mode: Optional[str] = None,
+                    trust: float = 0.001, clip: Optional[float] = None,
+                    fused_mode: Optional[str] = None,
                     name: Optional[str] = None) -> Optimizer:
     """Build the Optimizer for one fused-engine kind in the requested
     execution mode.  This is ``compile_chain``'s target for matched
     chains; all chains matching the same kind share this one
     implementation instead of re-implementing the four-way
-    jnp/per_leaf/multi_tensor/resident dispatch."""
+    jnp/per_leaf/multi_tensor/resident dispatch.  ``clip`` prepends the
+    two-round-norm clip_by_global_norm compilation (engine paths) or the
+    equivalent leaf-wise pre-scale (jnp path)."""
     if fused_mode == "per_leaf" and kind not in _PER_LEAF_KINDS:
         raise ValueError(f"fused='per_leaf' is not available for kind "
                          f"{kind!r}; only {_PER_LEAF_KINDS} have per-leaf "
                          f"kernels — use fused='multi_tensor'")
-    kw = dict(beta=beta, weight_decay=weight_decay, eps=eps, trust=trust)
+    if fused_mode == "per_leaf" and clip is not None:
+        raise ValueError("fused='per_leaf' has no clip round; use "
+                         "fused='multi_tensor' for clip-prefixed chains")
+    kw = dict(beta=beta, weight_decay=weight_decay, eps=eps, trust=trust,
+              clip=clip)
 
     def step_fn(grads, state, params):
         lr = schedule(state.step)
@@ -278,16 +349,87 @@ def _kind_optimizer(kind: str, schedule: Schedule, *, beta: float,
             new_p, new_u, stats = multi_tensor_step(
                 kind, params, grads, state.momentum, lr=lr, **kw)
             return new_p, OptState(state.step + 1, new_u), stats
-        step_impl = (_per_leaf_kind_step if fused_mode == "per_leaf"
-                     else _jnp_kind_step)
+        if fused_mode == "per_leaf":
+            new_p, new_u, stats = _per_leaf_kind_step(
+                kind, grads, state.momentum, params, lr=lr, beta=beta,
+                weight_decay=weight_decay, eps=eps, trust=trust)
+            return new_p, OptState(state.step + 1, new_u), stats
         # a FlatOptState fed to a non-engine path materializes its
         # momentum view and hands back a plain OptState
-        new_p, new_u, stats = step_impl(kind, grads, state.momentum, params,
-                                        lr=lr, **kw)
+        new_p, new_u, stats = _jnp_kind_step(kind, grads, state.momentum,
+                                             params, lr=lr, **kw)
         return new_p, OptState(state.step + 1, new_u), stats
 
     init = init_flat_state if fused_mode == "multi_tensor" else _init
     return Optimizer(name or kind, init, step_fn, kind=kind)
+
+
+# ---------------------------------------------------------------------------
+# the LAMB kind: Adam-family execution (fp32 m/v resident alongside params)
+# ---------------------------------------------------------------------------
+
+def _lamb_optimizer(schedule: Schedule, *, b1: float, b2: float, eps: float,
+                    weight_decay: float = 0.0, trust_eps: float = 0.0,
+                    clip: Optional[float] = None,
+                    fused_mode: Optional[str] = None,
+                    name: Optional[str] = None) -> Optimizer:
+    """``compile_chain``'s target for the canonical LAMB chain
+    ``(clip ->) scale_by_adam -> add_decayed_weights ->
+    scale_by_trust_ratio -> scale_by_schedule``.
+
+    The jnp reference path IS the chain interpreter (so the fused engine
+    is validated against the exact transform expressions); the
+    ``multi_tensor`` mode runs the two-pass LAMB pipeline in
+    ``core.multi_tensor`` on the resident ``FlatOptState`` (with
+    ``m_flats``/``v_flats``) that ``opt.init`` returns.  A
+    ``ChainOptState`` fed to the fused optimizer runs the (bit-exact)
+    interpreter step instead — the engine form is the flat state; convert
+    with ``from_pytree`` to stay on the engine after a cross-form
+    restore, which is exactly what the launcher does on ``--resume``."""
+    if fused_mode not in (None, "multi_tensor"):
+        raise ValueError(f"fused={fused_mode!r} is not available for lamb; "
+                         f"use fused='multi_tensor' or None")
+    prefix = (T.clip_by_global_norm(clip),) if clip is not None else ()
+    tx = T.chain(*prefix,
+                 T.scale_by_adam(b1, b2, eps),
+                 T.add_decayed_weights(weight_decay),
+                 T.scale_by_trust_ratio(trust_eps),
+                 T.scale_by_schedule(schedule))
+    form = ("lamb", len(prefix), 2)
+    kw = dict(b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+              trust_eps=trust_eps, clip=clip)
+
+    def interp_step(grads, state, params):
+        # identical to compile_chain's interpreter step_fn (the reference)
+        updates, inner, stats = tx.update(grads, state.inner, params)
+        new_p = jax.tree.map(lambda w, u: (w - u).astype(w.dtype),
+                             params, updates)
+        stats = dict(stats)
+        if "grad_norm" not in stats:
+            stats["grad_norm"] = global_norm(grads)
+        return new_p, T.ChainOptState(state.step + 1, inner), stats
+
+    def step_fn(grads, state, params):
+        if fused_mode == "multi_tensor" and isinstance(state, FlatOptState):
+            lr = schedule(state.step)
+            return resident_lamb_step(grads, state, lr=lr, **kw)
+        # every other (mode, state-form) pairing runs the interpreter:
+        # the engine form for lamb is the resident FlatOptState, and a
+        # ChainOptState fed to the fused optimizer takes the bit-exact
+        # interpreter step rather than a per-step packing path (whose
+        # XLA fusion context would cost last-ulp identity; convert with
+        # from_pytree to stay on the engine)
+        if isinstance(state, FlatOptState):
+            state = to_pytree(state)        # materialize the chain view
+        return interp_step(grads, state, params)
+
+    def init(params):
+        if fused_mode == "multi_tensor":
+            return init_flat_adam_state(params, form=form)
+        return T.ChainOptState(step=jnp.zeros((), jnp.int32),
+                               inner=tx.init(params))
+
+    return Optimizer(name or "lamb", init, step_fn, kind="lamb")
 
 
 # ---------------------------------------------------------------------------
@@ -400,12 +542,17 @@ def lamb(schedule: Schedule,
     """LAMB (You et al. 2020): bias-corrected Adam direction, decoupled
     weight decay, per-tensor trust-ratio rescale, schedule last.
 
-    Runs on the chain interpreter (there is no fused LAMB kind yet, so a
-    ``fused=`` request warns and falls back to jnp).  All norms use the
-    canonical ``leaf_sumsq`` chunked reduction and all moment math is
-    f32, so LAMB's norms are bit-consistent with every other path; stats
-    report {grad_norm, lr, update_norm} like the rest of the family,
-    with update_norm taken pre-lr (the trust-rescaled direction).
+    The chain compiles onto the engine's ``lamb`` kind: ``fused=None``
+    runs the chain interpreter (the reference numerics), and
+    ``fused="multi_tensor"`` runs the fused two-pass LAMB pipeline —
+    fp32 Adam moments resident in the flat buffers (``FlatOptState``
+    with ``m_flats``/``v_flats``), two Pallas launches per step, fp32
+    bit-identical to the interpreter (bf16: see README tolerance
+    policy).  All norms use the canonical ``leaf_sumsq`` chunked
+    reduction; stats report {grad_norm, lr, update_norm} like the rest
+    of the family, with update_norm taken pre-lr (the trust-rescaled
+    direction) and grad_norm the RAW gradient norm (the interpreter
+    chain has no norm-emitting stage, so its fallback default applies).
     """
     tx = T.chain(T.scale_by_adam(b1, b2, eps),
                  T.add_decayed_weights(weight_decay),

@@ -19,7 +19,9 @@ Execution is two-tier:
 
   * ``compile_chain`` pattern-matches the chain's shape against the
     multi-tensor engine's fused kinds (``sngm_global``,
-    ``sngm_per_tensor``, ``msgd``, ``lars``).  A match compiles to the
+    ``sngm_per_tensor``, ``msgd``, ``lars``, ``lamb``), each optionally
+    prefixed by ``clip_by_global_norm`` (compiled as a two-round norm
+    pass, not an interpreter fallback).  A match compiles to the
     kind-level optimizer in ``core.optim`` — the bit-exact jnp reference
     path, the O(1)-launch Pallas engine, and the ``FlatOptState``
     resident fast path all stay available, exactly as before the chain
@@ -366,19 +368,24 @@ def chain(*transforms: GradientTransform) -> GradientTransform:
 # ---------------------------------------------------------------------------
 
 # Chain shapes the compiler recognizes, mapped to the engine's fused kinds.
-# ``add_decayed_weights`` is optional where listed (absent == wd 0); a
-# nesterov trace or any other deviation falls through to the interpreter.
+# '?'-suffixed stages are optional: ``add_decayed_weights`` absent == wd 0,
+# ``clip_by_global_norm`` absent == no clip round.  A nesterov trace, an
+# adam eps <= 0, or any other deviation falls through to the interpreter.
 _PATTERNS = (
     ("sngm_global",
-     ("add_decayed_weights?", "normalize_by_global_norm", "trace",
-      "scale_by_schedule")),
+     ("clip_by_global_norm?", "add_decayed_weights?",
+      "normalize_by_global_norm", "trace", "scale_by_schedule")),
     ("sngm_per_tensor",
-     ("add_decayed_weights?", "normalize_per_tensor", "trace",
-      "scale_by_schedule")),
+     ("clip_by_global_norm?", "add_decayed_weights?", "normalize_per_tensor",
+      "trace", "scale_by_schedule")),
     ("msgd",
-     ("add_decayed_weights?", "trace", "scale_by_schedule")),
+     ("clip_by_global_norm?", "add_decayed_weights?", "trace",
+      "scale_by_schedule")),
     ("lars",
-     ("trust_ratio", "scale_by_schedule", "trace")),
+     ("clip_by_global_norm?", "trust_ratio", "scale_by_schedule", "trace")),
+    ("lamb",
+     ("clip_by_global_norm?", "scale_by_adam", "add_decayed_weights?",
+      "scale_by_trust_ratio", "scale_by_schedule")),
 )
 
 
@@ -400,20 +407,33 @@ def _try_match(parts, pattern):
 
 def match_chain(tx: GradientTransform) -> Optional[Tuple[str, Dict[str, Any]]]:
     """Pattern-match a chain onto a fused kind.  Returns ``(kind,
-    params)`` with params ``{schedule, beta, weight_decay, eps, trust}``,
-    or None when the chain is a novel composition."""
+    params)``: for the momentum kinds params are ``{schedule, beta,
+    weight_decay, eps, trust, clip}``, for ``lamb`` they are ``{schedule,
+    b1, b2, eps, weight_decay, trust_eps, clip}``.  Returns None when the
+    chain is a novel composition."""
     parts = tx.parts if tx.parts else (tx,)
     for kind, pattern in _PATTERNS:
         got = _try_match(parts, pattern)
         if got is None:
             continue
-        if got["trace"].get("nesterov"):
+        if "trace" in got and got["trace"].get("nesterov"):
             return None                       # no fused nesterov kind
         kp = {"schedule": got["scale_by_schedule"].get("schedule"),
-              "beta": got["trace"].get("beta"),
-              "weight_decay": 0.0, "eps": 1e-12, "trust": 0.001}
-        if "add_decayed_weights" in got:
-            kp["weight_decay"] = got["add_decayed_weights"].get("weight_decay")
+              "clip": None}
+        if "clip_by_global_norm" in got:
+            kp["clip"] = got["clip_by_global_norm"].get("max_norm")
+        wd = (got["add_decayed_weights"].get("weight_decay")
+              if "add_decayed_weights" in got else 0.0)
+        if kind == "lamb":
+            adam = got["scale_by_adam"]
+            if adam.get("eps") <= 0.0:
+                return None   # engine pad invariance needs eps > 0
+            kp.update(b1=adam.get("b1"), b2=adam.get("b2"),
+                      eps=adam.get("eps"), weight_decay=wd,
+                      trust_eps=got["scale_by_trust_ratio"].get("eps"))
+            return kind, kp
+        kp.update(beta=got["trace"].get("beta"), weight_decay=wd,
+                  eps=1e-12, trust=0.001)
         for src in ("normalize_by_global_norm", "normalize_per_tensor"):
             if src in got:
                 kp["eps"] = got[src].get("eps")
@@ -445,10 +465,15 @@ def compile_chain(tx: GradientTransform, *, fused: Optional[str] = None,
     matched = None if interpret else match_chain(tx)
     if matched is not None:
         kind, kp = matched
+        if kind == "lamb":
+            return optim._lamb_optimizer(
+                kp["schedule"], b1=kp["b1"], b2=kp["b2"], eps=kp["eps"],
+                weight_decay=kp["weight_decay"], trust_eps=kp["trust_eps"],
+                clip=kp["clip"], fused_mode=fused, name=name or kind)
         return optim._kind_optimizer(
             kind, kp["schedule"], beta=kp["beta"],
             weight_decay=kp["weight_decay"], eps=kp["eps"], trust=kp["trust"],
-            fused_mode=fused, name=name or kind)
+            clip=kp["clip"], fused_mode=fused, name=name or kind)
     if fused is not None:
         warnings.warn(
             f"chain {tuple(p.name for p in (tx.parts or (tx,)))} does not "

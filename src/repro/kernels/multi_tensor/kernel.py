@@ -20,8 +20,8 @@ optimizer step:
                               new momentum so ``update_norm`` stats need no
                               third pass.
 
-One (a, c, wd, beta, cast_g_first) parameterization covers all four
-optimizers:
+One (a, c, wd, beta, cast_g_first) parameterization covers the four
+momentum optimizers:
 
     u_new = beta * u + a * decay(g, p)        decay = g + wd*p (coupled wd)
     p_new = (p - c * u_new).astype(p.dtype)
@@ -30,6 +30,26 @@ optimizers:
     sngm[per_tensor] a = 1/(||g_dec||_seg+eps) per segment   c = lr
     lars             a = lr * local_lr_seg  per segment      c = 1
     msgd             a = 1                                   c = lr
+
+LAMB/Adam adds two kernels.  ``adam_update`` (one launch per bucket)
+advances both fp32 Adam moments, materializes the bias-corrected (and
+decoupled-weight-decayed) direction ``u``, and emits per-chunk sumsq
+partials of ``u``, ``p`` and ``g`` — so the host can form the
+per-segment trust ratios and the stats norms without extra passes.
+``scale_apply`` (the second launch) scales by the per-segment ratio and
+applies, emitting the scaled direction's sumsq partials (the
+``update_norm`` stat) — no momentum operand, no dead outputs:
+
+    u     = m_hat / (sqrt(v_hat) + eps) + wd * p     (adam_update)
+    p_new = (p - lr * (ratio_seg * u)).astype(p.dtype)  (scale_apply)
+
+Clip-prefixed chains add a raw-norm ``chunk_sumsq`` round BEFORE these
+kernels; the host then rescales the flat gradient buffers with the
+interpreter's exact clip expression (a fused jnp elementwise op, zero
+extra launches) and runs the unchanged passes on the clipped buffers —
+see ``core.multi_tensor``.  The kernels themselves are clip-agnostic,
+which keeps their op graphs (and therefore their last-ulp contraction
+behaviour under XLA fusion) byte-stable across all chain variants.
 
 Layout: buffers are viewed as (n_chunks, CHUNK) rows; the grid walks
 tiles of TILE_ROWS rows.  Coefficients/partials ride in (TILE_ROWS, 1)
@@ -131,8 +151,10 @@ def fused_update(p, g, u, a_chunk, c, *, beta: float, wd: float,
                  cast_g_first: bool = False, interpret: bool = False):
     """Whole-bucket fused optimizer update.
 
-    p, g: flat (n,) in the bucket dtype; u: flat (n,) f32;
-    a_chunk: (n/CHUNK,) f32 per-chunk coefficient; c: scalar.
+    p: flat (n,) in the bucket dtype; g: flat (n,) gradient buffer (bucket
+    dtype, or f32 for the LAMB apply where ``g`` carries the pre-formed
+    Adam direction); u: flat (n,) f32; a_chunk: (n/CHUNK,) f32 per-chunk
+    coefficient; c: scalar.
     Returns (p_new [p.dtype], u_new [f32], u_sumsq_partials [(n/CHUNK,) f32]).
     """
     assert p.ndim == 1 and p.size % TILE == 0, p.shape
@@ -157,3 +179,111 @@ def fused_update(p, g, u, a_chunk, c, *, beta: float, wd: float,
     )(cs, a_chunk.reshape(-1, 1), p.reshape(-1, CHUNK),
       g.reshape(-1, CHUNK), u.reshape(-1, CHUNK))
     return po.ravel(), uo.ravel(), usq.ravel()
+
+
+def _scale_apply_kernel(c_ref, a_ref, p_ref, g_ref, po_ref, ssq_ref):
+    """Per-chunk-scaled apply (LAMB's second launch): the expression
+    mirrors the interpreter's scale_by_trust_ratio (ratio * u) ->
+    scale_by_schedule (lr * .) -> apply (w - .) stages exactly."""
+    s = a_ref[...] * g_ref[...]          # (TILE_ROWS, 1) a broadcasts
+    po_ref[...] = (p_ref[...] - c_ref[0] * s).astype(po_ref.dtype)
+    ssq_ref[...] = jnp.sum(jnp.square(s), axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def scale_apply(p, g, a_chunk, c, *, interpret: bool = False):
+    """Whole-bucket scale-and-apply: ``p <- (p - c * (a * g)).astype``.
+
+    p: flat (n,) in the bucket dtype; g: flat (n,) f32 direction;
+    a_chunk: (n/CHUNK,) f32 per-chunk coefficient; c: scalar.
+    Returns (p_new [p.dtype], s_sumsq_partials [(n/CHUNK,) f32]) where
+    s = a * g is the scaled direction (its folded norm is LAMB's
+    pre-lr ``update_norm`` stat).
+    """
+    assert p.ndim == 1 and p.size % TILE == 0, p.shape
+    n_chunks = p.size // CHUNK
+    assert a_chunk.shape == (n_chunks,), a_chunk.shape
+    rows = _tile_rows(n_chunks, interpret)
+    grid = n_chunks // rows
+    tile = pl.BlockSpec((rows, CHUNK), lambda i: (i, 0))
+    ctile = pl.BlockSpec((rows, 1), lambda i: (i, 0))
+    cs = jnp.reshape(c, (1,)).astype(jnp.float32)
+    po, ssq = pl.pallas_call(
+        _scale_apply_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  ctile, tile, tile],
+        out_specs=[tile, ctile],
+        out_shape=[jax.ShapeDtypeStruct((n_chunks, CHUNK), p.dtype),
+                   jax.ShapeDtypeStruct((n_chunks, 1), jnp.float32)],
+        interpret=interpret,
+    )(cs, a_chunk.reshape(-1, 1), p.reshape(-1, CHUNK),
+      g.reshape(-1, CHUNK))
+    return po.ravel(), ssq.ravel()
+
+
+# ---------------------------------------------------------------------------
+# LAMB/Adam pass: moments + bias-corrected direction + norm partials
+# ---------------------------------------------------------------------------
+
+def _adam_kernel(b_ref, p_ref, g_ref, m_ref, v_ref,
+                 mo_ref, vo_ref, uo_ref, usq_ref, psq_ref, gsq_ref,
+                 *, b1, b2, eps, wd):
+    """One fused pass: advance both Adam moments, form the bias-corrected
+    (decoupled-decayed) direction, and emit the three per-chunk sumsq
+    partial sets (direction, params, grads) the host needs for the
+    trust ratios and the stats norms.  Every expression mirrors the chain
+    interpreter's ``scale_by_adam`` / ``add_decayed_weights`` stages,
+    including the cast orders (wd*p in the param dtype, then f32 add)."""
+    g = g_ref[...]
+    g32 = g.astype(jnp.float32)
+    gsq_ref[...] = jnp.sum(jnp.square(g32), axis=1, keepdims=True)
+    m_new = b1 * m_ref[...] + (1 - b1) * g32
+    v_new = b2 * v_ref[...] + (1 - b2) * jnp.square(g32)
+    u = (m_new / b_ref[0]) / (jnp.sqrt(v_new / b_ref[1]) + eps)
+    if wd != 0.0:
+        u = u + wd * p_ref[...]
+    mo_ref[...] = m_new
+    vo_ref[...] = v_new
+    uo_ref[...] = u
+    usq_ref[...] = jnp.sum(jnp.square(u), axis=1, keepdims=True)
+    psq_ref[...] = jnp.sum(jnp.square(p_ref[...].astype(jnp.float32)),
+                           axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("b1", "b2", "eps", "wd", "interpret"))
+def adam_update(p, g, m, v, bc1, bc2, *, b1: float, b2: float,
+                eps: float, wd: float = 0.0, interpret: bool = False):
+    """Whole-bucket fused Adam-moment pass (LAMB's first launch).
+
+    p, g: flat (n,) in the bucket dtype; m, v: flat (n,) f32 moments;
+    bc1, bc2: scalar bias corrections ``1 - b^t`` (computed host-side so
+    they match the interpreter's expression exactly).  ``eps`` must be
+    > 0 so zero padding maps to zero direction (0 / (0 + eps)); the
+    chain compiler refuses eps <= 0.
+    Returns (m_new, v_new, u [all f32 flat], and f32 (n/CHUNK,) sumsq
+    partials of u, p, g).
+    """
+    assert p.ndim == 1 and p.size % TILE == 0, p.shape
+    n_chunks = p.size // CHUNK
+    rows = _tile_rows(n_chunks, interpret)
+    grid = n_chunks // rows
+    tile = pl.BlockSpec((rows, CHUNK), lambda i: (i, 0))
+    ctile = pl.BlockSpec((rows, 1), lambda i: (i, 0))
+    bs = jnp.stack([jnp.asarray(bc1, jnp.float32),
+                    jnp.asarray(bc2, jnp.float32)])
+    flat = jax.ShapeDtypeStruct((n_chunks, CHUNK), jnp.float32)
+    part = jax.ShapeDtypeStruct((n_chunks, 1), jnp.float32)
+    mo, vo, uo, usq, psq, gsq = pl.pallas_call(
+        functools.partial(_adam_kernel, b1=b1, b2=b2, eps=eps, wd=wd),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  tile, tile, tile, tile],
+        out_specs=[tile, tile, tile, ctile, ctile, ctile],
+        out_shape=[flat, flat, flat, part, part, part],
+        interpret=interpret,
+    )(bs, p.reshape(-1, CHUNK), g.reshape(-1, CHUNK),
+      m.reshape(-1, CHUNK), v.reshape(-1, CHUNK))
+    return (mo.ravel(), vo.ravel(), uo.ravel(),
+            usq.ravel(), psq.ravel(), gsq.ravel())

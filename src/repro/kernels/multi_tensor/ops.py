@@ -33,3 +33,20 @@ def fused_update(p, g, u, a_chunk, c, *, beta: float, wd: float,
     return kernel.fused_update(p, g, u, a_chunk, c, beta=beta, wd=wd,
                                cast_g_first=cast_g_first,
                                interpret=_interpret())
+
+
+def scale_apply(p, g, a_chunk, c, *, backend: str = "pallas"):
+    if backend == "ref":
+        return ref.scale_apply_ref(p, g, a_chunk, c)
+    record_launches(1)
+    return kernel.scale_apply(p, g, a_chunk, c, interpret=_interpret())
+
+
+def adam_update(p, g, m, v, bc1, bc2, *, b1: float, b2: float, eps: float,
+                wd: float = 0.0, backend: str = "pallas"):
+    if backend == "ref":
+        return ref.adam_update_ref(p, g, m, v, bc1, bc2, b1=b1, b2=b2,
+                                   eps=eps, wd=wd)
+    record_launches(1)
+    return kernel.adam_update(p, g, m, v, bc1, bc2, b1=b1, b2=b2,
+                              eps=eps, wd=wd, interpret=_interpret())

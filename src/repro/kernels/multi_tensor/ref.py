@@ -29,3 +29,26 @@ def fused_update_ref(p, g, u, a_chunk, c, *, beta: float, wd: float,
     p_new = (p2 - jnp.asarray(c, jnp.float32) * u_new).astype(p.dtype)
     usq = jnp.sum(jnp.square(u_new), axis=1)
     return p_new.ravel(), u_new.ravel(), usq
+
+
+def scale_apply_ref(p, g, a_chunk, c):
+    p2 = p.reshape(-1, CHUNK)
+    s = a_chunk.reshape(-1, 1) * g.reshape(-1, CHUNK)
+    p_new = (p2 - jnp.asarray(c, jnp.float32) * s).astype(p.dtype)
+    return p_new.ravel(), jnp.sum(jnp.square(s), axis=1)
+
+
+def adam_update_ref(p, g, m, v, bc1, bc2, *, b1: float, b2: float,
+                    eps: float, wd: float = 0.0):
+    p2 = p.reshape(-1, CHUNK)
+    g32 = g.reshape(-1, CHUNK).astype(jnp.float32)
+    gsq = jnp.sum(jnp.square(g32), axis=1)
+    m_new = b1 * m.reshape(-1, CHUNK) + (1 - b1) * g32
+    v_new = b2 * v.reshape(-1, CHUNK) + (1 - b2) * jnp.square(g32)
+    u = (m_new / jnp.asarray(bc1, jnp.float32)) / \
+        (jnp.sqrt(v_new / jnp.asarray(bc2, jnp.float32)) + eps)
+    if wd != 0.0:
+        u = u + wd * p2
+    usq = jnp.sum(jnp.square(u), axis=1)
+    psq = jnp.sum(jnp.square(p2.astype(jnp.float32)), axis=1)
+    return (m_new.ravel(), v_new.ravel(), u.ravel(), usq, psq, gsq)

@@ -45,11 +45,12 @@ from repro.training import make_train_step
 
 def _restore(path: str, params, state):
     """Restore {"params", "opt"} regardless of which STATE FORM the
-    checkpoint holds (OptState pytree vs flat-buffer-resident
-    FlatOptState): detect the saved form from the archive's key set, load
-    via a matching template, and convert to the live form with
-    to_pytree/from_pytree (both lossless).  ChainOptState (interpreter-run
-    chains: lamb, novel compositions) has one form and loads directly."""
+    checkpoint holds (pytree form — OptState, or lamb's ChainOptState —
+    vs flat-buffer-resident FlatOptState): detect the saved form from the
+    archive's key set, load via a matching template, and convert to the
+    live form with to_pytree/from_pytree (both lossless, including the
+    Adam-moment slots of a fused-lamb FlatOptState).  ChainOptState for
+    interpreter-run NOVEL compositions has one form and loads directly."""
     import os
 
     import numpy as np
@@ -190,15 +191,16 @@ def main(argv=None):
             # same placement as an unresumed opt.init).
             params = jax.device_put(params, psh)
             if isinstance(state, FlatOptState):
-                state = from_pytree(
-                    OptState(state.step, state.momentum), params)
+                # round-trip through the pytree form (momentum or lamb's
+                # Adam-moment chain state — to_pytree picks the right one)
+                state = from_pytree(to_pytree(state), params)
             elif isinstance(state, OptState):
                 state = OptState(state.step,
                                  jax.device_put(state.momentum, psh))
             elif isinstance(state, ChainOptState):
-                # interpreter-run chains (lamb, novel compositions): every
-                # sub-state tree mirroring the params (moments, EMA
-                # shadows) takes the param shardings
+                # interpreter-run chains (lamb with --fused none, novel
+                # compositions): every sub-state tree mirroring the params
+                # (moments, EMA shadows) takes the param shardings
                 state = place_chain_state(state, psh)
         print(f"[train] resumed {args.ckpt} at step {start}")
     step = jax.jit(make_train_step(cfg, rt, opt, n_micro=args.n_micro,

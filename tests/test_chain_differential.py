@@ -1,0 +1,407 @@
+"""Differential-testing harness: compiled chains vs the jnp interpreter.
+
+``compile_chain(tx, interpret=True)`` is the reference semantics for
+EVERY chain; this module generates randomized chains (Hypothesis-drawn
+transforms, orders, hyperparameters) over randomized pytrees (ragged
+shapes, scalars, size-0 leaves, fp32/bf16/mixed dtypes) and asserts the
+compiled executions agree with it — the guard that keeps the chain ->
+multi-tensor compiler honest as patterns grow.
+
+Agreement policy (documented in README "Optimizer API"):
+
+  * matched chains WITHOUT a clip prefix: compiled jnp path and fused
+    resident path are BIT-identical to each other; vs the interpreter
+    they are bit-identical for the sngm/msgd shapes and for lamb
+    (fp32 AND bf16), while lars differs only in lr-product association
+    (PR 3 precedent) — float-tolerance there;
+  * clip-prefixed chains: lamb stays bit-identical; the momentum kinds
+    agree to a few fp32 ulp per step (XLA CPU re-clusters the fusion
+    around the clip pre-scale and flips last-ulp FMA contraction; the
+    kernels compile in isolation on real TPU, where this class of drift
+    does not arise) — tight float tolerance;
+  * unmatched (novel) chains run the interpreter itself: zero Pallas
+    launches, ``ChainOptState``, and a ``UserWarning`` when a fused mode
+    was requested;
+  * fused-vs-fallback STATE equivalence via ``to_pytree``: the resident
+    flat state's pytree view (momentum, or lamb's Adam-moment chain
+    state) matches the interpreter's state under the same policy;
+  * the engine stays O(1): exact launch-count bookkeeping per kind,
+    including the extra raw-norm round of clip-prefixed chains.
+
+Fast lane runs a deterministic grid plus (when Hypothesis is installed —
+it is pinned in requirements.txt) a few randomized examples per
+property; the wide randomized sweep is ``@pytest.mark.slow`` (nightly).
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FlatOptState, OptState, compile_chain, to_pytree
+from repro.core import transform as T
+from repro.core.multi_tensor import build_layout
+from repro.core.schedules import constant, poly_power
+from repro.core.transform import ChainOptState
+from repro.kernels import count_pallas_launches
+
+try:
+    import hypothesis
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+KEY = jax.random.PRNGKey(0)
+STEPS = 2
+KINDS = ("sngm_global", "sngm_per_tensor", "msgd", "lars", "lamb")
+
+# shapes + dtypes + seed + grad scale; shapes span scalars, ragged sizes,
+# a just-past-one-CHUNK leaf and a size-0 leaf
+SPEC_GRID = {
+    "f32": (((300, 17), (1030,), (), (0,), (4,)),
+            ("float32",) * 5, 3, 3.0),
+    "bf16": (((33, 5), (1030,), (), (7, 3)),
+             ("bfloat16",) * 4, 5, 3.0),
+    "mixed": (((129,), (16, 16), (), (0,), (40, 3)),
+              ("float32", "bfloat16", "float32", "bfloat16", "float32"),
+              7, 1.0),
+    "zero_grads": (((65, 3), (17,)), ("float32",) * 2, 9, 0.0),
+}
+
+
+def materialize(spec):
+    shapes, dtypes, seed, gscale = spec
+    k = jax.random.fold_in(KEY, seed)
+    params = {f"p{i}": jax.random.normal(jax.random.fold_in(k, i), s
+                                         ).astype(jnp.dtype(d))
+              for i, (s, d) in enumerate(zip(shapes, dtypes))}
+    grads = {f"p{i}": (gscale * jax.random.normal(
+        jax.random.fold_in(k, 1000 + i), s)).astype(jnp.dtype(d))
+        for i, (s, d) in enumerate(zip(shapes, dtypes))}
+    return params, grads
+
+
+def build_canonical(kind, clip=None, wd=1e-4, with_wd_stage=True, beta=0.9,
+                    sched=None):
+    """The canonical chain for one fused kind, optionally clip-prefixed."""
+    sched = sched or poly_power(0.3, 10, 1.1)
+    prefix = (T.clip_by_global_norm(clip),) if clip is not None else ()
+    adw = (T.add_decayed_weights(wd),) if with_wd_stage else ()
+    if kind == "lamb":
+        body = (T.scale_by_adam(0.9, 0.999, 1e-6),) + adw + \
+            (T.scale_by_trust_ratio(), T.scale_by_schedule(sched))
+    elif kind == "lars":
+        body = (T.trust_ratio(0.001, wd), T.scale_by_schedule(sched),
+                T.trace(beta))
+    elif kind == "msgd":
+        body = adw + (T.trace(beta), T.scale_by_schedule(sched))
+    else:
+        norm = (T.normalize_by_global_norm() if kind == "sngm_global"
+                else T.normalize_per_tensor())
+        body = adw + (norm, T.trace(beta), T.scale_by_schedule(sched))
+    return T.chain(*(prefix + body))
+
+
+_POOL = (
+    lambda: T.clip_by_global_norm(1.0),
+    lambda: T.add_decayed_weights(1e-3),
+    lambda: T.normalize_by_global_norm(),
+    lambda: T.normalize_per_tensor(),
+    lambda: T.trace(0.9),
+    lambda: T.trace(0.9, nesterov=True),
+    lambda: T.scale_by_adam(0.9, 0.999, 1e-6),
+    lambda: T.scale_by_trust_ratio(),
+    lambda: T.trust_ratio(0.001, 1e-4),
+    lambda: T.scale_by_schedule(constant(0.1)),
+    lambda: T.ema_params(0.99),
+)
+
+
+# ---------------------------------------------------------------------------
+# comparison helpers (the tolerance policy)
+# ---------------------------------------------------------------------------
+
+def assert_trees(a, b, policy, label):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), label
+    for x, y in zip(la, lb):
+        if policy == "bitwise":
+            assert x.dtype == y.dtype, (label, x.dtype, y.dtype)
+            assert bool(jnp.array_equal(x, y)), (
+                label, np.asarray(x), np.asarray(y))
+        else:
+            xf = np.asarray(x, np.float32)
+            yf = np.asarray(y, np.float32)
+            if x.dtype == jnp.bfloat16 or y.dtype == jnp.bfloat16:
+                np.testing.assert_allclose(xf, yf, rtol=5e-2, atol=1e-2,
+                                           err_msg=label)
+            else:
+                np.testing.assert_allclose(xf, yf, rtol=5e-4, atol=1e-6,
+                                           err_msg=label)
+
+
+def interp_policy(kind, clip):
+    """Agreement level of a compiled execution vs the interpreter."""
+    if kind == "lamb":
+        return "bitwise"
+    if kind == "lars":
+        return "close"                    # lr-product association (PR 3)
+    return "bitwise" if clip is None else "close"
+
+
+def state_trees(state):
+    """The param-mirroring accumulators of any state form, as a tuple of
+    pytrees (momentum, or Adam m/v), for cross-form comparison."""
+    if isinstance(state, FlatOptState):
+        return state.moments if state.m_flats else (state.momentum,)
+    if isinstance(state, OptState):
+        return (state.momentum,)
+    out = []
+    for s in state.inner:
+        if isinstance(s, T.TraceState):
+            out.append(s.momentum)
+        elif isinstance(s, T.ScaleByAdamState):
+            out.extend((s.m, s.v))
+    return tuple(out)
+
+
+def expected_launches(kind, clip, n_buckets):
+    base = {"sngm_global": 2, "sngm_per_tensor": 2, "msgd": 2, "lars": 3,
+            "lamb": 2}[kind]
+    if clip is not None:
+        base += 1                         # the raw-norm round
+        if kind == "msgd":
+            base -= 1                     # clipped msgd skips pass 1
+    return base * n_buckets
+
+
+def run(opt, params, grads, steps=STEPS):
+    state = opt.init(params)
+    step = jax.jit(opt.step)
+    stats = None
+    for _ in range(steps):
+        params, state, stats = step(grads, state, params)
+    return params, state, stats
+
+
+# ---------------------------------------------------------------------------
+# the differential properties
+# ---------------------------------------------------------------------------
+
+def check_canonical(tx_kind_clip, spec):
+    tx, kind, clip = tx_kind_clip
+    params, grads = materialize(spec)
+
+    interp = compile_chain(tx, interpret=True)
+    compiled = compile_chain(tx)                       # jnp kind path
+    fused = compile_chain(tx, fused="multi_tensor")    # engine, resident
+    assert compiled.kind == fused.kind == kind
+
+    p_i, s_i, st_i = run(interp, params, grads)
+    p_c, s_c, st_c = run(compiled, params, grads)
+    p_f, s_f, st_f = run(fused, params, grads)
+    assert isinstance(s_f, FlatOptState)
+
+    pol = interp_policy(kind, clip)
+    assert_trees(p_c, p_i, pol, f"{kind} jnp-vs-interp params")
+    assert_trees(p_f, p_i, pol, f"{kind} fused-vs-interp params")
+    # compiled jnp and fused engine share the kind implementation: held
+    # to the tighter of the two bounds
+    assert_trees(p_f, p_c, "bitwise" if clip is None else "close",
+                 f"{kind} fused-vs-jnp params")
+
+    # state equivalence across forms (momentum / Adam moments)
+    assert_trees(state_trees(s_f), state_trees(s_i), pol,
+                 f"{kind} fused-vs-interp state")
+    assert_trees(state_trees(to_pytree(s_f)), state_trees(s_i), pol,
+                 f"{kind} to_pytree state")
+
+    # stats: lr is schedule-only (bitwise everywhere); norms follow the
+    # policy.  Exemption (PR 3 precedent): the un-clipped msgd chain has
+    # no norm-emitting stage, so the interpreter reports the RAW gradient
+    # norm where the kind implementation reports the coupled-decayed one.
+    assert bool(jnp.array_equal(st_f["lr"], st_i["lr"]))
+    keys = {"grad_norm", "update_norm"}
+    if kind == "msgd" and clip is None:
+        keys -= {"grad_norm"}
+    for k in keys:
+        assert_trees(st_f[k], st_i[k], pol, f"{kind} stat {k}")
+        assert_trees(st_c[k], st_i[k], pol, f"{kind} stat {k} (jnp)")
+
+    # O(1) launches, exact per-kind count (incl. the clip round)
+    n_buckets = len(build_layout(params).buckets)
+    with count_pallas_launches() as c:
+        jax.jit(lambda g, s, p: fused.step(g, s, p)).lower(
+            grads, fused.init(params), params)
+    assert c["launches"] == expected_launches(kind, clip, n_buckets), \
+        (kind, clip, n_buckets, c["launches"])
+
+
+def check_novel(tx, spec):
+    params, grads = materialize(spec)
+    interp = compile_chain(tx, interpret=True)
+    with pytest.warns(UserWarning, match="does not match any fused kind"):
+        fused = compile_chain(tx, fused="multi_tensor")
+    assert fused.kind is None
+    s0 = fused.init(params)
+    assert isinstance(s0, ChainOptState)
+    with count_pallas_launches() as c:
+        p_f, s_f, st_f = run(fused, params, grads)
+    assert c["launches"] == 0             # the interpreter is pure jnp
+    p_i, s_i, st_i = run(interp, params, grads)
+    assert_trees(p_f, p_i, "bitwise", "novel params")
+    assert_trees(s_f, s_i, "bitwise", "novel state")
+    for k in ("grad_norm", "lr", "update_norm"):
+        assert k in st_f and bool(jnp.array_equal(st_f[k], st_i[k]))
+
+
+# ---- deterministic grid (fast lane; runs with or without hypothesis) ------
+
+@pytest.mark.parametrize("clip", [None, 0.5])
+@pytest.mark.parametrize("kind", sorted(KINDS))
+def test_canonical_differential_grid(kind, clip):
+    spec_name = {"sngm_global": "f32", "sngm_per_tensor": "bf16",
+                 "msgd": "mixed", "lars": "f32", "lamb": "mixed"}[kind]
+    tx = build_canonical(kind, clip)
+    check_canonical((tx, kind, clip), SPEC_GRID[spec_name])
+
+
+def test_canonical_differential_zero_grads():
+    """Zero gradients: sngm normalizes by eps, lamb's trust ratio hits the
+    zero-update-norm branch — both must still agree with the interpreter."""
+    for kind in ("sngm_global", "lamb"):
+        check_canonical((build_canonical(kind, None), kind, None),
+                        SPEC_GRID["zero_grads"])
+
+
+def test_novel_chain_differential_grid():
+    cases = [
+        T.chain(T.normalize_by_global_norm(), T.clip_by_global_norm(1.0),
+                T.trace(0.9), T.scale_by_schedule(constant(0.1))),
+        T.chain(T.scale_by_adam(0.9, 0.999, 1e-6), T.trace(0.9),
+                T.scale_by_schedule(constant(0.1))),
+        T.chain(T.clip_by_global_norm(1.0), T.trace(0.9, nesterov=True),
+                T.scale_by_schedule(constant(0.1)), T.ema_params(0.99)),
+    ]
+    for tx in cases:
+        assert T.match_chain(tx) is None
+        check_novel(tx, SPEC_GRID["f32"])
+
+
+# ---- randomized sweep (hypothesis; wide version in the slow lane) ---------
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def tree_specs(draw):
+        """Randomized shapes/dtypes/values: ragged sizes, scalars, an
+        optional size-0 leaf, fp32 / bf16 / mixed dtypes, and a gradient
+        scale that includes exactly zero."""
+        n = draw(st.integers(1, 4))
+        shapes = [tuple(draw(st.integers(1, 40))
+                        for _ in range(draw(st.integers(0, 2))))
+                  for _ in range(n)]
+        if draw(st.booleans()):
+            shapes.append((1030,))        # just past one CHUNK
+        if draw(st.booleans()):
+            shapes.append((0,))           # empty leaf
+        mode = draw(st.sampled_from(["f32", "bf16", "mixed"]))
+        dtypes = ["float32" if mode == "f32"
+                  or (mode == "mixed" and i % 2 == 0) else "bfloat16"
+                  for i in range(len(shapes))]
+        seed = draw(st.integers(0, 2**20))
+        gscale = draw(st.sampled_from([0.0, 1.0, 3.0]))
+        return tuple(shapes), tuple(dtypes), seed, gscale
+
+    @st.composite
+    def canonical_chains(draw):
+        kind = draw(st.sampled_from(KINDS))
+        clip = draw(st.sampled_from([None, 0.5, 10.0]))
+        wd = draw(st.sampled_from([0.0, 1e-4, 1e-2]))
+        tx = build_canonical(
+            kind, clip, wd=wd,
+            with_wd_stage=wd != 0.0 or draw(st.booleans()),
+            beta=draw(st.sampled_from([0.0, 0.5, 0.9])),
+            sched=draw(st.sampled_from([constant(0.1),
+                                        poly_power(0.3, 10, 1.1)])))
+        return tx, kind, clip
+
+    @st.composite
+    def novel_chains(draw):
+        """Random transform sequences no pattern matches."""
+        idx = draw(st.lists(st.integers(0, len(_POOL) - 1), min_size=2,
+                            max_size=5))
+        tx = T.chain(*[_POOL[i]() for i in idx])
+        hypothesis.assume(T.match_chain(tx) is None)
+        return tx
+
+    @settings(max_examples=6, deadline=None, derandomize=True)
+    @given(tx_kind_clip=canonical_chains(), spec=tree_specs())
+    def test_canonical_chain_differential(tx_kind_clip, spec):
+        check_canonical(tx_kind_clip, spec)
+
+    @settings(max_examples=4, deadline=None, derandomize=True)
+    @given(tx=novel_chains(), spec=tree_specs())
+    def test_novel_chain_differential(tx, spec):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", UserWarning)  # inner pytest.warns
+            check_novel(tx, spec)
+
+    @pytest.mark.slow
+    @settings(max_examples=50, deadline=None)
+    @given(tx_kind_clip=canonical_chains(), spec=tree_specs())
+    def test_canonical_chain_differential_wide(tx_kind_clip, spec):
+        check_canonical(tx_kind_clip, spec)
+
+    @pytest.mark.slow
+    @settings(max_examples=20, deadline=None)
+    @given(tx=novel_chains(), spec=tree_specs())
+    def test_novel_chain_differential_wide(tx, spec):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", UserWarning)
+            check_novel(tx, spec)
+
+
+# ---------------------------------------------------------------------------
+# deterministic launch-count bookkeeping (no hypothesis needed, fast lane)
+# ---------------------------------------------------------------------------
+
+def _launches(opt, params, grads):
+    state = opt.init(params)
+    with count_pallas_launches() as c:
+        jax.jit(lambda g, s, p: opt.step(g, s, p)).lower(grads, state, params)
+    return c["launches"]
+
+
+def test_lamb_and_clip_launch_counts():
+    """The de-fusion guard in unit form: one fp32 bucket, exact counts.
+    lamb = adam pass + apply; clip adds ONE raw-norm round (two norm
+    rounds total for clip->sngm), never a per-leaf fallback."""
+    params = {f"p{i}": jnp.ones((65, 3)) for i in range(12)}
+    grads = {k: 2.0 * v for k, v in params.items()}
+    sched = constant(0.1)
+
+    def chain_for(kind, clip=None):
+        pre = (T.clip_by_global_norm(clip),) if clip else ()
+        body = {
+            "sngm_global": (T.normalize_by_global_norm(), T.trace(0.9),
+                            T.scale_by_schedule(sched)),
+            "msgd": (T.trace(0.9), T.scale_by_schedule(sched)),
+            "lars": (T.trust_ratio(0.001, 1e-4), T.scale_by_schedule(sched),
+                     T.trace(0.9)),
+            "lamb": (T.scale_by_adam(0.9, 0.999, 1e-6),
+                     T.scale_by_trust_ratio(), T.scale_by_schedule(sched)),
+        }[kind]
+        return compile_chain(T.chain(*(pre + body)), fused="multi_tensor")
+
+    assert _launches(chain_for("lamb"), params, grads) == 2
+    assert _launches(chain_for("lamb", 1.0), params, grads) == 3
+    assert _launches(chain_for("sngm_global", 1.0), params, grads) == 3
+    assert _launches(chain_for("msgd", 1.0), params, grads) == 2
+    assert _launches(chain_for("lars", 1.0), params, grads) == 4
+    # independent of tree size: 12 leaves above, 40 here, same counts
+    big = {f"x{i}": jnp.ones((65, 3)) for i in range(40)}
+    gbig = {k: 2.0 * v for k, v in big.items()}
+    assert _launches(chain_for("lamb"), big, gbig) == 2
+    assert _launches(chain_for("sngm_global", 1.0), big, gbig) == 3

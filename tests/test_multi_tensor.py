@@ -167,6 +167,55 @@ def test_fused_update_kernel_matches_ref(cast_g_first):
         assert bool(jnp.array_equal(k, r)) and k.dtype == r.dtype
 
 
+@pytest.mark.parametrize("wd", [0.0, 1e-4])
+def test_adam_update_kernel_matches_ref(wd):
+    """The LAMB Adam-moment pass: Pallas (interpret) == jnp oracle,
+    bitwise, for all six outputs (moments, direction, three partial sets),
+    at the extreme t=1 bias correction."""
+    layout = build_layout(make_tree(4))
+    (p,) = flatten(make_tree(4), layout)
+    (g,) = flatten(make_tree(5, scale=3.0), layout)
+    (m,) = flatten(make_tree(6), layout, cast_to=jnp.float32)
+    (v,) = flatten(jax.tree.map(jnp.abs, make_tree(7, scale=0.1)), layout,
+                   cast_to=jnp.float32)
+    bc1, bc2 = jnp.float32(1 - 0.9), jnp.float32(1 - 0.999)   # t = 1
+    outs_k = mt_ops.adam_update(p, g, m, v, bc1, bc2, b1=0.9, b2=0.999,
+                                eps=1e-6, wd=wd)
+    outs_r = jax.jit(partial(mt_ref.adam_update_ref, b1=0.9, b2=0.999,
+                             eps=1e-6, wd=wd))(p, g, m, v, bc1, bc2)
+    for k, r in zip(outs_k, outs_r):
+        assert bool(jnp.array_equal(k, r)) and k.dtype == r.dtype
+
+
+def test_scale_apply_kernel_matches_ref():
+    """The LAMB apply pass: Pallas (interpret) == jnp oracle, bitwise."""
+    layout = build_layout(make_tree(4))
+    (p,) = flatten(make_tree(4), layout)
+    (g,) = flatten(make_tree(5, scale=0.5), layout, cast_to=jnp.float32)
+    a = jnp.abs(jax.random.normal(jax.random.fold_in(KEY, 11),
+                                  (p.size // CHUNK,)))
+    outs_k = mt_ops.scale_apply(p, g, a, jnp.float32(0.7))
+    outs_r = jax.jit(mt_ref.scale_apply_ref)(p, g, a, jnp.float32(0.7))
+    for k, r in zip(outs_k, outs_r):
+        assert bool(jnp.array_equal(k, r)) and k.dtype == r.dtype
+
+
+def test_adam_update_preserves_zero_padding():
+    """Zero pads map to zero moments AND zero direction (eps > 0), the
+    invariant that keeps the resident Adam buffers equal to re-flattened
+    pytree views."""
+    tree = {"w": jnp.ones((100,))}          # 924 pad elements in the chunk
+    layout = build_layout(tree)
+    (p,) = flatten(tree, layout)
+    (g,) = flatten({"w": 2.0 * jnp.ones((100,))}, layout)
+    z = jnp.zeros_like(p)
+    mo, vo, ud, *_ = mt_ops.adam_update(p, g, z, z, jnp.float32(0.1),
+                                        jnp.float32(0.001), b1=0.9,
+                                        b2=0.999, eps=1e-6, wd=1e-4)
+    for buf in (mo, vo, ud):
+        assert bool(jnp.array_equal(buf[100:], jnp.zeros((buf.size - 100,))))
+
+
 # ---------------------------------------------------------------------------
 # numerics equality: multi-tensor vs per-leaf vs pure jnp
 # ---------------------------------------------------------------------------

@@ -181,6 +181,39 @@ def test_train_launcher_save_resume_loss_continuity(tmp_path):
     np.testing.assert_allclose(resumed_jnp, full[6:], rtol=1e-4, atol=1e-5)
 
 
+def test_lamb_fused_save_resume_loss_continuity(tmp_path):
+    """--resume continuity for FUSED lamb: the Adam-moment flat slots
+    survive the checkpoint (saved in ChainOptState pytree form, rebuilt
+    resident on restore), so 6 + save/resume + 6 equals an uninterrupted
+    12-step run — including resuming onto the interpreter path
+    (--fused none), since fused lamb is bit-identical to it."""
+    from repro.launch.train import main as train_main
+
+    def run(extra):
+        return train_main(
+            ["--arch", "gemma-2b", "--reduced", "--batch", "4", "--seq", "16",
+             "--n-micro", "2", "--optimizer", "lamb", "--fused",
+             "multi_tensor", "--lr", "0.05", "--weight-decay", "1e-4",
+             "--total-steps", "12", "--log-every", "100"] + extra)
+
+    full = run(["--steps", "12"])
+    part1 = run(["--steps", "6", "--ckpt", str(tmp_path / "ck1")])
+    part1b = run(["--steps", "6", "--ckpt", str(tmp_path / "ck2")])
+    np.testing.assert_allclose(part1, full[:6], rtol=1e-6)
+    np.testing.assert_allclose(part1b, part1, rtol=0)   # deterministic
+
+    resumed = run(["--steps", "12", "--ckpt", str(tmp_path / "ck1"),
+                   "--resume"])
+    assert len(resumed) == 6
+    np.testing.assert_allclose(resumed, full[6:], rtol=1e-5, atol=1e-6)
+
+    # cross-form resume: ChainOptState checkpoint -> interpreter run
+    resumed_interp = run(["--steps", "12", "--ckpt", str(tmp_path / "ck2"),
+                          "--resume", "--fused", "none"])
+    np.testing.assert_allclose(resumed_interp, full[6:], rtol=1e-4,
+                               atol=1e-5)
+
+
 def test_optimizer_spec_round_trips_through_resume(tmp_path):
     """The OptimizerSpec saved in train_meta.json is the optimizer's
     identity: --resume reconstructs from it (conflicting CLI hyperparams

@@ -198,6 +198,134 @@ def test_interpreter_close_for_lars_lamb_shapes():
 
 
 # ---------------------------------------------------------------------------
+# frozen golden: LAMB, expression-for-expression the interpreter chain that
+# defined the reference numerics when lamb was interpreter-only (PR 3).
+# The fused engine kind must reproduce it bit-for-bit forever.
+# ---------------------------------------------------------------------------
+
+def _golden_lamb_step(grads, count, m, v, params, *, lr, b1=0.9, b2=0.999,
+                      wd=1e-4, eps=1e-6, trust_eps=0.0):
+    t = count.astype(jnp.float32) + 1.0
+    new_m = jax.tree.map(
+        lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32), m, grads)
+    new_v = jax.tree.map(
+        lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        v, grads)
+    u = jax.tree.map(
+        lambda mm, vv: (mm / (1 - b1 ** t)) / (jnp.sqrt(vv / (1 - b2 ** t))
+                                               + eps), new_m, new_v)
+    if wd != 0.0:
+        u = jax.tree.map(lambda g, w: g + wd * w, u, params)
+
+    def rescale(uu, w):
+        wn = jnp.sqrt(leaf_sumsq(w))
+        un = jnp.sqrt(leaf_sumsq(uu))
+        ratio = jnp.where((wn > 0) & (un > 0), wn / (un + trust_eps), 1.0)
+        return ratio * uu.astype(jnp.float32)
+
+    u = jax.tree.map(rescale, u, params)
+    update_norm = global_norm(u)
+    u = jax.tree.map(lambda x: lr * x, u)
+    new_p = jax.tree.map(lambda w, x: (w - x).astype(w.dtype), params, u)
+    return new_p, new_m, new_v, {"grad_norm": global_norm(grads), "lr": lr,
+                                 "update_norm": update_norm}
+
+
+def _golden_lamb_run(params, grads, schedule, n=3, **kw):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    m, v = zeros, zeros
+    step = jax.jit(lambda g, c, m, v, p, lr: _golden_lamb_step(
+        g, c, m, v, p, lr=lr, **kw))
+    stats = None
+    for t in range(n):
+        params, m, v, stats = step(grads, jnp.int32(t), m, v, params,
+                                   schedule(jnp.int32(t)))
+    return params, m, v, stats
+
+
+def _lamb_edge_tree(dtype):
+    """Trust-ratio edge cases alongside regular leaves: a zero-norm param
+    leaf (ratio -> 1), and a leaf whose gradient will be zero (zero-norm
+    Adam update at every t => ratio -> 1)."""
+    tree = make_tree(0, dtype)
+    tree["zero_w"] = jnp.zeros((37,), dtype)
+    tree["zero_g"] = (1.0 + jnp.arange(12, dtype=jnp.float32)
+                      ).astype(dtype).reshape(3, 4)
+    return tree
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode", ["jnp", "resident"])
+def test_lamb_bit_equal_to_golden(mode, dtype):
+    """Fused LAMB == the frozen interpreter-chain numerics, bitwise
+    (params, both moments, stats), fp32 AND bf16, across steps that
+    include t=1 (the extreme bias-correction step) and the zero-norm
+    trust-ratio edge cases."""
+    params = _lamb_edge_tree(dtype)
+    grads = make_tree(1, dtype, scale=3.0)
+    grads["zero_w"] = (0.1 * jnp.ones((37,))).astype(dtype)
+    grads["zero_g"] = jnp.zeros((3, 4), dtype)
+    for n in (1, 3):                      # n=1 isolates the t=1 correction
+        p_g, m_g, v_g, st_g = _golden_lamb_run(params, grads, SCHED, n=n)
+        opt = lamb(SCHED, weight_decay=1e-4,
+                   fused=None if mode == "jnp" else "multi_tensor")
+        assert opt.kind == "lamb"
+        p_c, s_c, st_c = _run(opt, params, grads, opt.init(params), n=n)
+        if mode == "resident":
+            assert isinstance(s_c, FlatOptState)
+            m_c, v_c = s_c.moments
+        else:
+            assert isinstance(s_c, ChainOptState)
+            adam = s_c.inner[0]
+            m_c, v_c = adam.m, adam.v
+            assert int(adam.count) == n
+        assert tree_bitwise_equal(p_g, p_c)
+        assert tree_bitwise_equal(m_g, m_c)
+        assert tree_bitwise_equal(v_g, v_c)
+        for k in st_g:
+            assert bool(jnp.array_equal(st_g[k], st_c[k])), k
+
+
+def test_lamb_state_forms_interconvert_losslessly():
+    """to_pytree(flat lamb state) is the interpreter's ChainOptState;
+    from_pytree rebuilds the flat form bitwise — the conversions --resume
+    relies on when switching execution modes."""
+    from repro.core.optim import from_pytree
+    params = make_tree(0)
+    grads = make_tree(1, scale=3.0)
+    opt = lamb(SCHED, weight_decay=1e-4, fused="multi_tensor")
+    params, state, _ = jax.jit(opt.step)(grads, opt.init(params), params)
+    chain_view = to_pytree(state)
+    assert isinstance(chain_view, ChainOptState)
+    back = from_pytree(chain_view, params)
+    assert back.form == state.form
+    assert tree_bitwise_equal(tuple(back.p_flats), tuple(state.p_flats))
+    assert tree_bitwise_equal(tuple(back.m_flats), tuple(state.m_flats))
+    assert tree_bitwise_equal(tuple(back.v_flats), tuple(state.v_flats))
+    # and the chain view IS what the interpreter would have produced
+    opt_i = lamb(SCHED, weight_decay=1e-4)
+    params_i = make_tree(0)
+    _, s_i, _ = jax.jit(opt_i.step)(make_tree(1, scale=3.0),
+                                    opt_i.init(params_i), params_i)
+    assert jax.tree_util.tree_structure(chain_view) == \
+        jax.tree_util.tree_structure(s_i)
+
+
+def test_from_pytree_rejects_stateful_noncanonical_chain_state():
+    """A ChainOptState whose mid-chain stages carry state (trace momentum,
+    EMA shadows) has no flat form — from_pytree must refuse rather than
+    silently dropping that state (which would corrupt a resumed run)."""
+    from repro.core.optim import from_pytree
+    params = make_tree(0)
+    tx = T.chain(T.scale_by_adam(0.9, 0.999, 1e-6), T.trace(0.9),
+                 T.scale_by_schedule(SCHED))
+    opt = compile_chain(tx, interpret=True)
+    state = opt.init(params)
+    with pytest.raises(TypeError, match="canonical"):
+        from_pytree(state, params)
+
+
+# ---------------------------------------------------------------------------
 # the compiler: what matches, what falls back
 # ---------------------------------------------------------------------------
 
@@ -208,7 +336,22 @@ def test_compile_chain_kind_assignment():
     assert sngd(constant(0.1)).kind == "sngm_global"    # beta=0 sngm
     assert msgd(constant(0.1)).kind == "msgd"
     assert lars(constant(0.1)).kind == "lars"
-    assert lamb(constant(0.1)).kind is None             # interpreter-run
+    assert lamb(constant(0.1)).kind == "lamb"           # fused since PR 4
+    # clip-prefixed canonical chains compile too (two-round norm pass)
+    clip_sngm = T.chain(T.clip_by_global_norm(1.0),
+                        T.normalize_by_global_norm(), T.trace(0.9),
+                        T.scale_by_schedule(constant(0.1)))
+    assert compile_chain(clip_sngm).kind == "sngm_global"
+    clip_lamb = T.chain(T.clip_by_global_norm(1.0),
+                        T.scale_by_adam(0.9, 0.999, 1e-6),
+                        T.scale_by_trust_ratio(),
+                        T.scale_by_schedule(constant(0.1)))
+    assert compile_chain(clip_lamb).kind == "lamb"
+    # adam eps <= 0 would break the engine's zero-pad invariance: falls
+    # back to the interpreter rather than computing 0/0 in the padding
+    eps0 = T.chain(T.scale_by_adam(0.9, 0.999, 0.0), T.scale_by_trust_ratio(),
+                   T.scale_by_schedule(constant(0.1)))
+    assert T.match_chain(eps0) is None
 
 
 def test_chain_without_decay_matches_with_wd0():
@@ -334,7 +477,10 @@ def test_novel_chain_trains_end_to_end():
 
     cfg = dataclasses.replace(smoke_variant(ARCHS["gemma-2b"]),
                               vocab_size=64, compute_dtype="float32")
-    tx = chain(T.clip_by_global_norm(1.0), T.normalize_by_global_norm(),
+    # clip AFTER normalize is not the canonical prefix position, so this
+    # stays a novel (interpreter-run) composition even now that
+    # clip-PREFIXED chains compile onto the engine
+    tx = chain(T.normalize_by_global_norm(), T.clip_by_global_norm(1.0),
                T.trace(0.9), T.scale_by_schedule(constant(0.5)))
     assert T.match_chain(tx) is None
     opt = as_optimizer(tx)
