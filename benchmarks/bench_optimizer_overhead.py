@@ -34,10 +34,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import warnings
+
 from benchmarks.common import csv_row
 from repro.core import (compile_chain, count_packed_bytes, lars, lamb, msgd,
                         sngd, sngm, to_pytree)
 from repro.core import transform as T
+from repro.core.optim import FlatOptState, TrainState
 from repro.core.schedules import constant
 from repro.kernels import count_pallas_launches
 
@@ -190,6 +193,43 @@ def run(quick: bool = False, json_path: str | None = None):
     print(f"  lamb resident packing {b_lamb} B/step; clip->sngm {b_clip} "
           f"B/step (2x grads: raw norm round + clipped update)")
 
+    # --- parameter residency: live param bytes held across steps --------
+    # the donated TrainState on the resident path holds the params ONCE
+    # (in FlatOptState.p_flats; TrainState.params is None).  The legacy
+    # (params pytree, FlatOptState) pairing held them twice — that is the
+    # number the donation refactor reclaimed.
+    def param_bytes_live(ts):
+        n = 0
+        if ts.params is not None:
+            n += sum(l.size * jnp.dtype(l.dtype).itemsize
+                     for l in jax.tree.leaves(ts.params))
+        if isinstance(ts.opt_state, FlatOptState):
+            n += sum(f.size * jnp.dtype(f.dtype).itemsize
+                     for f in ts.opt_state.p_flats)
+        return n
+
+    param_bytes = sum(int(np.prod(s)) * 4 for s in shapes)
+    ts_res = opt_mt.init_state(make_tree(0, shapes))
+    pb_live = param_bytes_live(ts_res)
+    pb_legacy = pb_live + param_bytes        # old API: pytree copy + flats
+    rows.append(csv_row("sngm_param_bytes_live_resident", pb_live,
+                        "TrainState: p_flats only (~1x param bytes)"))
+    print(f"  param bytes live: resident TrainState {pb_live} "
+          f"(raw params {param_bytes}; legacy two-copy {pb_legacy})")
+
+    # --- donation: the donated step must consume every donated buffer --
+    with warnings.catch_warnings(record=True) as wlog:
+        warnings.simplefilter("always")
+        step_don = jax.jit(opt_mt.step_state, donate_argnums=(1,))
+        ts_out, _ = step_don(grads, ts_res)
+        jax.block_until_ready(ts_out)
+    donation_warnings = [str(x.message) for x in wlog
+                         if "donat" in str(x.message).lower()]
+    for msg in donation_warnings:
+        print(f"  DONATION WARNING: {msg}")
+    print(f"  donated resident step: {len(donation_warnings)} donation "
+          f"warnings")
+
     # HBM-traffic model (bytes/param): naive = read g,u,p + write u,p each
     # pass of {decay, scale+momentum, apply} vs fused single pass
     naive = (3 + 2) * 4 * 2.2   # measured XLA lowering ~2.2 passes equivalent
@@ -210,6 +250,10 @@ def run(quick: bool = False, json_path: str | None = None):
                                      "ratio": b_res / b_per,
                                      "lamb_resident": int(b_lamb),
                                      "clip_sngm_resident": int(b_clip)},
+           "param_bytes_live": {"resident": int(pb_live),
+                                "raw_params": int(param_bytes),
+                                "legacy_two_copies": int(pb_legacy)},
+           "donation_warnings": donation_warnings,
            "quick": quick}
     if json_path:
         with open(json_path, "w") as f:

@@ -27,13 +27,15 @@ def run_one(opt_name, opt, batch):
                               vocab_size=256, compute_dtype="float32")
     params = materialize(model_defs(cfg), jax.random.PRNGKey(0))
     data = SyntheticLM(cfg.vocab_size, SEQ, batch, branching=4)
-    state = opt.init(params)
+    state = opt.init_state(params)
+    del params
     n_micro = max(1, batch // 16)
-    step = jax.jit(make_train_step(cfg, CPU_RUNTIME, opt, n_micro=n_micro))
+    step = jax.jit(make_train_step(cfg, CPU_RUNTIME, opt, n_micro=n_micro),
+                   donate_argnums=(0,))
     steps = TOKENS_BUDGET // (batch * SEQ)
     losses = []
     for t in range(steps):
-        params, state, stats = step(params, state, data.batch_at(t))
+        state, stats = step(state, data.batch_at(t))
         losses.append(float(stats["loss"]))
     return losses, data.optimal_loss()
 

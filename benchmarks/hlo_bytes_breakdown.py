@@ -1,0 +1,99 @@
+"""Per-op HBM-byte attribution over a compiled train step's HLO.
+
+Where does the memory traffic of one production train step actually go?
+This walks the partitioned HLO the dry-run compiles (trip-count-aware,
+fusion-level accounting — the same model `launch/hlo_cost.analyze` uses
+for the roofline) and prints the top-N byte-heaviest ops, so a regression
+in remat policy, gather dtype, or optimizer residency shows up as a
+named op instead of a single opaque total.
+
+    PYTHONPATH=src python -m benchmarks.hlo_bytes_breakdown \
+        --arch deepseek-v2-236b --shape train_4k --precision opt --top 14
+
+(Replaces the root-level scratch_ds.py dev script.)
+"""
+# Must run before any other jax import: the production mesh needs 512
+# placeholder devices and jax locks the device count on first init.
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import collections
+import re
+
+
+def attribute_bytes(txt: str):
+    """Walk the HLO entry computation like hlo_cost.analyze does, but
+    keep the per-op attribution instead of summing it away.  Returns
+    {(opcode, result-shape-prefix): bytes} with while-loop trip counts
+    multiplied through and fusion bodies charged to their fusion op."""
+    from repro.launch import hlo_cost
+    comps, shapes = hlo_cost._parse(txt)
+    rows = collections.defaultdict(float)
+
+    def walk(cn, in_fusion, mult):
+        for op in comps.get(cn, []):
+            oc = op.opcode
+            trip = 1.0
+            called = []
+            for m in hlo_cost._CALLED_RE.finditer(op.rest):
+                if m.group(1):
+                    called.append(m.group(1))
+                else:
+                    called += re.findall(r"%([\w\.\-]+)", m.group(2))
+            if oc == "while":
+                tm = hlo_cost._TRIP_RE.search(op.rest)
+                trip = float(tm.group(1)) if tm else 1.0
+            child_fusion = in_fusion or oc == "fusion"
+            for ch in called:
+                walk(ch, child_fusion, mult * trip)
+            if in_fusion:
+                continue
+            if oc == "fusion" and called:
+                b = hlo_cost._fusion_bytes(comps.get(called[0], []),
+                                           op.result)
+            elif oc in hlo_cost._FREE_OPS or oc == "while":
+                continue
+            else:
+                opnds = op.operands()
+                b = (hlo_cost._shape_bytes(op.result)
+                     + sum(hlo_cost._shape_bytes(shapes.get(o, ""))
+                           for o in opnds))
+            rows[(oc, op.result[:44])] += mult * b
+
+    entry = re.search(r"^ENTRY\s+%([\w\.\-]+)", txt, re.M).group(1)
+    walk(entry, False, 1.0)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-v2-236b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--precision", default="opt",
+                    choices=["baseline", "opt", "opt-cf1"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=14)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import build_lowered
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    built, skip = build_lowered(args.arch, args.shape, mesh, args.precision)
+    if skip:
+        raise SystemExit(f"skipped: {skip}")
+    lowered, cfg, shape = built
+    txt = lowered.compile().as_text()
+    rows = attribute_bytes(txt)
+    print(f"{args.arch} {args.shape} {args.precision}: top {args.top} "
+          f"byte-heaviest HLO ops (per device, trip-count weighted)")
+    for (oc, result), v in sorted(rows.items(), key=lambda kv: -kv[1])[
+            :args.top]:
+        print(f"{v / 1e12:8.2f}TB {oc:16s} {result}")
+    print(f"total {sum(rows.values()) / 1e12:.2f}TB")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,11 +29,15 @@ def main():
     steps = 60
     data = SyntheticLM(cfg.vocab_size, seq_len=32, batch_size=8, branching=4)
     opt = sngm(poly_power(2.0, steps, 1.1), beta=0.9, weight_decay=1e-4)
-    state = opt.init(params)
-    train_step = jax.jit(make_train_step(cfg, CPU_RUNTIME, opt, n_micro=2))
+    # one unified TrainState, donated through jit — params + momentum
+    # update in place across steps (README: "Memory residency & donation")
+    state = opt.init_state(params)
+    del params
+    train_step = jax.jit(make_train_step(cfg, CPU_RUNTIME, opt, n_micro=2),
+                         donate_argnums=(0,))
 
     for t in range(steps):
-        params, state, stats = train_step(params, state, data.batch_at(t))
+        state, stats = train_step(state, data.batch_at(t))
         if t % 10 == 0 or t == steps - 1:
             print(f"step {t:3d}  loss={float(stats['loss']):.4f}  "
                   f"||g||={float(stats['grad_norm']):.3f}  "
@@ -41,7 +45,8 @@ def main():
     print(f"(bigram-chain entropy floor: {data.optimal_loss():.3f} nats)")
 
     prompt = data.batch_at(999)["tokens"][:2, :16]
-    out = greedy_generate(cfg, CPU_RUNTIME, params, prompt, max_new=8)
+    out = greedy_generate(cfg, CPU_RUNTIME, state.params_view, prompt,
+                          max_new=8)
     print("generated continuation token ids:", out.tolist())
 
 

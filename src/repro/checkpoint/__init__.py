@@ -1,3 +1,5 @@
-from repro.checkpoint.io import save_checkpoint, load_checkpoint
+from repro.checkpoint.io import (check_loadable, is_committed,
+                                 load_checkpoint, save_checkpoint)
 
-__all__ = ["save_checkpoint", "load_checkpoint"]
+__all__ = ["save_checkpoint", "load_checkpoint", "is_committed",
+           "check_loadable"]

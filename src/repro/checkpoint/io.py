@@ -18,16 +18,80 @@ child buffers and round-trip like any leaf), or the chain interpreter's
 tuple positions, so a chain's state layout — i.e. the transform
 sequence — must match between save and load; the optimizer spec in
 ``train_meta.json`` is what guarantees that on ``--resume``).
+
+Atomic commit: a save is staged in a ``<path>.tmp-staging`` directory,
+finished with a ``COMMIT`` marker file, and renamed into place (an
+existing checkpoint is moved aside, never deleted, until the new one is
+installed) — so a crash mid-save can never leave a half-written
+directory that LOOKS like a checkpoint.  ``check_loadable`` (used by
+``load_checkpoint`` and the launcher's ``--resume``) rejects a torn
+save, recovers a crash-interrupted swap from its surviving committed
+staging/backup dir, and still accepts markerless LEGACY checkpoints
+when demonstrably complete (meta ``n_leaves`` matches the archive).
+Multi-host runs fall back to in-place shard writes with the marker
+written LAST by process 0 (cross-host atomic commit is the orbax-style
+coordination on the ROADMAP).
 """
 from __future__ import annotations
 
 import json
 import os
+import shutil
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+COMMIT_MARKER = "COMMIT"
+
+
+def is_committed(path: str) -> bool:
+    """True iff ``path`` holds a fully committed checkpoint (the marker is
+    the LAST thing a save produces before the atomic rename)."""
+    return os.path.exists(os.path.join(path, COMMIT_MARKER))
+
+
+def _recover_interrupted_swap(path: str) -> None:
+    """A crash between the swap's rename and replace steps leaves ``path``
+    missing while a FULLY COMMITTED staging (new save) or backup (old
+    save) directory survives.  Move the best committed candidate back
+    into place — newest first — so neither save-over nor resume ever
+    deletes or overlooks the only committed copy on disk."""
+    if os.path.exists(path):
+        return
+    for cand in (f"{path}.tmp-staging", f"{path}.tmp-old"):
+        if os.path.isdir(cand) and is_committed(cand):
+            os.replace(cand, path)
+            return
+
+
+def check_loadable(path: str) -> None:
+    """Raise unless ``path`` is safe to load: committed (marker present),
+    or a LEGACY pre-marker checkpoint that is demonstrably complete —
+    the old writer produced meta.json after the shard, so a markerless
+    dir whose meta ``n_leaves`` matches the archive's key count was
+    finished.  Anything else is a torn/interrupted save.  Recovers a
+    crash-interrupted swap first (see ``_recover_interrupted_swap``)."""
+    _recover_interrupted_swap(path)
+    if is_committed(path):
+        return
+    meta_p = os.path.join(path, "meta.json")
+    shard_p = os.path.join(path, f"shard_{jax.process_index():05d}.npz")
+    if os.path.exists(meta_p) and os.path.exists(shard_p):
+        try:
+            with open(meta_p) as f:
+                n_meta = json.load(f).get("n_leaves")
+            n_arch = len(np.load(shard_p).files)
+        except Exception:
+            n_meta, n_arch = None, -1
+        if n_meta is not None and n_meta == n_arch:
+            return                              # legacy-complete
+    raise ValueError(
+        f"checkpoint at {path!r} has no {COMMIT_MARKER} marker and is not "
+        f"a complete legacy save: the write was interrupted before "
+        f"committing (or the directory is not a checkpoint); refusing to "
+        f"load a torn save")
 
 
 def _flatten(tree):
@@ -59,8 +123,7 @@ def _dtype_by_name(name: str) -> np.dtype:
         return np.dtype(getattr(ml_dtypes, name))
 
 
-def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
-    os.makedirs(path, exist_ok=True)
+def _write_shard_and_meta(outdir: str, tree: Any, step: int) -> None:
     flat = _flatten(tree)
     arrays, dtypes = {}, {}
     for k, v in flat.items():
@@ -69,11 +132,90 @@ def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
         if not _np_savable(a.dtype):
             a = a.view(f"uint{8 * a.dtype.itemsize}")
         arrays[k] = a
-    np.savez(os.path.join(path, f"shard_{jax.process_index():05d}.npz"),
+    np.savez(os.path.join(outdir, f"shard_{jax.process_index():05d}.npz"),
              **arrays)
-    with open(os.path.join(path, "meta.json"), "w") as f:
+    with open(os.path.join(outdir, "meta.json"), "w") as f:
         json.dump({"step": step, "n_leaves": len(arrays), "format": 2,
                    "dtypes": dtypes}, f)
+
+
+def _looks_like_checkpoint(path: str) -> bool:
+    """Conservative guard before replacing an existing destination: only a
+    previous checkpoint (committed or torn) or an empty dir may be
+    clobbered — anything else is a user error we refuse to delete.
+    Requires checkpoint-SPECIFIC evidence: a bare file named meta.json is
+    not enough (datasets use that name too) — it must parse as our
+    sidecar, or a shard archive / COMMIT marker must be present."""
+    if not os.path.isdir(path):
+        return False                           # a regular file is never ours
+    entries = os.listdir(path)
+    if not entries:
+        return True
+    if is_committed(path) or any(e.startswith("shard_") and e.endswith(".npz")
+                                 for e in entries):
+        return True
+    meta_p = os.path.join(path, "meta.json")
+    if os.path.exists(meta_p):
+        try:
+            with open(meta_p) as f:
+                meta = json.load(f)
+            return isinstance(meta, dict) and "n_leaves" in meta \
+                and "step" in meta
+        except Exception:
+            return False
+    return False
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    """Save ``tree`` atomically: shards + meta are staged in a temp dir,
+    the ``COMMIT`` marker is written last, and the staged dir is renamed
+    into place — a reader never observes a torn save at ``path``."""
+    path = path.rstrip(os.sep)
+    if jax.process_count() > 1:
+        # multi-host: every process writes its own shard into the live
+        # dir; process 0 INVALIDATES any stale marker first (an
+        # interrupted overwrite must not leave an old COMMIT blessing a
+        # mixed-step shard set) and drops a fresh marker after its
+        # (local) writes.  Not torn-proof across hosts — the coordinated
+        # commit is a ROADMAP follow-up — but single-host (the
+        # container, tests) takes the atomic staging path below.
+        os.makedirs(path, exist_ok=True)
+        marker = os.path.join(path, COMMIT_MARKER)
+        if jax.process_index() == 0 and os.path.exists(marker):
+            os.remove(marker)
+        _write_shard_and_meta(path, tree, step)
+        if jax.process_index() == 0:
+            with open(marker, "w") as f:
+                f.write("committed\n")
+        return
+    # a previous save may have crashed mid-swap: restore its surviving
+    # committed dir to `path` BEFORE the leftover cleanup below, so the
+    # only committed copy on disk is never deleted
+    _recover_interrupted_swap(path)
+    # clobber guard BEFORE any work: never delete something that is not a
+    # previous checkpoint (and never leak a staging dir on refusal)
+    if os.path.exists(path) and not _looks_like_checkpoint(path):
+        raise ValueError(
+            f"refusing to overwrite {path!r}: it exists but does not "
+            f"look like a checkpoint directory (no meta.json/"
+            f"{COMMIT_MARKER}); choose an empty or fresh --ckpt path")
+    staging = f"{path}.tmp-staging"
+    backup = f"{path}.tmp-old"
+    for leftover in (staging, backup):
+        if os.path.exists(leftover):
+            shutil.rmtree(leftover)
+    os.makedirs(staging)
+    _write_shard_and_meta(staging, tree, step)
+    with open(os.path.join(staging, COMMIT_MARKER), "w") as f:
+        f.write("committed\n")                 # marker iff dir is complete
+    # swap: move the old checkpoint ASIDE (not rmtree) before installing
+    # the staged one, so a crash at any point leaves either the old or
+    # the new FULLY-COMMITTED dir on disk — never a half-written one at
+    # `path`, and never a window with the only copy deleted
+    if os.path.exists(path):
+        os.rename(path, backup)
+    os.replace(staging, path)                  # atomic on POSIX
+    shutil.rmtree(backup, ignore_errors=True)
 
 
 def load_checkpoint(path: str, like: Any, shardings: Optional[Any] = None):
@@ -81,7 +223,13 @@ def load_checkpoint(path: str, like: Any, shardings: Optional[Any] = None):
     abstract tree); optionally re-place onto ``shardings``.  Every
     restored leaf takes the DTYPE OF ``like`` — the sidecar recovers the
     stored bits exactly, then a cast (no-op when dtypes already agree)
-    shields against checkpoints written at a different precision."""
+    shields against checkpoints written at a different precision.
+
+    Raises ``ValueError`` for a torn save: no ``COMMIT`` marker and not a
+    demonstrably complete legacy (pre-marker) checkpoint — an interrupted
+    save must never load as if it were whole.  (The launcher's
+    ``--resume`` is stricter and requires the marker outright.)"""
+    check_loadable(path)
     data = np.load(os.path.join(path, f"shard_{jax.process_index():05d}.npz"))
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)

@@ -4,9 +4,10 @@ optimizer family expressed as composable gradient-transform chains
 engine (core/multi_tensor.py), plus schedules and distributed-norm
 utilities."""
 from repro.core.optim import (
-    Optimizer, OptState, OptimizerSpec, sngm, sngd, msgd, lars, lamb,
-    make_optimizer, optimizer_names, register_optimizer,
-    global_norm, tree_squared_norm, to_pytree, from_pytree,
+    Optimizer, OptState, OptimizerSpec, TrainState, sngm, sngd, msgd, lars,
+    lamb, init_train_state, make_optimizer, optimizer_names,
+    register_optimizer, global_norm, tree_squared_norm, to_pytree,
+    from_pytree,
 )
 from repro.core.multi_tensor import (
     FlatOptState, TreeLayout, build_layout, count_packed_bytes, flatten,
@@ -21,8 +22,9 @@ from repro.core.transform import (
 from repro.core import schedules
 from repro.core.schedules import make_schedule
 
-__all__ = ["Optimizer", "OptState", "OptimizerSpec", "sngm", "sngd", "msgd",
-           "lars", "lamb", "make_optimizer", "optimizer_names",
+__all__ = ["Optimizer", "OptState", "OptimizerSpec", "TrainState", "sngm",
+           "sngd", "msgd", "lars", "lamb", "init_train_state",
+           "make_optimizer", "optimizer_names",
            "register_optimizer", "global_norm", "tree_squared_norm",
            "schedules", "make_schedule", "to_pytree", "from_pytree",
            "FlatOptState", "TreeLayout", "build_layout", "count_packed_bytes",

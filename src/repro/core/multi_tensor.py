@@ -339,24 +339,35 @@ def init_flat_adam_state(params: PyTree,
     exactly what ``optim.to_pytree`` needs to rebuild the interpreter's
     ``ChainOptState`` layout."""
     layout = build_layout(params)
-    zeros = tuple(jnp.zeros((b.n_elems,), jnp.float32)
-                  for b in layout.buckets)
+
+    def zeros():
+        # m and v must be DISTINCT buffers: sharing one zeros array
+        # between them donates the same buffer twice under the donated
+        # TrainState step (XLA rejects `f(donate(a), donate(a))`)
+        return tuple(jnp.zeros((b.n_elems,), jnp.float32)
+                     for b in layout.buckets)
+
     return FlatOptState(
         step=jnp.zeros((), jnp.int32),
         p_flats=tuple(flatten(params, layout)),
         u_flats=(), layout=layout,
-        m_flats=zeros, v_flats=zeros, form=form)
+        m_flats=zeros(), v_flats=zeros(), form=form)
 
 
 def resident_step(kind: str, grads: PyTree, state: FlatOptState, *, lr,
                   beta: float, weight_decay: float = 0.0, eps: float = 1e-12,
-                  trust: float = 0.001, clip: Optional[float] = None
-                  ) -> Tuple[PyTree, FlatOptState, dict]:
+                  trust: float = 0.001, clip: Optional[float] = None,
+                  materialize_view: bool = True
+                  ) -> Tuple[Optional[PyTree], FlatOptState, dict]:
     """The resident fast path: flatten ONLY the gradients; params and
     momentum stay in the buffers carried by ``state``.  Returns
     ``(params_view, new_state, stats)`` where the pytree view is bit-equal
     to what the per-step path returns (buffer padding is invariantly
-    zero, see module docstring)."""
+    zero, see module docstring).  ``materialize_view=False`` returns
+    ``None`` instead of the view — the donation-safe ``TrainState`` path
+    uses this so the step's OUTPUTS hold the parameters exactly once
+    (in ``new_state.p_flats``), letting jit donation alias the update
+    fully in place."""
     layout = state.layout
     check_grad_dtypes(grads, layout)
     stat_gnorm = None
@@ -371,15 +382,19 @@ def resident_step(kind: str, grads: PyTree, state: FlatOptState, *, lr,
     new_state = FlatOptState(step=state.step + 1, p_flats=tuple(po),
                              u_flats=tuple(uo), layout=layout,
                              form=state.form)
-    return unflatten(po, layout), new_state, stats
+    view = unflatten(po, layout) if materialize_view else None
+    return view, new_state, stats
 
 
 def resident_lamb_step(grads: PyTree, state: FlatOptState, *, lr, b1: float,
                        b2: float, eps: float, weight_decay: float = 0.0,
-                       trust_eps: float = 0.0, clip: Optional[float] = None
-                       ) -> Tuple[PyTree, FlatOptState, dict]:
+                       trust_eps: float = 0.0, clip: Optional[float] = None,
+                       materialize_view: bool = True
+                       ) -> Tuple[Optional[PyTree], FlatOptState, dict]:
     """Resident fast path for the Adam family: flatten ONLY the gradients;
-    params and both moments stay in the buffers carried by ``state``."""
+    params and both moments stay in the buffers carried by ``state``.
+    ``materialize_view=False`` skips the pytree params view (see
+    ``resident_step``) for the donation-safe ``TrainState`` path."""
     layout = state.layout
     check_grad_dtypes(grads, layout)
     stat_gnorm = None
@@ -395,7 +410,8 @@ def resident_lamb_step(grads: PyTree, state: FlatOptState, *, lr, b1: float,
     new_state = FlatOptState(step=state.step + 1, p_flats=tuple(po),
                              u_flats=(), layout=layout, m_flats=tuple(mo),
                              v_flats=tuple(vo), form=state.form)
-    return unflatten(po, layout), new_state, stats
+    view = unflatten(po, layout) if materialize_view else None
+    return view, new_state, stats
 
 
 def check_grad_dtypes(grads: PyTree, layout: TreeLayout) -> None:

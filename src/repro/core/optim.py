@@ -57,7 +57,13 @@ losslessly (e.g. around checkpoints saved in the other form).
 With a resident state, ``opt.step``'s ``params`` argument is only a
 convenience view: the authoritative parameter values are
 ``state.p_flats`` (the two agree by construction when params come from
-the previous step's output, as in ``make_train_step``).
+the previous step's output).  The donation-safe spelling is the
+``TrainState`` API (``opt.init_state`` / ``opt.step_state``): on the
+resident path the flat buffers are the SINGLE owner of the parameters
+(``TrainState.params`` is None), the step never returns a second
+materialized pytree, and jitting with ``donate_argnums`` on the state
+aliases params and optimizer slots in place across steps — ~1x parameter
+bytes live instead of the 2x the (params, FlatOptState) pairing held.
 
 Serialization: ``OptimizerSpec`` is the JSON-safe identity of an
 optimizer (registry name + kwargs + a declarative schedule spec).
@@ -113,11 +119,103 @@ class Optimizer:
     The state is an ``OptState`` pytree, a flat-buffer-resident
     ``FlatOptState`` (``fused="multi_tensor"``), or a ``ChainOptState``
     (interpreter-run novel chains).  ``kind`` names the fused engine kind
-    a compiled chain matched, or None for interpreter-run chains."""
+    a compiled chain matched, or None for interpreter-run chains.
+
+    ``step_state`` is the ``TrainState``-level entry every training loop
+    should use: it consumes/produces the unified state (params + optimizer
+    slots + schedule position) and on the resident path never materializes
+    a second parameter pytree — the step's outputs hold the parameters
+    exactly once, in ``FlatOptState.p_flats``, so jitting it with
+    ``donate_argnums`` on the state aliases the whole update in place."""
     name: str
     init: Callable[[PyTree], Any]
     step: Callable[[PyTree, Any, PyTree], Tuple[PyTree, Any, dict]]
     kind: Optional[str] = None
+
+    def init_state(self, params: PyTree) -> "TrainState":
+        """Build the unified ``TrainState``.  When ``init`` returns a
+        resident ``FlatOptState`` the flat buffers become the SINGLE
+        owner of the parameters: ``TrainState.params`` is None and the
+        input pytree is dropped (its leaves are consumed into the
+        buffers), so device memory holds one parameter copy."""
+        return TrainState.wrap(params, self.init(params))
+
+    def step_state(self, grads: PyTree,
+                   state: "TrainState") -> Tuple["TrainState", dict]:
+        """One optimizer step over a ``TrainState``.  On the resident
+        path (``state.params is None``) the underlying step returns no
+        pytree view — ``new_state.opt_state.p_flats`` stays the single
+        parameter owner.  A resident state fed to a non-engine optimizer
+        materializes its view and continues in pytree form (params +
+        ``OptState``), still one live parameter copy."""
+        new_p, new_s, stats = self.step(grads, state.opt_state, state.params)
+        if new_p is None and not isinstance(new_s, FlatOptState):
+            raise TypeError(
+                f"optimizer {self.name!r} returned no params view and a "
+                f"non-resident state {type(new_s).__name__}; a TrainState "
+                f"with params=None requires a FlatOptState owner")
+        return TrainState(params=new_p, opt_state=new_s), stats
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass(frozen=True)
+class TrainState:
+    """The unified training state threaded through a donated train step:
+    parameters (or their resident flat-buffer owner), optimizer slots,
+    and the schedule position (the shared step counter inside
+    ``opt_state``).
+
+    Single-owner invariant: on the resident fast path
+    (``fused="multi_tensor"``) ``params`` is **None** and
+    ``opt_state.p_flats`` are the only live parameter copy; the forward
+    pass reads a temporary unflattened view (``params_view``) that XLA
+    frees inside the step.  On every other path ``params`` is the plain
+    pytree and ``opt_state`` holds no parameter bytes.  Either way the
+    state carries ~1x parameter bytes, and jitting the train step with
+    ``donate_argnums`` on it lets XLA alias params and optimizer slots
+    across steps instead of double-buffering them."""
+    params: Optional[PyTree]
+    opt_state: Any
+
+    def tree_flatten_with_keys(self):
+        G = jax.tree_util.GetAttrKey
+        return (((G("params"), self.params),
+                 (G("opt_state"), self.opt_state)), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        params, opt_state = children
+        return cls(params=params, opt_state=opt_state)
+
+    @classmethod
+    def wrap(cls, params: Optional[PyTree], opt_state: Any) -> "TrainState":
+        """Apply the single-owner rule: a resident ``FlatOptState`` owns
+        the parameters (the pytree is dropped); any other state form
+        carries them.  The one place the rule lives — ``init_state`` and
+        the launcher's resume path both build states through here."""
+        if isinstance(opt_state, FlatOptState):
+            return cls(params=None, opt_state=opt_state)
+        return cls(params=params, opt_state=opt_state)
+
+    @property
+    def step(self) -> jnp.ndarray:
+        return self.opt_state.step
+
+    @property
+    def params_view(self) -> PyTree:
+        """The parameter pytree: ``params`` itself, or a materialized
+        read-only view of the resident flat buffers (bit-equal to them by
+        the zero-padding invariant).  Use for ``loss_fn``, logging, and
+        checkpointing — never feed it back in as a second live copy."""
+        if self.params is not None:
+            return self.params
+        return self.opt_state.params
+
+
+def init_train_state(opt: Optimizer, params: PyTree) -> TrainState:
+    """Module-level spelling of ``opt.init_state(params)``."""
+    return opt.init_state(params)
 
 
 def _init(params: PyTree) -> OptState:
@@ -345,10 +443,18 @@ def _kind_optimizer(kind: str, schedule: Schedule, *, beta: float,
         lr = schedule(state.step)
         if fused_mode == "multi_tensor":
             if isinstance(state, FlatOptState):
-                return resident_step(kind, grads, state, lr=lr, **kw)
+                # params=None (the TrainState resident path) skips the
+                # output pytree view so donation can alias fully in place
+                return resident_step(kind, grads, state, lr=lr,
+                                     materialize_view=params is not None,
+                                     **kw)
             new_p, new_u, stats = multi_tensor_step(
                 kind, params, grads, state.momentum, lr=lr, **kw)
             return new_p, OptState(state.step + 1, new_u), stats
+        if params is None:
+            # a resident state fed to a non-engine path: materialize the
+            # authoritative buffer view and continue in pytree form
+            params = state.params
         if fused_mode == "per_leaf":
             new_p, new_u, stats = _per_leaf_kind_step(
                 kind, grads, state.momentum, params, lr=lr, beta=beta,
@@ -412,7 +518,9 @@ def _lamb_optimizer(schedule: Schedule, *, b1: float, b2: float, eps: float,
     def step_fn(grads, state, params):
         if fused_mode == "multi_tensor" and isinstance(state, FlatOptState):
             lr = schedule(state.step)
-            return resident_lamb_step(grads, state, lr=lr, **kw)
+            return resident_lamb_step(grads, state, lr=lr,
+                                      materialize_view=params is not None,
+                                      **kw)
         # every other (mode, state-form) pairing runs the interpreter:
         # the engine form for lamb is the resident FlatOptState, and a
         # ChainOptState fed to the fused optimizer takes the bit-exact
@@ -420,7 +528,12 @@ def _lamb_optimizer(schedule: Schedule, *, b1: float, b2: float, eps: float,
         # XLA fusion context would cost last-ulp identity; convert with
         # from_pytree to stay on the engine)
         if isinstance(state, FlatOptState):
+            if params is None:
+                params = state.params
             state = to_pytree(state)        # materialize the chain view
+        if params is None:
+            raise TypeError("lamb interpreter step needs params; only a "
+                            "FlatOptState owner supports params=None")
         return interp_step(grads, state, params)
 
     def init(params):

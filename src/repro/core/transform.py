@@ -33,6 +33,16 @@ Execution is two-tier:
     fused mode was requested for such a chain a ``UserWarning`` is
     emitted — novel compositions train correctly but without fusion.
 
+Both tiers consume/produce the unified ``TrainState``
+(``core.optim``) through ``Optimizer.init_state`` / ``step_state``:
+interpreter-run chains carry ``TrainState(params, ChainOptState)``
+(params always materialized — a ``ChainOptState`` owns no parameter
+bytes), while matched chains on the resident engine path carry
+``TrainState(None, FlatOptState)`` with the flat buffers as the single
+parameter owner.  Either form is donation-safe: jit the train step with
+``donate_argnums`` on the state and XLA aliases params, momentum, and
+Adam moments in place across steps.
+
 Weight-decay coupling is positional, not a flag: ``add_decayed_weights``
 placed *before* a normalize/trust transform is coupled decay (the decayed
 gradient is what gets normalized — the paper's setup), placed *after* it
@@ -325,8 +335,12 @@ def ema_params(decay: float = 0.999) -> GradientTransform:
     decay = float(decay)
 
     def init(params):
+        # copy=True: astype on an f32 leaf returns the SAME buffer, and a
+        # shadow aliasing the live params would donate one buffer twice
+        # under the donated TrainState step
         return EmaParamsState(
-            ema=jax.tree.map(lambda p: p.astype(jnp.float32), params))
+            ema=jax.tree.map(
+                lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params))
 
     def update(updates, state, params):
         new_ema = jax.tree.map(
@@ -485,6 +499,11 @@ def compile_chain(tx: GradientTransform, *, fused: Optional[str] = None,
                              inner=tx.init(params))
 
     def step_fn(grads, state, params):
+        if params is None:
+            raise TypeError(
+                "interpreter-run chains carry no resident parameter "
+                "buffers; build the TrainState with params (opt.init_state "
+                "does this — only FlatOptState owners set params=None)")
         updates, inner, stats = tx.update(grads, state.inner, params)
         new_p = jax.tree.map(lambda w, u: (w - u).astype(w.dtype),
                              params, updates)

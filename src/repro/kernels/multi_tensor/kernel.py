@@ -54,11 +54,27 @@ behaviour under XLA fusion) byte-stable across all chain variants.
 Layout: buffers are viewed as (n_chunks, CHUNK) rows; the grid walks
 tiles of TILE_ROWS rows.  Coefficients/partials ride in (TILE_ROWS, 1)
 blocks — fine in interpret mode and on recent Mosaic (last-dim-1 gets a
-masked relayout); pad to lane width if a target TPU rejects it.
+masked relayout).  For a target TPU whose Mosaic build rejects the
+last-dim-1 layout, set ``lane_pad=True`` (or export
+``REPRO_MT_LANE_PAD=1``): coefficient/partial blocks are padded to the
+full lane width (``LANE=128``) — the coefficient is replicated across
+lanes on the host, partials are broadcast-stored across lanes in the
+kernel and lane 0 is sliced back out — with bitwise-identical results
+(each lane carries the same f32 value; asserted in
+tests/test_multi_tensor.py).
+
+In-place residency: the update passes declare ``input_output_aliases``
+(p->p_new, u->u_new, m->m_new, v->v_new), so when the caller's buffers
+are donated (the ``TrainState`` train step jitted with
+``donate_argnums``) XLA updates the resident flat buffers in place
+instead of double-buffering them; when an input is still live elsewhere
+XLA inserts the copy itself, so numerics and non-donated callers are
+unaffected.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +84,38 @@ from jax.experimental.pallas import tpu as pltpu
 CHUNK = 1024        # elements per row == per-coefficient granularity
 TILE_ROWS = 64      # rows per grid step: 64*1024*4B = 256 KiB f32 per operand
 TILE = TILE_ROWS * CHUNK
+LANE = 128          # TPU lane width: coefficient-block width under lane_pad
+
+
+def _lane_pad_default() -> bool:
+    """Env-switchable default for the lane-width padding of coefficient /
+    partial blocks (real-TPU Mosaic builds that reject (rows, 1))."""
+    return os.environ.get("REPRO_MT_LANE_PAD", "0").lower() not in (
+        "0", "", "false")
+
+
+def _coeff_width(lane_pad: bool) -> int:
+    return LANE if lane_pad else 1
+
+
+def _expand_coeff(a: jnp.ndarray, lane_pad: bool) -> jnp.ndarray:
+    """Host-side: (n_chunks,) f32 -> the (n_chunks, width) block the kernel
+    reads.  Lane replication keeps every lane bit-identical to lane 0."""
+    col = a.reshape(-1, 1)
+    if not lane_pad:
+        return col
+    return jnp.broadcast_to(col, (col.shape[0], LANE))
+
+
+def _store_partial(ref, s: jnp.ndarray) -> None:
+    """Kernel-side: store a (rows, 1) partial into a (rows, width) block,
+    broadcasting the value across lanes when lane-padded."""
+    ref[...] = jnp.broadcast_to(s, ref.shape)
+
+
+def _partials_out(out: jnp.ndarray) -> jnp.ndarray:
+    """Host-side: (n_chunks, width) partial block -> (n_chunks,) lane 0."""
+    return out[:, 0]
 
 
 def _tile_rows(n_chunks: int, interpret: bool) -> int:
@@ -96,16 +144,17 @@ def _decay(g, p, *, wd: float, cast_g_first: bool):
 
 def _sumsq_raw_kernel(x_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)
-    o_ref[...] = jnp.sum(jnp.square(x), axis=1, keepdims=True)
+    _store_partial(o_ref, jnp.sum(jnp.square(x), axis=1, keepdims=True))
 
 
 def _sumsq_decayed_kernel(g_ref, p_ref, o_ref, *, wd):
     ge = _decay(g_ref[...], p_ref[...], wd=wd, cast_g_first=False)
-    o_ref[...] = jnp.sum(jnp.square(ge), axis=1, keepdims=True)
+    _store_partial(o_ref, jnp.sum(jnp.square(ge), axis=1, keepdims=True))
 
 
-@functools.partial(jax.jit, static_argnames=("wd", "interpret"))
-def chunk_sumsq(x, p=None, *, wd: float = 0.0, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("wd", "interpret", "lane_pad"))
+def chunk_sumsq(x, p=None, *, wd: float = 0.0, interpret: bool = False,
+                lane_pad: bool = False):
     """Per-chunk sum of squares of ``x`` (or of ``x + wd*p`` when ``p`` is
     given).  ``x``: flat (n,) with n % TILE == 0.  Returns f32 (n/CHUNK,)."""
     assert x.ndim == 1 and x.size % TILE == 0, x.shape
@@ -113,9 +162,10 @@ def chunk_sumsq(x, p=None, *, wd: float = 0.0, interpret: bool = False):
     n_chunks = x2.shape[0]
     rows = _tile_rows(n_chunks, interpret)
     grid = n_chunks // rows
+    width = _coeff_width(lane_pad)
     tile = pl.BlockSpec((rows, CHUNK), lambda i: (i, 0))
-    otile = pl.BlockSpec((rows, 1), lambda i: (i, 0))
-    out_shape = jax.ShapeDtypeStruct((n_chunks, 1), jnp.float32)
+    otile = pl.BlockSpec((rows, width), lambda i: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((n_chunks, width), jnp.float32)
     if p is None or wd == 0.0:
         out = pl.pallas_call(
             _sumsq_raw_kernel, grid=(grid,),
@@ -128,7 +178,7 @@ def chunk_sumsq(x, p=None, *, wd: float = 0.0, interpret: bool = False):
             in_specs=[tile, tile], out_specs=otile, out_shape=out_shape,
             interpret=interpret,
         )(x2, p.reshape(-1, CHUNK))
-    return out.ravel()
+    return _partials_out(out)
 
 
 # ---------------------------------------------------------------------------
@@ -138,17 +188,18 @@ def chunk_sumsq(x, p=None, *, wd: float = 0.0, interpret: bool = False):
 def _update_kernel(c_ref, a_ref, p_ref, g_ref, u_ref,
                    po_ref, uo_ref, usq_ref, *, beta, wd, cast_g_first):
     ge = _decay(g_ref[...], p_ref[...], wd=wd, cast_g_first=cast_g_first)
-    a = a_ref[...]                       # (TILE_ROWS, 1), broadcasts per row
+    a = a_ref[:, 0:1]                    # (TILE_ROWS, 1), broadcasts per row
     u_new = beta * u_ref[...] + a * ge
     uo_ref[...] = u_new
     po_ref[...] = (p_ref[...] - c_ref[0] * u_new).astype(po_ref.dtype)
-    usq_ref[...] = jnp.sum(jnp.square(u_new), axis=1, keepdims=True)
+    _store_partial(usq_ref, jnp.sum(jnp.square(u_new), axis=1, keepdims=True))
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("beta", "wd", "cast_g_first", "interpret"))
+@functools.partial(jax.jit, static_argnames=("beta", "wd", "cast_g_first",
+                                             "interpret", "lane_pad"))
 def fused_update(p, g, u, a_chunk, c, *, beta: float, wd: float,
-                 cast_g_first: bool = False, interpret: bool = False):
+                 cast_g_first: bool = False, interpret: bool = False,
+                 lane_pad: bool = False):
     """Whole-bucket fused optimizer update.
 
     p: flat (n,) in the bucket dtype; g: flat (n,) gradient buffer (bucket
@@ -156,14 +207,17 @@ def fused_update(p, g, u, a_chunk, c, *, beta: float, wd: float,
     Adam direction); u: flat (n,) f32; a_chunk: (n/CHUNK,) f32 per-chunk
     coefficient; c: scalar.
     Returns (p_new [p.dtype], u_new [f32], u_sumsq_partials [(n/CHUNK,) f32]).
+    ``p -> p_new`` and ``u -> u_new`` are declared input/output aliases,
+    so donated resident buffers update in place.
     """
     assert p.ndim == 1 and p.size % TILE == 0, p.shape
     n_chunks = p.size // CHUNK
     assert a_chunk.shape == (n_chunks,), a_chunk.shape
     rows = _tile_rows(n_chunks, interpret)
     grid = n_chunks // rows
+    width = _coeff_width(lane_pad)
     tile = pl.BlockSpec((rows, CHUNK), lambda i: (i, 0))
-    ctile = pl.BlockSpec((rows, 1), lambda i: (i, 0))
+    ctile = pl.BlockSpec((rows, width), lambda i: (i, 0))
     cs = jnp.reshape(c, (1,)).astype(jnp.float32)
     po, uo, usq = pl.pallas_call(
         functools.partial(_update_kernel, beta=beta, wd=wd,
@@ -174,39 +228,43 @@ def fused_update(p, g, u, a_chunk, c, *, beta: float, wd: float,
         out_specs=[tile, tile, ctile],
         out_shape=[jax.ShapeDtypeStruct((n_chunks, CHUNK), p.dtype),
                    jax.ShapeDtypeStruct((n_chunks, CHUNK), jnp.float32),
-                   jax.ShapeDtypeStruct((n_chunks, 1), jnp.float32)],
+                   jax.ShapeDtypeStruct((n_chunks, width), jnp.float32)],
+        input_output_aliases={2: 0, 4: 1},     # p -> p_new, u -> u_new
         interpret=interpret,
-    )(cs, a_chunk.reshape(-1, 1), p.reshape(-1, CHUNK),
+    )(cs, _expand_coeff(a_chunk, lane_pad), p.reshape(-1, CHUNK),
       g.reshape(-1, CHUNK), u.reshape(-1, CHUNK))
-    return po.ravel(), uo.ravel(), usq.ravel()
+    return po.ravel(), uo.ravel(), _partials_out(usq)
 
 
 def _scale_apply_kernel(c_ref, a_ref, p_ref, g_ref, po_ref, ssq_ref):
     """Per-chunk-scaled apply (LAMB's second launch): the expression
     mirrors the interpreter's scale_by_trust_ratio (ratio * u) ->
     scale_by_schedule (lr * .) -> apply (w - .) stages exactly."""
-    s = a_ref[...] * g_ref[...]          # (TILE_ROWS, 1) a broadcasts
+    s = a_ref[:, 0:1] * g_ref[...]       # (TILE_ROWS, 1) a broadcasts
     po_ref[...] = (p_ref[...] - c_ref[0] * s).astype(po_ref.dtype)
-    ssq_ref[...] = jnp.sum(jnp.square(s), axis=1, keepdims=True)
+    _store_partial(ssq_ref, jnp.sum(jnp.square(s), axis=1, keepdims=True))
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def scale_apply(p, g, a_chunk, c, *, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("interpret", "lane_pad"))
+def scale_apply(p, g, a_chunk, c, *, interpret: bool = False,
+                lane_pad: bool = False):
     """Whole-bucket scale-and-apply: ``p <- (p - c * (a * g)).astype``.
 
     p: flat (n,) in the bucket dtype; g: flat (n,) f32 direction;
     a_chunk: (n/CHUNK,) f32 per-chunk coefficient; c: scalar.
     Returns (p_new [p.dtype], s_sumsq_partials [(n/CHUNK,) f32]) where
     s = a * g is the scaled direction (its folded norm is LAMB's
-    pre-lr ``update_norm`` stat).
+    pre-lr ``update_norm`` stat).  ``p -> p_new`` is an input/output
+    alias, so a donated resident buffer updates in place.
     """
     assert p.ndim == 1 and p.size % TILE == 0, p.shape
     n_chunks = p.size // CHUNK
     assert a_chunk.shape == (n_chunks,), a_chunk.shape
     rows = _tile_rows(n_chunks, interpret)
     grid = n_chunks // rows
+    width = _coeff_width(lane_pad)
     tile = pl.BlockSpec((rows, CHUNK), lambda i: (i, 0))
-    ctile = pl.BlockSpec((rows, 1), lambda i: (i, 0))
+    ctile = pl.BlockSpec((rows, width), lambda i: (i, 0))
     cs = jnp.reshape(c, (1,)).astype(jnp.float32)
     po, ssq = pl.pallas_call(
         _scale_apply_kernel,
@@ -215,11 +273,12 @@ def scale_apply(p, g, a_chunk, c, *, interpret: bool = False):
                   ctile, tile, tile],
         out_specs=[tile, ctile],
         out_shape=[jax.ShapeDtypeStruct((n_chunks, CHUNK), p.dtype),
-                   jax.ShapeDtypeStruct((n_chunks, 1), jnp.float32)],
+                   jax.ShapeDtypeStruct((n_chunks, width), jnp.float32)],
+        input_output_aliases={2: 0},           # p -> p_new
         interpret=interpret,
-    )(cs, a_chunk.reshape(-1, 1), p.reshape(-1, CHUNK),
+    )(cs, _expand_coeff(a_chunk, lane_pad), p.reshape(-1, CHUNK),
       g.reshape(-1, CHUNK))
-    return po.ravel(), ssq.ravel()
+    return po.ravel(), _partials_out(ssq)
 
 
 # ---------------------------------------------------------------------------
@@ -237,7 +296,7 @@ def _adam_kernel(b_ref, p_ref, g_ref, m_ref, v_ref,
     including the cast orders (wd*p in the param dtype, then f32 add)."""
     g = g_ref[...]
     g32 = g.astype(jnp.float32)
-    gsq_ref[...] = jnp.sum(jnp.square(g32), axis=1, keepdims=True)
+    _store_partial(gsq_ref, jnp.sum(jnp.square(g32), axis=1, keepdims=True))
     m_new = b1 * m_ref[...] + (1 - b1) * g32
     v_new = b2 * v_ref[...] + (1 - b2) * jnp.square(g32)
     u = (m_new / b_ref[0]) / (jnp.sqrt(v_new / b_ref[1]) + eps)
@@ -246,15 +305,17 @@ def _adam_kernel(b_ref, p_ref, g_ref, m_ref, v_ref,
     mo_ref[...] = m_new
     vo_ref[...] = v_new
     uo_ref[...] = u
-    usq_ref[...] = jnp.sum(jnp.square(u), axis=1, keepdims=True)
-    psq_ref[...] = jnp.sum(jnp.square(p_ref[...].astype(jnp.float32)),
-                           axis=1, keepdims=True)
+    _store_partial(usq_ref, jnp.sum(jnp.square(u), axis=1, keepdims=True))
+    _store_partial(psq_ref,
+                   jnp.sum(jnp.square(p_ref[...].astype(jnp.float32)),
+                           axis=1, keepdims=True))
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("b1", "b2", "eps", "wd", "interpret"))
+@functools.partial(jax.jit, static_argnames=("b1", "b2", "eps", "wd",
+                                             "interpret", "lane_pad"))
 def adam_update(p, g, m, v, bc1, bc2, *, b1: float, b2: float,
-                eps: float, wd: float = 0.0, interpret: bool = False):
+                eps: float, wd: float = 0.0, interpret: bool = False,
+                lane_pad: bool = False):
     """Whole-bucket fused Adam-moment pass (LAMB's first launch).
 
     p, g: flat (n,) in the bucket dtype; m, v: flat (n,) f32 moments;
@@ -263,18 +324,21 @@ def adam_update(p, g, m, v, bc1, bc2, *, b1: float, b2: float,
     > 0 so zero padding maps to zero direction (0 / (0 + eps)); the
     chain compiler refuses eps <= 0.
     Returns (m_new, v_new, u [all f32 flat], and f32 (n/CHUNK,) sumsq
-    partials of u, p, g).
+    partials of u, p, g).  ``m -> m_new`` and ``v -> v_new`` are
+    input/output aliases, so donated resident moment buffers update in
+    place (``p`` cannot alias — the apply pass still reads it).
     """
     assert p.ndim == 1 and p.size % TILE == 0, p.shape
     n_chunks = p.size // CHUNK
     rows = _tile_rows(n_chunks, interpret)
     grid = n_chunks // rows
+    width = _coeff_width(lane_pad)
     tile = pl.BlockSpec((rows, CHUNK), lambda i: (i, 0))
-    ctile = pl.BlockSpec((rows, 1), lambda i: (i, 0))
+    ctile = pl.BlockSpec((rows, width), lambda i: (i, 0))
     bs = jnp.stack([jnp.asarray(bc1, jnp.float32),
                     jnp.asarray(bc2, jnp.float32)])
     flat = jax.ShapeDtypeStruct((n_chunks, CHUNK), jnp.float32)
-    part = jax.ShapeDtypeStruct((n_chunks, 1), jnp.float32)
+    part = jax.ShapeDtypeStruct((n_chunks, width), jnp.float32)
     mo, vo, uo, usq, psq, gsq = pl.pallas_call(
         functools.partial(_adam_kernel, b1=b1, b2=b2, eps=eps, wd=wd),
         grid=(grid,),
@@ -282,8 +346,9 @@ def adam_update(p, g, m, v, bc1, bc2, *, b1: float, b2: float,
                   tile, tile, tile, tile],
         out_specs=[tile, tile, tile, ctile, ctile, ctile],
         out_shape=[flat, flat, flat, part, part, part],
+        input_output_aliases={3: 0, 4: 1},     # m -> m_new, v -> v_new
         interpret=interpret,
     )(bs, p.reshape(-1, CHUNK), g.reshape(-1, CHUNK),
       m.reshape(-1, CHUNK), v.reshape(-1, CHUNK))
     return (mo.ravel(), vo.ravel(), uo.ravel(),
-            usq.ravel(), psq.ravel(), gsq.ravel())
+            _partials_out(usq), _partials_out(psq), _partials_out(gsq))

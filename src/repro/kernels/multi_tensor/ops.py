@@ -4,8 +4,15 @@ On non-TPU backends the kernels run in interpret mode (correctness path);
 ``backend="ref"`` bypasses Pallas entirely with the bit-identical jnp
 oracle.  Launch counts are recorded at trace time for the overhead
 benchmark — note the ref backend records zero.
+
+``lane_pad`` (default: the ``REPRO_MT_LANE_PAD`` env switch) pads the
+coefficient/partial blocks to the TPU lane width for Mosaic builds that
+reject the (rows, 1) layout; results are bitwise-identical either way
+(see kernel.py).
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 
@@ -17,36 +24,48 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def chunk_sumsq(x, p=None, *, wd: float = 0.0, backend: str = "pallas"):
+def _lane_pad(lane_pad: Optional[bool]) -> bool:
+    return kernel._lane_pad_default() if lane_pad is None else lane_pad
+
+
+def chunk_sumsq(x, p=None, *, wd: float = 0.0, backend: str = "pallas",
+                lane_pad: Optional[bool] = None):
     if backend == "ref":
         return ref.chunk_sumsq_ref(x, p, wd=wd)
     record_launches(1)
-    return kernel.chunk_sumsq(x, p, wd=wd, interpret=_interpret())
+    return kernel.chunk_sumsq(x, p, wd=wd, interpret=_interpret(),
+                              lane_pad=_lane_pad(lane_pad))
 
 
 def fused_update(p, g, u, a_chunk, c, *, beta: float, wd: float,
-                 cast_g_first: bool = False, backend: str = "pallas"):
+                 cast_g_first: bool = False, backend: str = "pallas",
+                 lane_pad: Optional[bool] = None):
     if backend == "ref":
         return ref.fused_update_ref(p, g, u, a_chunk, c, beta=beta, wd=wd,
                                     cast_g_first=cast_g_first)
     record_launches(1)
     return kernel.fused_update(p, g, u, a_chunk, c, beta=beta, wd=wd,
                                cast_g_first=cast_g_first,
-                               interpret=_interpret())
+                               interpret=_interpret(),
+                               lane_pad=_lane_pad(lane_pad))
 
 
-def scale_apply(p, g, a_chunk, c, *, backend: str = "pallas"):
+def scale_apply(p, g, a_chunk, c, *, backend: str = "pallas",
+                lane_pad: Optional[bool] = None):
     if backend == "ref":
         return ref.scale_apply_ref(p, g, a_chunk, c)
     record_launches(1)
-    return kernel.scale_apply(p, g, a_chunk, c, interpret=_interpret())
+    return kernel.scale_apply(p, g, a_chunk, c, interpret=_interpret(),
+                              lane_pad=_lane_pad(lane_pad))
 
 
 def adam_update(p, g, m, v, bc1, bc2, *, b1: float, b2: float, eps: float,
-                wd: float = 0.0, backend: str = "pallas"):
+                wd: float = 0.0, backend: str = "pallas",
+                lane_pad: Optional[bool] = None):
     if backend == "ref":
         return ref.adam_update_ref(p, g, m, v, bc1, bc2, b1=b1, b2=b2,
                                    eps=eps, wd=wd)
     record_launches(1)
     return kernel.adam_update(p, g, m, v, bc1, bc2, b1=b1, b2=b2,
-                              eps=eps, wd=wd, interpret=_interpret())
+                              eps=eps, wd=wd, interpret=_interpret(),
+                              lane_pad=_lane_pad(lane_pad))

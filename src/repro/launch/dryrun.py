@@ -24,7 +24,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCHS, SHAPES, get_config, input_specs
 from repro.core import sngm
-from repro.core.optim import OptState
+from repro.core.optim import OptState, TrainState
 from repro.core.schedules import poly_power
 from repro.launch.hlo_cost import analyze
 from repro.launch.mesh import data_axes_of, make_production_mesh
@@ -95,8 +95,13 @@ def build_lowered(arch: str, shape_name: str, mesh, precision: str = "baseline",
     if shape.kind == "train":
         from repro.sharding import param_specs
         opt = sngm(poly_power(1.6, 10_000, 1.1), beta=0.9, weight_decay=1e-4)
-        state_abs = jax.eval_shape(opt.init, params_abs)
-        state_sh = OptState(step=NamedSharding(mesh, P()), momentum=params_sh)
+        # the SAME donated TrainState step the production launcher jits:
+        # params + optimizer slots unified, donated end to end
+        ts_abs = jax.eval_shape(opt.init_state, params_abs)
+        ts_sh = TrainState(
+            params=params_sh,
+            opt_state=OptState(step=NamedSharding(mesh, P()),
+                               momentum=params_sh))
         gspecs = None if precision == "baseline" \
             else param_specs(defs, mesh, rules)     # §Perf iter 1: RS grads
         step = make_train_step(cfg, rt, opt, n_micro=n_micro,
@@ -104,10 +109,10 @@ def build_lowered(arch: str, shape_name: str, mesh, precision: str = "baseline",
         batch_abs = specs
         batch_sh = {k: bspec(v.ndim) for k, v in specs.items()}
         fn = jax.jit(step,
-                     in_shardings=(params_sh, state_sh, batch_sh),
-                     out_shardings=(params_sh, state_sh, None),
-                     donate_argnums=(0, 1))
-        lowered = fn.lower(params_abs, state_abs, batch_abs)
+                     in_shardings=(ts_sh, batch_sh),
+                     out_shardings=(ts_sh, None),
+                     donate_argnums=(0,))
+        lowered = fn.lower(ts_abs, batch_abs)
 
     elif shape.kind == "prefill":
         step = make_prefill_step(cfg, rt)

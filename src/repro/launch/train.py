@@ -9,11 +9,21 @@ compile-only mode.
     PYTHONPATH=src python -m repro.launch.train --arch yi-9b \
         --steps 50 --batch 8 --seq 128 --reduced
 
-Checkpoint/resume: ``--ckpt DIR`` saves {"params", "opt"} at the end;
-``--resume`` restores from DIR (either optimizer state form — OptState
-pytree or flat-buffer-resident FlatOptState) and continues from the
-saved step, with ``--total-steps`` pinning the schedule horizon across
-the save/resume split (README: "Checkpoint format and resume").
+Memory residency: the training loop threads ONE donated ``TrainState``
+through ``jax.jit(step, donate_argnums=(0,))``.  On the resident fast
+path (``--fused multi_tensor``) the flat buffers are the single owner of
+the parameters — device memory holds ~1x parameter bytes instead of the
+2x the old (params pytree, FlatOptState) pairing kept live — and XLA
+aliases params/momentum/moments in place across steps (README: "Memory
+residency & donation").
+
+Checkpoint/resume: ``--ckpt DIR`` saves {"params", "opt"} at the end,
+reading both from the live ``TrainState`` (atomic commit: temp dir +
+rename + ``COMMIT`` marker); ``--resume`` restores from DIR (either
+optimizer state form — OptState pytree or flat-buffer-resident
+FlatOptState), rejects torn saves without the marker, and continues from
+the saved step, with ``--total-steps`` pinning the schedule horizon
+across the save/resume split (README: "Checkpoint format and resume").
 """
 from __future__ import annotations
 
@@ -27,12 +37,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint import check_loadable, load_checkpoint, save_checkpoint
 from repro.configs import ARCHS, get_config, smoke_variant
 from repro.core import make_optimizer
 from repro.core.optim import (FlatOptState, OptState, OptimizerSpec,
-                              builder_accepts, from_pytree, optimizer_names,
-                              to_pytree)
+                              TrainState, builder_accepts, from_pytree,
+                              optimizer_names, to_pytree)
 from repro.core.transform import ChainOptState, place_chain_state
 from repro.data import SyntheticLM
 from repro.launch.mesh import data_axes_of
@@ -50,10 +60,20 @@ def _restore(path: str, params, state):
     archive's key set, load via a matching template, and convert to the
     live form with to_pytree/from_pytree (both lossless, including the
     Adam-moment slots of a fused-lamb FlatOptState).  ChainOptState for
-    interpreter-run NOVEL compositions has one form and loads directly."""
+    interpreter-run NOVEL compositions has one form and loads directly.
+
+    A torn directory (no ``COMMIT`` marker and not a demonstrably
+    complete legacy save) is rejected up front — resuming from half a
+    shard set would silently corrupt the run.  Complete pre-marker
+    checkpoints keep working, and a crash-interrupted swap is recovered
+    from its surviving committed staging/backup dir first."""
     import os
 
     import numpy as np
+    try:
+        check_loadable(path)
+    except ValueError as e:
+        raise SystemExit(f"--resume: {e}") from e
     shard = os.path.join(path, f"shard_{jax.process_index():05d}.npz")
     saved_flat = any("p_flats" in k for k in np.load(shard).files)
     want_flat = isinstance(state, FlatOptState)
@@ -203,8 +223,16 @@ def main(argv=None):
                 # (moments, EMA shadows) takes the param shardings
                 state = place_chain_state(state, psh)
         print(f"[train] resumed {args.ckpt} at step {start}")
+    # unify into the donated TrainState: on the resident path the flat
+    # buffers own the params (single copy on device) and the params
+    # pytree reference is dropped here
+    ts = TrainState.wrap(params, state)
+    del params, state
+    # donate the state through jit: XLA aliases params/momentum/moments
+    # in place across steps instead of double-buffering them
     step = jax.jit(make_train_step(cfg, rt, opt, n_micro=args.n_micro,
-                                   grad_specs=gspecs))
+                                   grad_specs=gspecs),
+                   donate_argnums=(0,))
     data = SyntheticLM(cfg.vocab_size, args.seq, args.batch, branching=4)
 
     t0 = time.time()
@@ -214,7 +242,7 @@ def main(argv=None):
         if cfg.is_encoder_decoder:
             batch["encoder_embeds"] = jax.random.normal(
                 jax.random.PRNGKey(t), (args.batch, cfg.encoder_len, cfg.d_model))
-        params, state, stats = step(params, state, batch)
+        ts, stats = step(ts, batch)
         # keep the device scalar: float() every step would block and
         # serialize dispatch.  Drain at log boundaries (which sync anyway)
         # so retained device buffers stay bounded by --log-every.
@@ -228,12 +256,13 @@ def main(argv=None):
                   f"({(t-start+1)/(time.time()-t0):.2f} it/s)")
     losses.extend(float(l) for l in pending)
     if args.ckpt:
-        # FlatOptState holds the params a second time (bit-equal by the
+        # checkpoint from the LIVE TrainState.  A FlatOptState holds the
+        # params in its flat buffers (bit-equal to the view by the
         # padding invariant), so persist the pytree form — halves the
         # checkpoint; --resume rebuilds the resident buffers losslessly
-        save_state = to_pytree(state) if isinstance(state, FlatOptState) \
-            else state
-        save_checkpoint(args.ckpt, {"params": params, "opt": save_state},
+        save_state = to_pytree(ts.opt_state)
+        save_checkpoint(args.ckpt,
+                        {"params": ts.params_view, "opt": save_state},
                         step=max(start, args.steps))
         with open(os.path.join(args.ckpt, "train_meta.json"), "w") as f:
             json.dump({"total_steps": horizon, "optimizer": spec.name,

@@ -10,10 +10,16 @@ dtype, which is exactly the per-leaf dtype contract the multi-tensor
 engine buckets by (core/multi_tensor.py), so ``make_train_step`` works
 identically for jnp and fused optimizers — including under pjit, where
 the flat-buffer build is plain jnp and SPMD inserts the one scalar
-all-reduce for the norm.  The optimizer state threads through opaquely,
-so the flat-buffer-resident ``FlatOptState`` works here too: ``opt.step``
-consumes its resident buffers and hands back the pytree param view this
-step feeds to ``loss_fn`` (the two are bit-equal by construction).
+all-reduce for the norm.
+
+The step consumes/produces the unified ``TrainState`` and is
+donation-safe: on the resident path (``TrainState.params is None``) the
+``FlatOptState.p_flats`` buffers are the SINGLE owner of the parameters
+— ``loss_fn`` reads a temporary unflattened view that XLA frees inside
+the step, and the optimizer update writes the buffers without ever
+materializing a second pytree output.  Jit it with
+``donate_argnums=(0,)`` (what ``launch/train.py`` does) and the whole
+params+momentum update aliases in place across steps.
 """
 from __future__ import annotations
 
@@ -24,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.optim import Optimizer
+from repro.core.optim import Optimizer, TrainState
 from repro.core.transform import as_optimizer
 from repro.models.runtime import Runtime
 from repro.models.transformer import forward, unembed_matrix
@@ -61,7 +67,8 @@ TOKEN_WEIGHTED_METRICS = ("ce_loss",)
 
 def make_train_step(cfg: ModelConfig, rt: Runtime, opt: Optimizer,
                     n_micro: int = 1, grad_specs=None):
-    """Returns train_step(params, opt_state, batch) -> (params', state', stats).
+    """Returns train_step(state, batch) -> (state', stats) over the
+    unified ``TrainState`` (build one with ``opt.init_state(params)``).
 
     ``opt`` is an ``Optimizer`` — or a raw ``GradientTransform`` chain,
     which is compiled on the spot (``core.transform.as_optimizer``): a
@@ -75,6 +82,11 @@ def make_train_step(cfg: ModelConfig, rt: Runtime, opt: Optimizer,
     accumulator sharding to the parameter sharding so the per-micro
     gradient reduction lowers as reduce-scatter instead of a full
     all-reduce (§Perf: 16x collective-bytes difference at n_micro=16).
+
+    Donation contract: the returned step is safe to jit with
+    ``donate_argnums=(0,)`` — the state's buffers (params or resident
+    flats, momentum, Adam moments) appear exactly once in the outputs,
+    so XLA aliases them in place instead of double-buffering.
     """
     opt = as_optimizer(opt)
     grad_fn = jax.value_and_grad(partial(loss_fn, cfg=cfg, rt=rt), has_aux=True)
@@ -87,7 +99,11 @@ def make_train_step(cfg: ModelConfig, rt: Runtime, opt: Optimizer,
             lambda x, s: jax.lax.with_sharding_constraint(
                 x, NamedSharding(rt.mesh, s)), g, grad_specs)
 
-    def train_step(params, opt_state, batch):
+    def train_step(state: TrainState, batch):
+        # resident path: a read-only pytree view of the flat buffers,
+        # materialized for loss_fn only (never threaded back as a live
+        # second copy — the update below reads state.opt_state.p_flats)
+        params = state.params_view
         B = batch["tokens"].shape[0]
         assert B % n_micro == 0, (B, n_micro)
 
@@ -128,10 +144,10 @@ def make_train_step(cfg: ModelConfig, rt: Runtime, opt: Optimizer,
 
             metrics = {k: combine(k, v) for k, v in m_stack.items()}
 
-        new_params, new_state, stats = opt.step(grads, opt_state, params)
+        new_state, stats = opt.step_state(grads, state)
         stats = dict(stats)
         stats["loss"] = loss
         stats.update({k: v for k, v in metrics.items() if jnp.ndim(v) == 0})
-        return new_params, new_state, stats
+        return new_state, stats
 
     return train_step

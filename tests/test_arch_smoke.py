@@ -61,16 +61,17 @@ def test_train_step(built, arch):
     cfg, params = built(arch)
     batch = _batch(cfg)
     opt = sngm(constant(0.01), beta=0.9, weight_decay=1e-4)
-    state = opt.init(params)
+    state = opt.init_state(params)
     step = jax.jit(make_train_step(cfg, CPU_RUNTIME, opt, n_micro=2))
-    new_params, new_state, stats = step(params, state, batch)
+    new_state, stats = step(state, batch)
     assert np.isfinite(float(stats["loss"]))
     assert float(stats["grad_norm"]) > 0
     assert int(new_state.step) == 1
     # at least one parameter must actually change
     moved = any(
         not np.allclose(np.asarray(a), np.asarray(b))
-        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)))
+        for a, b in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(new_state.params_view)))
     assert moved
 
 

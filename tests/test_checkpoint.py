@@ -188,7 +188,9 @@ def test_meta_dtype_sidecar_written(tmp_path):
 
 def test_legacy_void_checkpoint_rescued(tmp_path):
     """Pre-sidecar checkpoints stored bf16 as |V2: the bits are intact,
-    so restore must recover them via the `like` dtype."""
+    so restore must recover them via the `like` dtype.  The dir is also
+    markerless (legacy writer) but demonstrably complete — meta n_leaves
+    matches the archive — so load_checkpoint accepts it."""
     w = jax.random.normal(KEY, (6, 3)).astype(jnp.bfloat16)
     os.makedirs(tmp_path / "ck")
     np.savez(tmp_path / "ck" / "shard_00000.npz", w=np.asarray(w))
@@ -199,3 +201,100 @@ def test_legacy_void_checkpoint_rescued(tmp_path):
     assert step == 5
     assert restored["w"].dtype == jnp.bfloat16
     assert bool(jnp.array_equal(restored["w"], w))
+
+
+# ---------------------------------------------------------------------------
+# atomic commit
+# ---------------------------------------------------------------------------
+
+def test_save_is_committed_and_staging_cleaned(tmp_path):
+    """A completed save carries the COMMIT marker (written into the
+    staging dir BEFORE the atomic rename) and leaves no staging dir."""
+    from repro.checkpoint import is_committed
+    tree = make_tree("fp32")
+    path = tmp_path / "ck"
+    save_checkpoint(str(path), tree, step=3)
+    assert is_committed(str(path))
+    assert not os.path.exists(str(path) + ".tmp-staging")
+    # overwriting an existing checkpoint also commits atomically
+    save_checkpoint(str(path), tree, step=4)
+    assert is_committed(str(path))
+    _, step = load_checkpoint(str(path), tree)
+    assert step == 4
+
+
+def test_load_rejects_torn_save(tmp_path):
+    """A genuinely torn dir — shard written, meta/marker never (what a
+    crash in the LEGACY writer left behind) — must be refused, not
+    half-loaded.  A markerless dir whose meta n_leaves matches the
+    archive is instead accepted as a complete legacy checkpoint."""
+    tree = make_tree("fp32")
+    path = tmp_path / "ck"
+    save_checkpoint(str(path), tree, step=1)
+    os.remove(path / "COMMIT")
+    os.remove(path / "meta.json")                 # legacy-torn: no meta
+    with pytest.raises(ValueError, match="COMMIT"):
+        load_checkpoint(str(path), tree)
+
+    # markerless but complete (meta matches archive) = legacy, loads
+    path2 = tmp_path / "ck2"
+    save_checkpoint(str(path2), tree, step=2)
+    os.remove(path2 / "COMMIT")
+    _, step = load_checkpoint(str(path2), tree)
+    assert step == 2
+
+    # markerless AND meta/archive mismatch = torn, refused
+    path3 = tmp_path / "ck3"
+    save_checkpoint(str(path3), tree, step=3)
+    os.remove(path3 / "COMMIT")
+    meta = json.load(open(path3 / "meta.json"))
+    meta["n_leaves"] += 1
+    json.dump(meta, open(path3 / "meta.json", "w"))
+    with pytest.raises(ValueError, match="COMMIT"):
+        load_checkpoint(str(path3), tree)
+
+
+def test_interrupted_swap_recovered_on_load_and_save(tmp_path):
+    """Crash between the swap's rename and replace: `path` is gone but a
+    fully committed staging (or backup) dir survives.  Both load and a
+    subsequent save must recover it instead of failing / deleting it."""
+    import shutil
+    tree = make_tree("fp32")
+    path = tmp_path / "ck"
+    save_checkpoint(str(path), tree, step=7)
+    # simulate the crash window: the committed dir sits at .tmp-staging
+    shutil.move(str(path), str(path) + ".tmp-staging")
+    restored, step = load_checkpoint(str(path), tree)   # recovers in place
+    assert step == 7
+    assert os.path.isdir(path)
+    assert not os.path.exists(str(path) + ".tmp-staging")
+    assert_tree_bit_equal(tree, restored)
+
+    # same, via the backup slot, recovered by the NEXT save (not deleted)
+    shutil.move(str(path), str(path) + ".tmp-old")
+    save_checkpoint(str(path), tree, step=8)
+    _, step = load_checkpoint(str(path), tree)
+    assert step == 8
+    assert not os.path.exists(str(path) + ".tmp-old")
+
+
+def test_save_refuses_to_clobber_regular_file(tmp_path):
+    """Destination exists but is a FILE: clean refusal (no
+    NotADirectoryError traceback), file untouched, no staging leak."""
+    target = tmp_path / "out.json"
+    target.write_text("{}")
+    with pytest.raises(ValueError, match="look like a checkpoint"):
+        save_checkpoint(str(target), make_tree("fp32"), step=0)
+    assert target.read_text() == "{}"
+    assert not os.path.exists(str(target) + ".tmp-staging")
+
+
+def test_save_refuses_to_clobber_non_checkpoint_dir(tmp_path):
+    """The atomic replace deletes the destination first — it must refuse
+    when the destination is NOT a previous checkpoint."""
+    path = tmp_path / "precious"
+    os.makedirs(path)
+    (path / "notes.txt").write_text("not a checkpoint")
+    with pytest.raises(ValueError, match="look like a checkpoint"):
+        save_checkpoint(str(path), make_tree("fp32"), step=0)
+    assert (path / "notes.txt").exists()          # untouched

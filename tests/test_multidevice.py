@@ -28,7 +28,7 @@ SCRIPT = textwrap.dedent("""
     from repro.models.runtime import Runtime, CPU_RUNTIME
     from repro.sharding import param_shardings, batch_spec
     from repro.training import make_train_step
-    from repro.core.optim import OptState
+    from repro.core.optim import OptState, TrainState
 
     # f32 so single- vs multi-device results are comparable tightly;
     # capacity_factor=16 so no token drops: EP computes capacity per shard,
@@ -47,22 +47,23 @@ SCRIPT = textwrap.dedent("""
     opt = sngm(constant(0.01), beta=0.9, weight_decay=1e-4)
 
     # --- single device reference ---
-    st = opt.init(params)
     step_ref = jax.jit(make_train_step(cfg, CPU_RUNTIME, opt, n_micro=2))
-    p_ref, st_ref, stats_ref = step_ref(params, st, batch)
+    ts_ref, stats_ref = step_ref(opt.init_state(params), batch)
 
     # --- 4x2 mesh (data=4 with EP, model=2 TP) ---
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     rt = Runtime(mesh=mesh, data_axes=("data",), remat=True)
     psh = param_shardings(defs, mesh)
     params_sharded = jax.device_put(params, psh)
-    st_sh = OptState(step=NamedSharding(mesh, P()), momentum=psh)
+    ts_sh = TrainState(params=psh,
+                       opt_state=OptState(step=NamedSharding(mesh, P()),
+                                          momentum=psh))
     step_dist = jax.jit(make_train_step(cfg, rt, opt, n_micro=2),
-                        in_shardings=(psh, st_sh,
+                        in_shardings=(ts_sh,
                                       {k: NamedSharding(mesh, batch_spec(mesh, v.ndim))
                                        for k, v in batch.items()}),
-                        out_shardings=(psh, st_sh, None))
-    p_dist, st_dist, stats_dist = step_dist(params_sharded, opt.init(params_sharded), batch)
+                        out_shardings=(ts_sh, None))
+    ts_dist, stats_dist = step_dist(opt.init_state(params_sharded), batch)
 
     l1, l2 = float(stats_ref["loss"]), float(stats_dist["loss"])
     g1, g2 = float(stats_ref["grad_norm"]), float(stats_dist["grad_norm"])
@@ -70,7 +71,8 @@ SCRIPT = textwrap.dedent("""
     assert abs(l1 - l2) < 1e-4 * max(1, abs(l1)), (l1, l2)
     assert abs(g1 - g2) < 1e-3 * max(1, abs(g1)), (g1, g2)
     # parameters agree after one update
-    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_dist)):
+    for a, b in zip(jax.tree.leaves(ts_ref.params_view),
+                    jax.tree.leaves(ts_dist.params_view)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(jax.device_get(b)),
                                    atol=5e-5)
     print("MULTIDEVICE-OK")

@@ -22,11 +22,13 @@ from repro.training import make_train_step
 def _train(opt, cfg, steps, batch=8, seq=32, seed=0):
     params = materialize(model_defs(cfg), jax.random.PRNGKey(seed))
     data = SyntheticLM(cfg.vocab_size, seq, batch, branching=4)
-    state = opt.init(params)
-    step = jax.jit(make_train_step(cfg, CPU_RUNTIME, opt, n_micro=2))
+    state = opt.init_state(params)
+    # donated, like the production launcher
+    step = jax.jit(make_train_step(cfg, CPU_RUNTIME, opt, n_micro=2),
+                   donate_argnums=(0,))
     losses = []
     for t in range(steps):
-        params, state, stats = step(params, state, data.batch_at(t))
+        state, stats = step(state, data.batch_at(t))
         losses.append(float(stats["loss"]))
     return losses
 
@@ -74,7 +76,7 @@ def test_stats_keys_consistent_across_n_micro(tiny_cfg):
         opt = sngm(poly_power(0.1, 10, 1.1), beta=0.9)
         step = jax.jit(make_train_step(tiny_cfg, CPU_RUNTIME, opt,
                                        n_micro=n_micro))
-        _, _, stats = step(params, opt.init(params), batch)
+        _, stats = step(opt.init_state(params), batch)
         stats_by_n[n_micro] = stats
     assert set(stats_by_n[1]) == set(stats_by_n[4])
     assert {"ce_loss", "aux_loss", "ntok"} <= set(stats_by_n[1])
@@ -94,8 +96,8 @@ def test_grad_accumulation_equals_full_batch(tiny_cfg):
         opt = sngm(poly_power(0.1, 10, 1.1), beta=0.9)
         step = jax.jit(make_train_step(tiny_cfg, CPU_RUNTIME, opt,
                                        n_micro=n_micro))
-        p2, _, stats = step(params, opt.init(params), batch)
-        outs.append((p2, float(stats["grad_norm"])))
+        ts, stats = step(opt.init_state(params), batch)
+        outs.append((ts.params_view, float(stats["grad_norm"])))
     (pa, ga), (pb, gb) = outs
     assert abs(ga - gb) < 1e-3 * max(ga, 1.0)
     for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
@@ -246,3 +248,77 @@ def test_optimizer_spec_round_trips_through_resume(tmp_path):
     assert len(resumed) == 6
     np.testing.assert_array_equal(np.asarray(resumed),
                                   np.asarray(full[6:]))
+
+
+def test_train_state_save_resume_continuity(tmp_path, tiny_cfg):
+    """Save→resume THROUGH the donated TrainState, resident path: the
+    launcher persists {params_view, to_pytree(opt_state)} from the live
+    state; rebuilding a TrainState from the restored forms and continuing
+    (donated) matches an uninterrupted donated run bitwise."""
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+    from repro.core import to_pytree, from_pytree
+    from repro.core.optim import TrainState
+    from repro.core.schedules import poly_power as pp
+
+    def mk_opt():
+        return sngm(pp(0.5, 8, 1.1), beta=0.9, weight_decay=1e-4,
+                    fused="multi_tensor")
+
+    def fresh():
+        return materialize(model_defs(tiny_cfg), jax.random.PRNGKey(0))
+
+    data = SyntheticLM(tiny_cfg.vocab_size, 32, 8, branching=4)
+    opt = mk_opt()
+    step = jax.jit(make_train_step(tiny_cfg, CPU_RUNTIME, opt, n_micro=2),
+                   donate_argnums=(0,))
+
+    # uninterrupted 8-step donated run
+    ts_full = opt.init_state(fresh())
+    for t in range(8):
+        ts_full, _ = step(ts_full, data.batch_at(t))
+
+    # 4 steps, checkpoint from the LIVE TrainState, rebuild, 4 more
+    ts = opt.init_state(fresh())
+    for t in range(4):
+        ts, _ = step(ts, data.batch_at(t))
+    assert ts.params is None          # resident: flats own the params
+    save_checkpoint(str(tmp_path / "ck"),
+                    {"params": ts.params_view,
+                     "opt": to_pytree(ts.opt_state)}, step=4)
+
+    like = {"params": fresh(), "opt": to_pytree(mk_opt().init(fresh()))}
+    restored, t0 = load_checkpoint(str(tmp_path / "ck"), like)
+    assert t0 == 4
+    ts2 = TrainState(params=None,
+                     opt_state=from_pytree(restored["opt"],
+                                           restored["params"]))
+    for t in range(4, 8):
+        ts2, _ = step(ts2, data.batch_at(t))
+
+    for a, b in zip(jax.tree.leaves(ts_full), jax.tree.leaves(ts2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_rejects_torn_checkpoint(tmp_path):
+    """A torn checkpoint directory (no COMMIT marker AND no complete
+    legacy meta/shard pair — what an interrupted legacy-writer save
+    leaves) must be refused by --resume rather than half-loaded; a
+    markerless-but-complete legacy checkpoint still resumes."""
+    import os
+    from repro.launch.train import main as train_main
+
+    args = ["--arch", "gemma-2b", "--reduced", "--batch", "4", "--seq", "16",
+            "--n-micro", "2", "--optimizer", "sngm", "--lr", "0.5",
+            "--total-steps", "8", "--log-every", "100"]
+    train_main(args + ["--steps", "4", "--ckpt", str(tmp_path / "ck")])
+    # markerless but complete == pre-marker legacy save: must resume
+    os.remove(tmp_path / "ck" / "COMMIT")
+    legacy = train_main(args + ["--steps", "8", "--ckpt",
+                                str(tmp_path / "ck"), "--resume"])
+    assert len(legacy) == 4
+    # torn: no marker AND the meta sidecar never landed
+    os.remove(tmp_path / "ck" / "COMMIT")
+    os.remove(tmp_path / "ck" / "meta.json")
+    with pytest.raises(SystemExit, match="COMMIT"):
+        train_main(args + ["--steps", "8", "--ckpt", str(tmp_path / "ck"),
+                           "--resume"])

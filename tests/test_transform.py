@@ -489,19 +489,23 @@ def test_novel_chain_trains_end_to_end():
     state = opt.init(params)
     assert isinstance(state, ChainOptState)
 
+    from repro.core.optim import TrainState
+    ts = TrainState(params=params, opt_state=state)
     with count_pallas_launches() as c:
-        # the interpreter is pure jnp: zero kernel launches
-        step = jax.jit(make_train_step(cfg, CPU_RUNTIME, tx, n_micro=2))
+        # the interpreter is pure jnp: zero kernel launches; donated like
+        # the production launcher (ChainOptState donates fine too)
+        step = jax.jit(make_train_step(cfg, CPU_RUNTIME, tx, n_micro=2),
+                       donate_argnums=(0,))
         data = SyntheticLM(cfg.vocab_size, 16, 4, branching=4)
         losses = []
         for t in range(4):
-            params, state, stats = step(params, state, data.batch_at(t))
+            ts, stats = step(ts, data.batch_at(t))
             losses.append(float(stats["loss"]))
     assert c["launches"] == 0
     assert all(np.isfinite(l) for l in losses), losses
     assert {"grad_norm", "lr", "update_norm", "loss"} <= set(stats)
     assert float(stats["lr"]) == 0.5
-    assert int(state.step) == 4
+    assert int(ts.step) == 4
 
 
 # ---------------------------------------------------------------------------
