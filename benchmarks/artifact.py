@@ -1,0 +1,157 @@
+"""Canonical BENCH artifact format.
+
+Every benchmark converges on ONE schema-versioned envelope, written to
+``BENCH_<name>.json`` at the repo root (or ``--json-dir``), committed
+per change so the perf trajectory is a tracked curve instead of a
+one-off CI artifact:
+
+    {
+      "schema_version": 1,
+      "bench":   "overhead",          # which benchmark produced it
+      "quick":   true,                # CI smoke scale vs full scale
+      "results": {...},               # benchmark-specific payload
+      "env":     {"jax": "...", ...}  # optional, informational only
+    }
+
+``validate_envelope`` is STRICT: unknown top-level fields are rejected
+(an artifact with extra fields means a producer and the gate disagree
+about the schema — fail loudly, don't guess), as are missing required
+fields and unknown schema versions.  ``benchmarks/check_bench.py`` runs
+this validation before evaluating any threshold.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+from typing import Any, Dict, List, Optional
+
+SCHEMA_VERSION = 1
+REQUIRED_FIELDS = ("schema_version", "bench", "quick", "results")
+OPTIONAL_FIELDS = ("env",)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def bench_artifact_path(name: str, json_dir: Optional[str] = None) -> str:
+    """The canonical location: ``<json_dir or repo root>/BENCH_<name>.json``.
+    CI and local runs pass the same ``--json-dir`` (or none) and land on
+    the same paths."""
+    return os.path.join(json_dir or REPO_ROOT, f"BENCH_{name}.json")
+
+
+def environment_info() -> Dict[str, Any]:
+    import jax
+    return {"jax": jax.__version__,
+            "python": platform.python_version(),
+            "platform": jax.default_backend(),
+            "n_devices": jax.device_count()}
+
+
+def make_envelope(name: str, results: Dict[str, Any], *, quick: bool,
+                  env: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    return {"schema_version": SCHEMA_VERSION, "bench": name,
+            "quick": bool(quick), "results": results,
+            "env": env if env is not None else environment_info()}
+
+
+def validate_envelope(obj: Any) -> List[str]:
+    """Return a list of problems (empty = valid).  Strict by design:
+    missing required fields, unknown fields, and unknown schema versions
+    all fail."""
+    problems = []
+    if not isinstance(obj, dict):
+        return [f"artifact must be a JSON object, got {type(obj).__name__}"]
+    for f in REQUIRED_FIELDS:
+        if f not in obj:
+            problems.append(f"missing required field {f!r}")
+    known = set(REQUIRED_FIELDS) | set(OPTIONAL_FIELDS)
+    for f in sorted(set(obj) - known):
+        problems.append(f"unknown field {f!r} (producer/gate schema skew)")
+    sv = obj.get("schema_version")
+    if "schema_version" in obj and sv != SCHEMA_VERSION:
+        problems.append(f"unknown schema_version {sv!r} "
+                        f"(this gate understands {SCHEMA_VERSION})")
+    if "bench" in obj and not isinstance(obj["bench"], str):
+        problems.append(f"field 'bench' must be a string, got "
+                        f"{type(obj['bench']).__name__}")
+    if "quick" in obj and not isinstance(obj["quick"], bool):
+        problems.append(f"field 'quick' must be a bool, got "
+                        f"{type(obj['quick']).__name__}")
+    if "results" in obj and not isinstance(obj["results"], dict):
+        problems.append(f"field 'results' must be an object, got "
+                        f"{type(obj['results']).__name__}")
+    return problems
+
+
+# Per-run record schema for the sweep artifact (BENCH_sweep.json):
+# results = {"record_schema_version": 1, "records": [...], "config": {...}}
+# and every record carries at least these fields.  check_bench.py
+# validates this shape whenever the artifact's bench name is "sweep".
+SWEEP_RECORD_SCHEMA_VERSION = 1
+SWEEP_RECORD_REQUIRED = ("name", "arch", "family", "fused", "batch",
+                         "steps", "grad_computations", "budget_unit",
+                         "final_loss", "wall_time_s", "engine")
+SWEEP_ENGINE_REQUIRED = ("launches_per_step", "packed_bytes_per_step",
+                         "param_bytes_live")
+
+
+def validate_sweep_results(results: Any) -> List[str]:
+    """Problems with a sweep artifact's ``results`` payload (empty =
+    valid): the record-schema version must be known and every record
+    must carry the required fields, including the engine counters."""
+    problems = []
+    if not isinstance(results, dict):
+        return ["sweep results must be an object"]
+    rsv = results.get("record_schema_version")
+    if rsv != SWEEP_RECORD_SCHEMA_VERSION:
+        problems.append(f"unknown record_schema_version {rsv!r} "
+                        f"(expected {SWEEP_RECORD_SCHEMA_VERSION})")
+    records = results.get("records")
+    if not isinstance(records, list) or not records:
+        problems.append("sweep results must carry a non-empty 'records' list")
+        return problems
+    for i, rec in enumerate(records):
+        if not isinstance(rec, dict):
+            problems.append(f"records[{i}] must be an object")
+            continue
+        tag = rec.get("name", f"records[{i}]")
+        for f in SWEEP_RECORD_REQUIRED:
+            if f not in rec:
+                problems.append(f"{tag}: missing record field {f!r}")
+        eng = rec.get("engine")
+        if isinstance(eng, dict):
+            for f in SWEEP_ENGINE_REQUIRED:
+                if f not in eng:
+                    problems.append(f"{tag}: missing engine counter {f!r}")
+        elif "engine" in rec:
+            problems.append(f"{tag}: 'engine' must be an object")
+    return problems
+
+
+def write_bench_artifact(name: str, results: Dict[str, Any], *,
+                         quick: bool = False,
+                         json_dir: Optional[str] = None,
+                         env: Optional[Dict[str, Any]] = None) -> str:
+    path = bench_artifact_path(name, json_dir)
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    envelope = make_envelope(name, results, quick=quick, env=env)
+    problems = validate_envelope(envelope)
+    assert not problems, problems   # producer bug, not user input
+    with open(path, "w") as f:
+        json.dump(envelope, f, indent=1, default=str, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def load_bench_artifact(path: str) -> Dict[str, Any]:
+    """Load + validate; raises ValueError with every problem listed."""
+    with open(path) as f:
+        obj = json.load(f)
+    problems = validate_envelope(obj)
+    if problems:
+        raise ValueError(f"{path}: invalid BENCH artifact: "
+                         + "; ".join(problems))
+    return obj

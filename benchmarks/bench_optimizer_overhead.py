@@ -22,27 +22,30 @@ compiled sngm chain, so the jnp-fallback overhead stays visible.
 
 CLI:  python -m benchmarks.bench_optimizer_overhead [--quick] [--json OUT]
 ``--quick`` shrinks the tree and iteration counts for the CI smoke lane;
-``--json`` writes the result rows as a JSON artifact.
+``--json`` writes the canonical schema-versioned BENCH artifact
+(benchmarks/artifact.py envelope — what ``check_bench.py`` gates on).
+
+The launch/packing/residency counters live in ``repro.tracker.counters``
+(shared with the sweep harness and trainable loops); this benchmark
+composes them into the tracked BENCH_overhead.json trajectory.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-import warnings
-
+from benchmarks.artifact import make_envelope, validate_envelope
 from benchmarks.common import csv_row
-from repro.core import (compile_chain, count_packed_bytes, lars, lamb, msgd,
-                        sngd, sngm, to_pytree)
+from repro.core import compile_chain, lars, lamb, msgd, sngd, sngm, to_pytree
 from repro.core import transform as T
-from repro.core.optim import FlatOptState, TrainState
 from repro.core.schedules import constant
-from repro.kernels import count_pallas_launches
+from repro.tracker.counters import (capture_donation_warnings,
+                                    launches_per_step, packed_bytes_per_step,
+                                    param_bytes_live)
 
 SHAPES = [(1024, 1024)] * 8 + [(4096, 1024)] * 4 + [(1024,)] * 16
 SHAPES_QUICK = [(256, 256)] * 4 + [(1024, 256)] * 2 + [(256,)] * 10
@@ -62,26 +65,6 @@ def time_call(fn, *args, iters=20):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / iters * 1e6
-
-
-def launches_per_step(opt, grads, state, params):
-    """pallas_call sites traced into one optimizer step = kernel launches
-    per step execution."""
-    with count_pallas_launches() as c:
-        # fresh lambda: a cached jit of opt.step would skip tracing (and
-        # therefore skip the trace-time launch recording)
-        jax.jit(lambda g, s, p: opt.step(g, s, p)).lower(grads, state, params)
-    return c["launches"]
-
-
-def packed_bytes_per_step(opt, grads, state, params):
-    """Bytes packed into flat buffers per step execution (trace-time
-    count, same pattern as launches_per_step).  The flat-buffer-resident
-    state (FlatOptState) packs only the gradients; an OptState forces the
-    per-step path that re-packs params+grads+momentum every step."""
-    with count_packed_bytes() as c:
-        jax.jit(lambda g, s, p: opt.step(g, s, p)).lower(grads, state, params)
-    return c["bytes"]
 
 
 def run(quick: bool = False, json_path: str | None = None):
@@ -198,16 +181,6 @@ def run(quick: bool = False, json_path: str | None = None):
     # (in FlatOptState.p_flats; TrainState.params is None).  The legacy
     # (params pytree, FlatOptState) pairing held them twice — that is the
     # number the donation refactor reclaimed.
-    def param_bytes_live(ts):
-        n = 0
-        if ts.params is not None:
-            n += sum(l.size * jnp.dtype(l.dtype).itemsize
-                     for l in jax.tree.leaves(ts.params))
-        if isinstance(ts.opt_state, FlatOptState):
-            n += sum(f.size * jnp.dtype(f.dtype).itemsize
-                     for f in ts.opt_state.p_flats)
-        return n
-
     param_bytes = sum(int(np.prod(s)) * 4 for s in shapes)
     ts_res = opt_mt.init_state(make_tree(0, shapes))
     pb_live = param_bytes_live(ts_res)
@@ -218,13 +191,8 @@ def run(quick: bool = False, json_path: str | None = None):
           f"(raw params {param_bytes}; legacy two-copy {pb_legacy})")
 
     # --- donation: the donated step must consume every donated buffer --
-    with warnings.catch_warnings(record=True) as wlog:
-        warnings.simplefilter("always")
-        step_don = jax.jit(opt_mt.step_state, donate_argnums=(1,))
-        ts_out, _ = step_don(grads, ts_res)
-        jax.block_until_ready(ts_out)
-    donation_warnings = [str(x.message) for x in wlog
-                         if "donat" in str(x.message).lower()]
+    _, donation_warnings = capture_donation_warnings(
+        opt_mt.step_state, grads, ts_res, donate_argnums=(1,))
     for msg in donation_warnings:
         print(f"  DONATION WARNING: {msg}")
     print(f"  donated resident step: {len(donation_warnings)} donation "
@@ -253,11 +221,22 @@ def run(quick: bool = False, json_path: str | None = None):
            "param_bytes_live": {"resident": int(pb_live),
                                 "raw_params": int(param_bytes),
                                 "legacy_two_copies": int(pb_legacy)},
-           "donation_warnings": donation_warnings,
-           "quick": quick}
+           "donation_warnings": donation_warnings}
     if json_path:
+        import json
+        import os
+
+        # canonical schema-versioned envelope — the exact format
+        # check_bench.py validates and the committed BENCH_overhead.json
+        # baseline stores
+        envelope = make_envelope("overhead", out, quick=quick)
+        assert not validate_envelope(envelope)
+        d = os.path.dirname(json_path)
+        if d:
+            os.makedirs(d, exist_ok=True)
         with open(json_path, "w") as f:
-            json.dump(out, f, indent=1)
+            json.dump(envelope, f, indent=1, sort_keys=True)
+            f.write("\n")
         print(f"  wrote {json_path}")
     return out
 

@@ -1,0 +1,260 @@
+"""Paper-scale experiment sweep: the Fig-1 batch-size ladder and the
+Table-2/3 proxies, end-to-end on the fused resident TrainState path.
+
+SNGM vs MSGD vs LAMB at MATCHED gradient computations (the paper's
+comparison axis, after Keskar et al. 1609.04836 and Hoffer et al.
+1705.08741: batch size vs test quality at fixed compute):
+
+  * convnet ladder (Fig-1 / Table-2 proxy, non-transformer — the
+    optimizer stack is architecture-agnostic): every batch size sees the
+    same `epochs * n_train` example budget, so bigger batches take
+    proportionally fewer steps;
+  * LM ladder (Table-3 proxy, smoke transformer on the learnable bigram
+    language): every batch size sees the same token budget;
+  * an optional Hoffer-style "train longer" baseline: MSGD at the
+    largest batch with a doubled epoch budget (full mode only).
+
+Every run trains through ``benchmarks.common`` (donated TrainState,
+``fused="multi_tensor"`` — flat buffers as the single parameter owner),
+streams step metrics through ``repro.tracker``, and emits one
+schema-versioned record stamped with the engine counters
+(launches/packed-bytes/param-residency) that the CI gate tracks.  The
+whole sweep lands in canonical ``BENCH_sweep.json`` via
+``benchmarks.artifact``.
+
+CLI:  python -m benchmarks.bench_sweep [--quick] [--json-dir DIR]
+                                       [--jsonl-dir DIR]
+``--quick`` is the CI smoke scale; ``--jsonl-dir`` additionally writes
+one per-step JSONL metrics file per run.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+from typing import Dict, List, Optional, Sequence
+
+from benchmarks.artifact import (SWEEP_RECORD_SCHEMA_VERSION,
+                                 validate_sweep_results,
+                                 write_bench_artifact)
+from benchmarks.common import train_convnet, train_lm
+from repro.core import lamb, msgd, sngm
+from repro.core.schedules import poly_power
+
+FAMILIES = ("sngm", "msgd", "lamb")
+
+# base lrs at the smallest ladder rung; larger batches sqrt-scale
+_BASE_LR = {"sngm": 0.2, "msgd": 0.05, "lamb": 0.02}
+_BASE_LR_LM = {"sngm": 0.5, "msgd": 0.15, "lamb": 0.02}
+
+
+def make_opt(family: str, steps: int, batch: int, base_batch: int,
+             base_lr: Optional[Dict[str, float]] = None,
+             fused: Optional[str] = "multi_tensor"):
+    """One optimizer family at one ladder rung, on the fused engine.
+    lr sqrt-scales with the batch (the common large-batch heuristic);
+    schedule/momentum/decay mirror the Table-2 recipe."""
+    lr = (base_lr or _BASE_LR)[family] * (batch / base_batch) ** 0.5
+    sched = poly_power(lr, steps, 1.1)
+    if family == "sngm":
+        return sngm(sched, beta=0.9, weight_decay=1e-4, fused=fused)
+    if family == "msgd":
+        return msgd(sched, beta=0.9, weight_decay=1e-4, fused=fused)
+    if family == "lamb":
+        return lamb(sched, weight_decay=1e-4, fused=fused)
+    raise ValueError(f"unknown family {family!r}")
+
+
+def _engine_stamp(opt, params) -> Dict[str, int]:
+    from repro.tracker.counters import engine_counters
+    return engine_counters(opt, params)
+
+
+def _run_tracker(jsonl_dir: Optional[str], name: str):
+    if not jsonl_dir:
+        return None
+    from repro.tracker import JsonlTracker
+    return JsonlTracker(os.path.join(jsonl_dir, f"{name}.jsonl"))
+
+
+def convnet_ladder(batches: Sequence[int], epochs: int, n_train: int,
+                   n_test: int, families: Sequence[str] = FAMILIES,
+                   train_longer: bool = False,
+                   jsonl_dir: Optional[str] = None) -> List[dict]:
+    """Fig-1/Table-2 proxy: every rung sees epochs*n_train examples."""
+    from repro.data.synthetic import synthetic_images
+    from repro.models.convnet import init_convnet
+
+    x, y = synthetic_images(n_train, seed=0)
+    xt, yt = synthetic_images(n_test, seed=99)
+    base_batch = min(batches)
+    records = []
+
+    jobs = [(b, epochs, "") for b in batches]
+    if train_longer:
+        # Hoffer et al.: "train longer, generalize better" — the largest
+        # batch again, with twice the example budget
+        jobs.append((max(batches), 2 * epochs, "_longer"))
+
+    stamps: Dict[str, Dict[str, int]] = {}
+    for family in families:
+        for batch, eps, suffix in jobs:
+            steps = max(1, eps * n_train // batch)
+            opt = make_opt(family, steps, batch, base_batch)
+            if family not in stamps:
+                stamps[family] = _engine_stamp(opt, init_convnet(0))
+            name = f"convnet_{family}_b{batch}{suffix}"
+            r = train_convnet(opt, x, y, xt, yt, batch, steps,
+                              tracker=_run_tracker(jsonl_dir, name))
+            records.append({
+                "name": name, "arch": "convnet", "family": family,
+                "fused": "multi_tensor", "batch": batch, "steps": steps,
+                "grad_computations": steps * batch,
+                "budget_unit": "examples",
+                "final_loss": r["final_loss"], "test_acc": r["test_acc"],
+                "diverged": r["diverged"],
+                "wall_time_s": r["wall_time_s"],
+                "throughput": r["examples_per_s"],
+                "engine": stamps[family],
+            })
+            print(f"  {name:28s} steps={steps:4d}: "
+                  f"loss={r['final_loss']:.4f} acc={r['test_acc']:.4f} "
+                  f"launches/step={stamps[family]['launches_per_step']}")
+    return records
+
+
+def lm_ladder(batches: Sequence[int], seq: int, tokens_budget: int,
+              families: Sequence[str] = FAMILIES,
+              jsonl_dir: Optional[str] = None) -> List[dict]:
+    """Table-3 proxy: every rung sees the same token budget (equal C)."""
+    import jax
+
+    from benchmarks.bench_table3_lm_proxy import proxy_config
+    from repro.models import model_defs
+    from repro.models.param import materialize
+
+    cfg = proxy_config()
+    base_batch = min(batches)
+    records = []
+    stamps: Dict[str, Dict[str, int]] = {}
+    for family in families:
+        for batch in batches:
+            steps = max(1, tokens_budget // (batch * seq))
+            opt = make_opt(family, steps, batch, base_batch,
+                           base_lr=_BASE_LR_LM)
+            if family not in stamps:
+                params = materialize(model_defs(cfg), jax.random.PRNGKey(0))
+                stamps[family] = _engine_stamp(opt, params)
+                del params
+            name = f"lm_{family}_b{batch}"
+            r = train_lm(opt, cfg, batch, seq, steps,
+                         n_micro=max(1, batch // 16),
+                         tracker=_run_tracker(jsonl_dir, name))
+            records.append({
+                "name": name, "arch": "transformer", "family": family,
+                "fused": "multi_tensor", "batch": batch, "steps": steps,
+                "grad_computations": steps * batch * seq,
+                "budget_unit": "tokens",
+                "final_loss": r["final_loss"],
+                "optimal_loss": r["optimal_loss"],
+                "wall_time_s": r["wall_time_s"],
+                "throughput": r["tokens_per_s"],
+                "engine": stamps[family],
+            })
+            print(f"  {name:28s} steps={steps:4d}: "
+                  f"loss={r['final_loss']:.4f} "
+                  f"(chain entropy {r['optimal_loss']:.3f}) "
+                  f"launches/step={stamps[family]['launches_per_step']}")
+    return records
+
+
+def run(quick: bool = False, json_path: str | None = None,
+        json_dir: Optional[str] = None, jsonl_dir: Optional[str] = None,
+        convnet_batches: Optional[Sequence[int]] = None,
+        convnet_epochs: Optional[int] = None,
+        convnet_n_train: Optional[int] = None,
+        lm_batches: Optional[Sequence[int]] = None,
+        lm_seq: Optional[int] = None,
+        lm_tokens_budget: Optional[int] = None,
+        families: Sequence[str] = FAMILIES,
+        write_artifact: bool = True) -> dict:
+    """Run the ladder(s) and write canonical BENCH_sweep.json.  The
+    explicit knobs exist for the fast-lane pytest smoke, which runs a
+    micro ladder and asserts the record shape; ``--quick`` is the CI
+    bench-lane scale; defaults are the nightly full sweep."""
+    del json_path  # benchmarks.run passes it to every bench; unused here
+    if quick:
+        cb = convnet_batches or (32, 128)
+        ce, cn = convnet_epochs or 2, convnet_n_train or 512
+        lb = lm_batches or (8, 32)
+        ls = lm_seq or 32
+        ltb = lm_tokens_budget or 8 * 32 * 24
+        train_longer = False
+    else:
+        cb = convnet_batches or (64, 256, 1024)
+        ce, cn = convnet_epochs or 8, convnet_n_train or 4096
+        lb = lm_batches or (16, 64, 256)
+        ls = lm_seq or 64
+        ltb = lm_tokens_budget or 256 * 64 * 8
+        train_longer = True
+
+    records: List[dict] = []
+    if cb:
+        print(f"[sweep] convnet ladder B={list(cb)} x {list(families)} "
+              f"({ce} epochs x {cn} examples each)")
+        records += convnet_ladder(cb, ce, cn, max(cn // 4, 64),
+                                  families=families,
+                                  train_longer=train_longer,
+                                  jsonl_dir=jsonl_dir)
+    if lb:
+        print(f"[sweep] LM ladder B={list(lb)} x {list(families)} "
+              f"({ltb} tokens each, seq={ls})")
+        records += lm_ladder(lb, ls, ltb, families=families,
+                             jsonl_dir=jsonl_dir)
+
+    # the Fig-1 readout: per family, quality at the smallest vs largest
+    # rung of each ladder (matched compute — the generalization gap)
+    gaps = {}
+    for arch, key in (("convnet", "test_acc"), ("transformer", "final_loss")):
+        for family in families:
+            rung = [r for r in records
+                    if r["arch"] == arch and r["family"] == family
+                    and not r["name"].endswith("_longer")]
+            if len(rung) >= 2:
+                lo = min(rung, key=lambda r: r["batch"])
+                hi = max(rung, key=lambda r: r["batch"])
+                gaps[f"{arch}_{family}"] = {
+                    "metric": key, "small_batch": lo[key],
+                    "large_batch": hi[key],
+                    "gap": hi[key] - lo[key]}
+    for k, g in sorted(gaps.items()):
+        print(f"  gap {k:24s} {g['metric']}: {g['small_batch']:.4f} -> "
+              f"{g['large_batch']:.4f} ({g['gap']:+.4f})")
+
+    results = {"record_schema_version": SWEEP_RECORD_SCHEMA_VERSION,
+               "records": records, "gaps": gaps,
+               "config": {"convnet_batches": list(cb),
+                          "convnet_epochs": ce, "convnet_n_train": cn,
+                          "lm_batches": list(lb), "lm_seq": ls,
+                          "lm_tokens_budget": ltb,
+                          "families": list(families),
+                          "train_longer": train_longer}}
+    problems = validate_sweep_results(results)
+    assert not problems, problems   # producer-side schema self-check
+    if write_artifact:
+        path = write_bench_artifact("sweep", results, quick=quick,
+                                    json_dir=json_dir)
+        print(f"[sweep] wrote {path}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale (small ladders, few steps)")
+    ap.add_argument("--json-dir", default=None,
+                    help="directory for BENCH_sweep.json (default: repo root)")
+    ap.add_argument("--jsonl-dir", default=None,
+                    help="also write one per-step JSONL metrics file per "
+                         "run into this directory")
+    args = ap.parse_args()
+    run(quick=args.quick, json_dir=args.json_dir, jsonl_dir=args.jsonl_dir)

@@ -1,47 +1,33 @@
 """Table 3 reproduction (ImageNet -> LM proxy at CPU scale): a small
 decoder-only transformer on a learnable synthetic bigram language;
 MSGD small-batch vs SNGM large-batch final loss after the same number of
-gradient computations (equal C, the paper's comparison axis)."""
+gradient computations (equal C, the paper's comparison axis).
+
+The training loop is ``benchmarks.common.train_lm`` — the donated
+TrainState path shared with the sweep harness — so per-step metrics
+stream through ``repro.tracker`` like every other run.
+"""
 from __future__ import annotations
 
 import dataclasses
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
+from benchmarks.common import train_lm
 from repro.configs import ARCHS, smoke_variant
 from repro.core import msgd, sngm
 from repro.core.schedules import poly_power
-from repro.data.synthetic import SyntheticLM
-from repro.models import CPU_RUNTIME, model_defs
-from repro.models.param import materialize
-from repro.training import make_train_step
 
 SEQ = 64
 TOKENS_BUDGET = 64 * 64 * 160     # equal-C comparison
 
 
-def run_one(opt_name, opt, batch):
-    cfg = dataclasses.replace(smoke_variant(ARCHS["deepseek-7b"]),
-                              vocab_size=256, compute_dtype="float32")
-    params = materialize(model_defs(cfg), jax.random.PRNGKey(0))
-    data = SyntheticLM(cfg.vocab_size, SEQ, batch, branching=4)
-    state = opt.init_state(params)
-    del params
-    n_micro = max(1, batch // 16)
-    step = jax.jit(make_train_step(cfg, CPU_RUNTIME, opt, n_micro=n_micro),
-                   donate_argnums=(0,))
-    steps = TOKENS_BUDGET // (batch * SEQ)
-    losses = []
-    for t in range(steps):
-        state, stats = step(state, data.batch_at(t))
-        losses.append(float(stats["loss"]))
-    return losses, data.optimal_loss()
+def proxy_config():
+    return dataclasses.replace(smoke_variant(ARCHS["deepseek-7b"]),
+                               vocab_size=256, compute_dtype="float32")
 
 
 def run():
     out = {}
+    cfg = proxy_config()
     steps16 = TOKENS_BUDGET // (16 * SEQ)
     steps256 = TOKENS_BUDGET // (256 * SEQ)
     jobs = [
@@ -54,7 +40,10 @@ def run():
     ]
     h_opt = None
     for name, opt, batch in jobs:
-        losses, h_opt = run_one(name, opt, batch)
+        steps = TOKENS_BUDGET // (batch * SEQ)
+        r = train_lm(opt, cfg, batch, SEQ, steps,
+                     n_micro=max(1, batch // 16))
+        losses, h_opt = r["losses"], r["optimal_loss"]
         out[name] = {"final_loss": losses[-1], "batch": batch,
                      "n_steps": len(losses)}
         print(f"  {name:10s} B={batch:4d} steps={len(losses):3d}: "

@@ -1,0 +1,232 @@
+"""CI gate for BENCH artifacts: declarative thresholds + trend compare.
+
+Replaces the inline ``python - <<EOF`` heredoc asserts that used to live
+in ``.github/workflows/ci.yml``: one tool validates the schema-versioned
+artifact envelope, evaluates a committed declarative thresholds file
+(``benchmarks/bench_thresholds.json``), prints a readable pass/fail
+table, and exits nonzero on any failure — so the guarantees (exact
+launch counts, resident packing ratio, 1x param residency, zero
+donation warnings) live in reviewable JSON instead of workflow YAML.
+
+    python -m benchmarks.check_bench BENCH_overhead.json
+    python -m benchmarks.check_bench fresh.json --trend --baseline BENCH_overhead.json
+
+Threshold ops (each keyed by a dotted path into the artifact's
+``results`` payload):
+
+    {"op": "eq",        "value": 2}              value == 2
+    {"op": "eq_key",    "key": "a.b"}            value == results[a.b]
+    {"op": "gt_key",    "key": "a.b"}            value >  results[a.b]
+    {"op": "ratio_eq",  "key": "a.b", "ratio": 2}  value == 2 * results[a.b]
+    {"op": "max_ratio", "key": "a.b", "ratio": .5} value <  .5 * results[a.b]
+    {"op": "empty"}                              value is an empty list
+
+A bench section may also carry ``record_checks`` (applied to every
+record of a sweep artifact) and ``trend`` (dotted keys compared against
+a committed baseline artifact in ``--trend`` mode: an increase beyond
+``tol`` fails — lower is always better for the tracked counters).
+
+No jax import: the gate runs in milliseconds anywhere.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+from benchmarks.artifact import (load_bench_artifact, validate_sweep_results)
+
+DEFAULT_THRESHOLDS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                  "bench_thresholds.json")
+THRESHOLDS_SCHEMA_VERSION = 1
+
+
+class CheckError(ValueError):
+    pass
+
+
+def dotted_get(obj: Any, path: str) -> Any:
+    cur = obj
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            raise CheckError(f"results key {path!r} missing "
+                             f"(failed at {part!r})")
+        cur = cur[part]
+    return cur
+
+
+def _describe(spec: Dict[str, Any]) -> str:
+    op = spec.get("op")
+    if op == "eq":
+        return f"== {spec['value']}"
+    if op == "eq_key":
+        return f"== [{spec['key']}]"
+    if op == "gt_key":
+        return f"> [{spec['key']}]"
+    if op == "ratio_eq":
+        return f"== {spec['ratio']} * [{spec['key']}]"
+    if op == "max_ratio":
+        return f"< {spec['ratio']} * [{spec['key']}]"
+    if op == "empty":
+        return "is empty"
+    return f"?{op}?"
+
+
+def eval_check(results: Dict[str, Any], path: str,
+               spec: Dict[str, Any]) -> Tuple[Any, bool]:
+    """(observed value, passed).  Unknown ops fail loudly — a typo in the
+    thresholds file must not silently pass."""
+    value = dotted_get(results, path)
+    op = spec.get("op")
+    if op == "eq":
+        return value, value == spec["value"]
+    if op == "eq_key":
+        return value, value == dotted_get(results, spec["key"])
+    if op == "gt_key":
+        return value, value > dotted_get(results, spec["key"])
+    if op == "ratio_eq":
+        return value, value == spec["ratio"] * dotted_get(results, spec["key"])
+    if op == "max_ratio":
+        return value, value < spec["ratio"] * dotted_get(results, spec["key"])
+    if op == "empty":
+        return value, isinstance(value, list) and not value
+    raise CheckError(f"unknown threshold op {op!r} for {path!r}")
+
+
+def _table(rows: List[Tuple[str, str, str, bool]], title: str) -> bool:
+    """Print rows as CHECK | VALUE | CONSTRAINT | status; return overall
+    pass."""
+    if not rows:
+        return True
+    w_name = max(len(r[0]) for r in rows)
+    w_val = max(len(r[1]) for r in rows)
+    w_con = max(len(r[2]) for r in rows)
+    print(f"[check_bench] {title}")
+    ok_all = True
+    for name, val, con, ok in rows:
+        status = "PASS" if ok else "FAIL"
+        ok_all &= ok
+        print(f"  {name:<{w_name}}  {val:>{w_val}}  {con:<{w_con}}  {status}")
+    print(f"[check_bench] {title}: "
+          f"{'all ' + str(len(rows)) + ' checks passed' if ok_all else 'FAILED'}")
+    return ok_all
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    if isinstance(v, list):
+        return f"[{len(v)} items]"
+    return str(v)
+
+
+def run_checks(artifact: Dict[str, Any],
+               thresholds: Dict[str, Any]) -> bool:
+    """Evaluate the thresholds section matching the artifact's bench
+    name.  Returns overall pass; prints the table either way."""
+    bench = artifact["bench"]
+    results = artifact["results"]
+    section = thresholds.get(bench)
+    if section is None:
+        raise CheckError(f"thresholds file has no section for bench "
+                         f"{bench!r} (sections: "
+                         f"{sorted(k for k in thresholds if k != 'schema_version')})")
+    rows = []
+    for path, spec in section.get("checks", {}).items():
+        try:
+            value, ok = eval_check(results, path, spec)
+            rows.append((path, _fmt(value), _describe(spec), ok))
+        except CheckError as e:
+            rows.append((path, "<missing>", str(e), False))
+    # sweep artifacts: structural record-schema validation + per-record
+    # checks (every run must satisfy them — e.g. O(1) launches)
+    if bench == "sweep":
+        problems = validate_sweep_results(results)
+        rows.append(("record_schema",
+                     f"{len(results.get('records', []))} records",
+                     "sweep record schema "
+                     + ("valid" if not problems else "; ".join(problems)),
+                     not problems))
+        if not problems:
+            for path, spec in section.get("record_checks", {}).items():
+                for rec in results["records"]:
+                    try:
+                        value, ok = eval_check(rec, path, spec)
+                    except CheckError as e:
+                        value, ok = f"<{e}>", False
+                    rows.append((f"{rec['name']}.{path}", _fmt(value),
+                                 _describe(spec), ok))
+    return _table(rows, f"{bench} thresholds")
+
+
+def run_trend(fresh: Dict[str, Any], baseline: Dict[str, Any],
+              thresholds: Dict[str, Any]) -> bool:
+    """Compare a fresh artifact against the committed baseline on the
+    section's ``trend`` keys: fresh > baseline * (1 + tol) is a
+    regression.  Quick and full artifacts are not comparable (different
+    tree sizes) — that mismatch fails before any number is read."""
+    bench = fresh["bench"]
+    if baseline["bench"] != bench:
+        raise CheckError(f"trend compare across benches: fresh "
+                         f"{bench!r} vs baseline {baseline['bench']!r}")
+    if baseline["quick"] != fresh["quick"]:
+        raise CheckError(
+            f"trend compare across scales: fresh quick={fresh['quick']} vs "
+            f"baseline quick={baseline['quick']} (byte counters depend on "
+            f"the tree size; regenerate the baseline at the same scale)")
+    section = thresholds.get(bench, {})
+    rows = []
+    for path, spec in section.get("trend", {}).items():
+        tol = spec.get("tol", 0.0)
+        try:
+            f_v = dotted_get(fresh["results"], path)
+            b_v = dotted_get(baseline["results"], path)
+            ok = f_v <= b_v * (1.0 + tol)
+            rows.append((path, f"{_fmt(f_v)} vs {_fmt(b_v)}",
+                         f"<= baseline * {1.0 + tol:g}", ok))
+        except CheckError as e:
+            rows.append((path, "<missing>", str(e), False))
+    return _table(rows, f"{bench} trend vs baseline")
+
+
+def load_thresholds(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        obj = json.load(f)
+    sv = obj.get("schema_version")
+    if sv != THRESHOLDS_SCHEMA_VERSION:
+        raise CheckError(f"{path}: unknown thresholds schema_version {sv!r}")
+    return obj
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifact", help="BENCH_<name>.json to validate/gate")
+    ap.add_argument("--thresholds", default=DEFAULT_THRESHOLDS,
+                    help="declarative thresholds file (committed)")
+    ap.add_argument("--trend", action="store_true",
+                    help="compare against --baseline instead of absolute "
+                         "thresholds")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline artifact for --trend")
+    args = ap.parse_args(argv)
+
+    try:
+        artifact = load_bench_artifact(args.artifact)
+        thresholds = load_thresholds(args.thresholds)
+        if args.trend:
+            if not args.baseline:
+                raise CheckError("--trend requires --baseline")
+            baseline = load_bench_artifact(args.baseline)
+            ok = run_trend(artifact, baseline, thresholds)
+        else:
+            ok = run_checks(artifact, thresholds)
+    except (CheckError, ValueError, OSError) as e:
+        print(f"[check_bench] ERROR: {e}")
+        return 2
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,9 +1,22 @@
-"""Shared benchmark utilities: image-classification and LM training loops
-with gradient accumulation (the paper's large-batch mechanism, §5)."""
+"""Shared benchmark loops: image-classification (Fig-1/Table-2 convnet)
+and LM (Table-3 transformer proxy) training with gradient accumulation
+(the paper's large-batch mechanism, §5).
+
+Both loops run on the unified ``TrainState`` path (``opt.init_state`` /
+``opt.step_state``, jitted with donation), so a fused resident optimizer
+(``fused="multi_tensor"``) keeps its flat buffers as the single
+parameter owner exactly as in production training — the sweep harness
+(bench_sweep.py) measures the paper's science on the same execution path
+the launcher ships.
+
+Every loop logs through ``repro.tracker``: pass ``tracker=`` to stream
+per-step records (loss, grad_norm, lr, wall-clock, throughput) to any
+backend; an internal MemoryTracker always collects the curve that the
+returned result dict summarizes.
+"""
 from __future__ import annotations
 
-import time
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -11,27 +24,42 @@ import numpy as np
 
 from repro.core.optim import Optimizer
 from repro.models.convnet import accuracy, ce_loss, init_convnet
+from repro.tracker import CompositeTracker, MemoryTracker, NullTracker
+from repro.tracker.callbacks import CallbackRunner, StepTimer
+
+
+def _tracked(tracker, callbacks, log_every):
+    """(runner, mem): a CallbackRunner fanning out to the caller's
+    tracker plus an internal MemoryTracker that records the full curve."""
+    mem = MemoryTracker()
+    fan = CompositeTracker([mem, tracker if tracker is not None
+                            else NullTracker()])
+    return CallbackRunner(fan, callbacks, flush_every=max(1, log_every)), mem
 
 
 def train_convnet(opt: Optimizer, x, y, xt, yt, batch: int, steps: int,
-                  accum_micro: int = 128, seed: int = 0, log_every: int = 0):
+                  accum_micro: int = 128, seed: int = 0, log_every: int = 0,
+                  tracker=None):
     """Train the Fig-1 convnet with global batch `batch`; batches larger
-    than `accum_micro` use gradient accumulation exactly as the paper."""
-    params = init_convnet(seed)
-    state = opt.init(params)
+    than `accum_micro` use gradient accumulation exactly as the paper.
+    The optimizer step runs donated over the unified TrainState, so a
+    resident fused optimizer holds ~1x param bytes throughout."""
+    ts = opt.init_state(init_convnet(seed))
     n = x.shape[0]
     micro = min(batch, accum_micro)
     n_micro = batch // micro
     grad_fn = jax.jit(jax.value_and_grad(ce_loss))
+    opt_step = jax.jit(opt.step_state, donate_argnums=(1,))
 
-    @jax.jit
-    def opt_step(grads, state, params):
-        return opt.step(grads, state, params)
-
+    runner, mem = _tracked(tracker, [StepTimer(examples_per_step=batch)],
+                           log_every or 50)
     rng = np.random.RandomState(seed)
-    losses = []
+    last_loss = np.inf
     for t in range(steps):
         idx = rng.randint(0, n, size=(batch,))
+        # read-only view of the (possibly resident) parameters for the
+        # grad passes; the update below consumes the donated state
+        params = ts.params_view
         g_sum = None
         l_sum = 0.0
         for m in range(n_micro):
@@ -40,16 +68,54 @@ def train_convnet(opt: Optimizer, x, y, xt, yt, batch: int, steps: int,
             l_sum += float(l)
             g_sum = g if g_sum is None else jax.tree.map(jnp.add, g_sum, g)
         grads = jax.tree.map(lambda a: a / n_micro, g_sum)
-        params, state, stats = opt_step(grads, state, params)
-        losses.append(l_sum / n_micro)
+        ts, stats = opt_step(grads, ts)
+        last_loss = l_sum / n_micro
+        runner.push(t, {"loss": last_loss, **stats})
         if log_every and (t + 1) % log_every == 0:
-            print(f"    step {t+1}: loss={losses[-1]:.4f} "
+            print(f"    step {t+1}: loss={last_loss:.4f} "
                   f"gnorm={float(stats['grad_norm']):.3f}")
-        if not np.isfinite(losses[-1]):
+        if not np.isfinite(last_loss):
             break
-    acc = float(accuracy(params, xt, yt)) if np.isfinite(losses[-1]) else 0.0
-    return {"final_loss": losses[-1], "test_acc": acc, "losses": losses,
-            "diverged": not np.isfinite(losses[-1])}
+    diverged = not np.isfinite(last_loss)
+    acc = 0.0 if diverged else float(accuracy(ts.params_view, xt, yt))
+    runner.close({"final_loss": last_loss, "test_acc": acc,
+                  "diverged": diverged})
+    return {"final_loss": last_loss, "test_acc": acc,
+            "losses": mem.series("loss"), "diverged": diverged,
+            "wall_time_s": mem.summary.get("wall_time_s", 0.0),
+            "examples_per_s": mem.summary.get("examples_per_s", 0.0)}
+
+
+def train_lm(opt: Optimizer, cfg, batch: int, seq: int, steps: int,
+             n_micro: int = 1, seed: int = 0, tracker=None,
+             log_every: int = 0, runtime=None):
+    """Train a (smoke-scale) LM config on the learnable synthetic bigram
+    language for `steps` steps of global batch `batch` — the Table-3
+    equal-C loop, on the donated TrainState path (``make_train_step``,
+    ``donate_argnums=(0,)``), shared by bench_table3 and bench_sweep."""
+    from repro.data.synthetic import SyntheticLM
+    from repro.models import CPU_RUNTIME, model_defs
+    from repro.models.param import materialize
+    from repro.training import make_train_step, run_steps
+
+    params = materialize(model_defs(cfg), jax.random.PRNGKey(seed))
+    data = SyntheticLM(cfg.vocab_size, seq, batch, branching=4)
+    state = opt.init_state(params)
+    del params
+    step = jax.jit(make_train_step(cfg, runtime or CPU_RUNTIME, opt,
+                                   n_micro=n_micro),
+                   donate_argnums=(0,))
+    mem = MemoryTracker()
+    fan = CompositeTracker([mem, tracker if tracker is not None
+                            else NullTracker()])
+    run_steps(step, state, data.batch_at, steps, tracker=fan,
+              log_every=log_every or 50,
+              callbacks=[StepTimer(tokens_per_step=batch * seq)])
+    losses = mem.series("loss")
+    return {"losses": losses, "final_loss": losses[-1],
+            "optimal_loss": float(data.optimal_loss()),
+            "wall_time_s": mem.summary.get("wall_time_s", 0.0),
+            "tokens_per_s": mem.summary.get("tokens_per_s", 0.0)}
 
 
 def csv_row(name: str, us_per_call: float, derived: str = "") -> str:

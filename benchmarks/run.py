@@ -5,15 +5,20 @@
   table2      Table 2: CIFAR-proxy — MSGD/LARS/SNGM large-batch accuracy
   table3      Table 3: LM-proxy — SNGM@large-B vs MSGD@small-B at equal C
   overhead    optimizer-update us/call + fused-kernel HBM model
+  sweep       Fig-1/Table-2/3 ladder, SNGM vs MSGD vs LAMB, fused path
   roofline    render §Roofline table from dry-run artifacts (if present)
 
-``python -m benchmarks.run [names...]`` — default: the fast set.
-Results are appended to results/bench/<name>.json.
+``python -m benchmarks.run [names...] [--quick] [--json-dir DIR]``
+(default: the fast set).  Every benchmark's results are written in the
+canonical schema-versioned envelope to ``<json-dir>/BENCH_<name>.json``
+(``benchmarks/artifact.py``); default json-dir is the repo root, so CI
+and local runs land on the same tracked paths.  Exit status is nonzero
+when any bench fails.
 """
 from __future__ import annotations
 
-import json
-import os
+import argparse
+import inspect
 import sys
 import time
 
@@ -26,6 +31,7 @@ def _register():
                             bench_table2_cifar_proxy,
                             bench_table3_lm_proxy,
                             bench_optimizer_overhead,
+                            bench_sweep,
                             roofline_report)
     BENCHES.update({
         "fig1": bench_fig1_large_batch_drop.run,
@@ -33,32 +39,68 @@ def _register():
         "table2": bench_table2_cifar_proxy.run,
         "table3": bench_table3_lm_proxy.run,
         "overhead": bench_optimizer_overhead.run,
+        "sweep": bench_sweep.run,
         "roofline": roofline_report.run,
     })
 
 
-def main() -> None:
+def _call(fn, quick: bool):
+    """Invoke a bench's run() passing only the kwargs it accepts; the
+    harness owns the artifact write, so self-writing benches are told
+    not to (write_artifact=False)."""
+    accepted = inspect.signature(fn).parameters
+    kwargs = {}
+    if "quick" in accepted:
+        kwargs["quick"] = quick
+    if "write_artifact" in accepted:
+        kwargs["write_artifact"] = False
+    return fn(**kwargs)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("names", nargs="*",
+                    help="benches to run (default: the fast set)")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke scale for benches that support it")
+    ap.add_argument("--json-dir", default=None,
+                    help="directory for the canonical BENCH_<name>.json "
+                         "artifacts (default: repo root — the tracked, "
+                         "committed location CI compares against)")
+    args = ap.parse_args(argv)
+
+    from benchmarks.artifact import (bench_artifact_path, environment_info,
+                                     write_bench_artifact)
     _register()
-    names = sys.argv[1:] or ["overhead", "table1", "fig1", "table2", "table3",
-                             "roofline"]
-    os.makedirs("results/bench", exist_ok=True)
+    names = args.names or ["overhead", "table1", "fig1", "table2", "table3",
+                           "roofline"]
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        print(f"[bench] unknown bench(es) {unknown}; "
+              f"available: {sorted(BENCHES)}")
+        return 2
     failures = []
     for name in names:
         print(f"[bench] {name}")
         t0 = time.time()
         try:
-            out = BENCHES[name]()
-            json.dump({"bench": name, "elapsed_s": round(time.time() - t0, 1),
-                       "results": out},
-                      open(f"results/bench/{name}.json", "w"), indent=1,
-                      default=str)
-            print(f"[bench] {name} done in {time.time()-t0:.0f}s\n")
-        except Exception as e:  # report and continue
+            out = _call(BENCHES[name], args.quick)
+            env = {**environment_info(),
+                   "elapsed_s": round(time.time() - t0, 1)}
+            path = write_bench_artifact(name, out if isinstance(out, dict)
+                                        else {"value": out},
+                                        quick=args.quick,
+                                        json_dir=args.json_dir, env=env)
+            print(f"[bench] {name} done in {time.time()-t0:.0f}s "
+                  f"-> {path}\n")
+        except Exception as e:  # report and continue to the next bench
             failures.append(name)
             print(f"[bench] {name} FAILED: {type(e).__name__}: {e}\n")
     if failures:
-        raise SystemExit(f"failed benches: {failures}")
+        print(f"[bench] failed benches: {failures}")
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -31,7 +31,6 @@ import argparse
 import dataclasses
 import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -50,7 +49,10 @@ from repro.models import model_defs
 from repro.models.param import count, materialize
 from repro.models.runtime import Runtime
 from repro.sharding import batch_spec, param_shardings, param_specs
-from repro.training import make_train_step
+from repro.tracker import (CompositeTracker, JsonlTracker, MemoryTracker,
+                           StdoutTracker)
+from repro.tracker.callbacks import StepTimer
+from repro.training import make_train_step, run_steps
 
 
 def _restore(path: str, params, state):
@@ -119,6 +121,10 @@ def main(argv=None):
                          "run is split across save/resume segments so every "
                          "segment builds the same poly_power schedule")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-jsonl", default="",
+                    help="append per-step metrics (loss, grad_norm, lr, "
+                         "wall-clock, tokens/sec) as JSON lines to this "
+                         "path via the repro.tracker JSONL backend")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -235,26 +241,33 @@ def main(argv=None):
                    donate_argnums=(0,))
     data = SyntheticLM(cfg.vocab_size, args.seq, args.batch, branching=4)
 
-    t0 = time.time()
-    losses, pending = [], []
-    for t in range(start, args.steps):
+    def batch_at(t):
         batch = data.batch_at(t)
         if cfg.is_encoder_decoder:
             batch["encoder_embeds"] = jax.random.normal(
                 jax.random.PRNGKey(t), (args.batch, cfg.encoder_len, cfg.d_model))
-        ts, stats = step(ts, batch)
-        # keep the device scalar: float() every step would block and
-        # serialize dispatch.  Drain at log boundaries (which sync anyway)
-        # so retained device buffers stay bounded by --log-every.
-        pending.append(stats["loss"])
-        if t % args.log_every == 0 or t == args.steps - 1:
-            losses.extend(float(l) for l in pending)
-            pending.clear()
-            print(f"  step {t:5d} loss={losses[-1]:.4f} "
-                  f"||g||={float(stats['grad_norm']):.3f} "
-                  f"lr={float(stats['lr']):.4f} "
-                  f"({(t-start+1)/(time.time()-t0):.2f} it/s)")
-    losses.extend(float(l) for l in pending)
+        return batch
+
+    # tracker stack: in-memory (the returned loss curve), rate-limited
+    # stdout progress, and optionally a durable JSONL metrics file.  The
+    # run_steps loop keeps stats as device scalars between log-boundary
+    # drains, so logging never serializes dispatch (retained buffers stay
+    # bounded by --log-every).
+    def fmt(t, m):
+        return (f"  step {t:5d} loss={m['loss']:.4f} "
+                f"||g||={m.get('grad_norm', float('nan')):.3f} "
+                f"lr={m.get('lr', float('nan')):.4f} "
+                f"({m.get('it_per_s', 0.0):.2f} it/s)")
+
+    mem = MemoryTracker()
+    backends = [mem, StdoutTracker(every=args.log_every, fmt=fmt)]
+    if args.metrics_jsonl:
+        backends.append(JsonlTracker(args.metrics_jsonl))
+    tracker = CompositeTracker(backends)
+    ts = run_steps(step, ts, batch_at, args.steps, start=start,
+                   tracker=tracker, log_every=args.log_every,
+                   callbacks=[StepTimer(tokens_per_step=args.batch * args.seq)])
+    losses = mem.series("loss")
     if args.ckpt:
         # checkpoint from the LIVE TrainState.  A FlatOptState holds the
         # params in its flat buffers (bit-equal to the view by the

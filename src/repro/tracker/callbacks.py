@@ -1,0 +1,177 @@
+"""Callback layer over the tracker: buffered per-step logging plus
+derived-metric hooks (wall-clock timers, throughput).
+
+The train step is jitted and its stats are live device scalars; calling
+``float()`` on them every step would block dispatch (the launcher
+documents this).  ``MetricsBuffer`` keeps the device scalars and defers
+the sync to flush boundaries, stamping each step with its host wall-time
+at push time so timing callbacks stay exact even though conversion
+happens later.
+
+``CallbackRunner`` drives the full per-step path:
+
+    push(step, stats)            # no sync — buffers (step, stats, t_wall)
+    ... every ``flush_every`` steps ...
+    flush():  for each buffered step, in order:
+        host_stats = scalarized stats
+        for cb in callbacks:     # registration order, deterministic
+            host_stats.update(cb.on_step(step, host_stats) or {})
+        tracker.log(step, host_stats)
+
+Callbacks run in registration order and each sees the metrics produced
+by the callbacks before it — ordering is part of the contract (tests pin
+it).  ``close()`` flushes, gives every callback its ``on_end`` summary
+hook, logs the merged summary, and finishes the tracker.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.tracker import NullTracker, Tracker, scalarize
+
+__all__ = ["Callback", "StepTimer", "MetricsBuffer", "CallbackRunner"]
+
+
+class Callback:
+    """Per-step hook: ``on_step`` may return extra metrics to merge into
+    the step's record; ``on_end`` may return run-level summary metrics."""
+
+    def on_step(self, step: int,
+                metrics: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+        return None
+
+    def on_end(self) -> Optional[Dict[str, Any]]:
+        return None
+
+
+class StepTimer(Callback):
+    """Wall-clock + throughput: ``step_time_s`` (per-step wall time,
+    measured between pushes so it includes dispatch but not the flush
+    sync), ``it_per_s`` (cumulative), and — when ``tokens_per_step`` or
+    ``examples_per_step`` is known — ``tokens_per_s`` / ``examples_per_s``.
+    The first step is reported from the loop start so compile time shows
+    up in step 0, not as a silent hole in the curve."""
+
+    def __init__(self, tokens_per_step: Optional[int] = None,
+                 examples_per_step: Optional[int] = None) -> None:
+        self.tokens_per_step = tokens_per_step
+        self.examples_per_step = examples_per_step
+        self.t_start: Optional[float] = None
+        self.t_prev: Optional[float] = None
+        self.n_steps = 0
+
+    def on_step(self, step, metrics):
+        t_wall = metrics.get("_t_wall", time.perf_counter())
+        if self.t_start is None:
+            # the runner stamps _t_loop_start on the first record
+            self.t_start = metrics.get("_t_loop_start", t_wall)
+            self.t_prev = self.t_start
+        dt = max(t_wall - self.t_prev, 1e-9)
+        self.t_prev = t_wall
+        self.n_steps += 1
+        elapsed = max(t_wall - self.t_start, 1e-9)
+        out = {"step_time_s": dt, "it_per_s": self.n_steps / elapsed}
+        if self.tokens_per_step:
+            out["tokens_per_s"] = self.tokens_per_step / dt
+        if self.examples_per_step:
+            out["examples_per_s"] = self.examples_per_step / dt
+        return out
+
+    def on_end(self):
+        if self.t_start is None:
+            return None
+        elapsed = max((self.t_prev or self.t_start) - self.t_start, 1e-9)
+        out = {"wall_time_s": elapsed,
+               "it_per_s": self.n_steps / elapsed}
+        if self.tokens_per_step:
+            out["tokens_per_s"] = self.tokens_per_step * self.n_steps / elapsed
+        if self.examples_per_step:
+            out["examples_per_s"] = (self.examples_per_step * self.n_steps
+                                     / elapsed)
+        return out
+
+
+class MetricsBuffer:
+    """Defers device->host conversion: ``push`` stores the raw (possibly
+    device-scalar) stats dict plus a host wall-time stamp; ``drain``
+    block-syncs once and yields scalarized dicts in step order."""
+
+    def __init__(self) -> None:
+        self._buf: List[Tuple[int, Dict[str, Any], float]] = []
+        self.t_loop_start = time.perf_counter()
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def push(self, step: int, stats: Dict[str, Any]) -> None:
+        self._buf.append((step, stats, time.perf_counter()))
+
+    def drain(self) -> List[Tuple[int, Dict[str, Any]]]:
+        if not self._buf:
+            return []
+        # one transfer for the whole buffer, not one sync per scalar
+        host = jax.device_get([s for _, s, _ in self._buf])
+        out = []
+        for (step, _, t_wall), stats in zip(self._buf, host):
+            rec = {k: scalarize(v) for k, v in stats.items()}
+            rec["_t_wall"] = t_wall
+            out.append((step, rec))
+        self._buf.clear()
+        return out
+
+
+class CallbackRunner:
+    """Buffered tracker pump: push device stats each step, flush at
+    logging boundaries, close at loop end.  The ``_t_wall`` /
+    ``_t_loop_start`` stamps are internal plumbing for timing callbacks
+    and are stripped before the record reaches the tracker."""
+
+    def __init__(self, tracker: Optional[Tracker] = None,
+                 callbacks: Sequence[Callback] = (),
+                 flush_every: int = 1) -> None:
+        self.tracker = tracker if tracker is not None else NullTracker()
+        self.callbacks = list(callbacks)
+        self.flush_every = max(1, flush_every)
+        self._buffer = MetricsBuffer()
+        self._first = True
+        self._n_pushed = 0
+        self._closed = False
+
+    def push(self, step: int, stats: Dict[str, Any]) -> None:
+        assert not self._closed, "CallbackRunner already closed"
+        self._buffer.push(step, stats)
+        self._n_pushed += 1
+        if self._n_pushed % self.flush_every == 0:
+            self.flush()
+
+    def flush(self) -> None:
+        for step, metrics in self._buffer.drain():
+            if self._first:
+                metrics["_t_loop_start"] = self._buffer.t_loop_start
+                self._first = False
+            for cb in self.callbacks:
+                extra = cb.on_step(step, metrics)
+                if extra:
+                    metrics.update(extra)
+            public = {k: v for k, v in metrics.items()
+                      if not k.startswith("_")}
+            self.tracker.log(step, public)
+
+    def close(self, summary: Optional[Dict[str, Any]] = None) -> None:
+        if self._closed:
+            return
+        self.flush()
+        merged: Dict[str, Any] = {}
+        for cb in self.callbacks:
+            extra = cb.on_end()
+            if extra:
+                merged.update(extra)
+        if summary:
+            merged.update(summary)
+        if merged:
+            self.tracker.log_summary(merged)
+        self.tracker.finish()
+        self._closed = True

@@ -1,0 +1,102 @@
+"""Engine counters: the launch/packing/residency numbers behind the
+``BENCH_*.json`` trajectory, factored out of
+``benchmarks/bench_optimizer_overhead`` so training loops and the sweep
+harness log the same quantities the CI gate enforces.
+
+All counts are TRACE-time (``jax.jit(...).lower(...)``): they measure
+what one compiled step would do, without executing it — so they are
+exact, deterministic, and free of wall-clock noise.
+
+  * ``launches_per_step``   — Pallas kernel launches traced into one
+                              optimizer step (the multi-tensor engine's
+                              O(1)-vs-O(n_leaves) claim).
+  * ``packed_bytes_per_step`` — bytes flattened into the engine's flat
+                              buffers per step (resident FlatOptState
+                              packs gradients only).
+  * ``param_bytes_live``    — parameter bytes a ``TrainState`` holds
+                              across steps (the 1x single-owner
+                              invariant of the donated resident path).
+  * ``capture_donation_warnings`` — run a donated step and collect any
+                              "donated buffer not aliased" warnings
+                              (zero means every buffer aliased in place).
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.multi_tensor import FlatOptState, count_packed_bytes
+from repro.core.optim import Optimizer, TrainState
+from repro.kernels import count_pallas_launches
+
+__all__ = ["launches_per_step", "packed_bytes_per_step", "param_bytes_live",
+           "capture_donation_warnings", "engine_counters"]
+
+
+def launches_per_step(opt: Optimizer, grads, state, params) -> int:
+    """pallas_call sites traced into one optimizer step = kernel launches
+    per step execution."""
+    with count_pallas_launches() as c:
+        # fresh lambda: a cached jit of opt.step would skip tracing (and
+        # therefore skip the trace-time launch recording)
+        jax.jit(lambda g, s, p: opt.step(g, s, p)).lower(grads, state, params)
+    return c["launches"]
+
+
+def packed_bytes_per_step(opt: Optimizer, grads, state, params) -> int:
+    """Bytes packed into flat buffers per step execution (trace-time
+    count, same pattern as launches_per_step).  The flat-buffer-resident
+    state (FlatOptState) packs only the gradients; an OptState forces the
+    per-step path that re-packs params+grads+momentum every step."""
+    with count_packed_bytes() as c:
+        jax.jit(lambda g, s, p: opt.step(g, s, p)).lower(grads, state, params)
+    return int(c["bytes"])
+
+
+def param_bytes_live(ts: TrainState) -> int:
+    """Parameter bytes the TrainState keeps live across steps: the params
+    pytree (when it owns them) plus resident flat buffers (when
+    FlatOptState does).  The donated resident path holds ~1x raw param
+    bytes; the legacy (pytree, flats) pairing held 2x — the regression
+    this counter guards."""
+    n = 0
+    if ts.params is not None:
+        n += sum(l.size * jnp.dtype(l.dtype).itemsize
+                 for l in jax.tree.leaves(ts.params))
+    if isinstance(ts.opt_state, FlatOptState):
+        n += sum(f.size * jnp.dtype(f.dtype).itemsize
+                 for f in ts.opt_state.p_flats)
+    return n
+
+
+def capture_donation_warnings(fn: Callable, *args,
+                              donate_argnums=(1,)) -> Tuple[Any, List[str]]:
+    """jit ``fn`` with the given donation, run it once, and return
+    (result, [donation warning messages]).  An empty list means XLA
+    consumed every donated buffer — the aliasing contract held."""
+    with warnings.catch_warnings(record=True) as wlog:
+        warnings.simplefilter("always")
+        out = jax.jit(fn, donate_argnums=donate_argnums)(*args)
+        jax.block_until_ready(out)
+    msgs = [str(w.message) for w in wlog
+            if "donat" in str(w.message).lower()]
+    return out, msgs
+
+
+def engine_counters(opt: Optimizer, params) -> Dict[str, Any]:
+    """One-call counter bundle for a (optimizer, param tree) pair, used
+    by the sweep harness to stamp every record with the engine numbers
+    the CI gate tracks.  Gradients are synthesized (ones) — the counts
+    are trace-time and value-independent."""
+    grads = jax.tree.map(jnp.ones_like, params)
+    state = opt.init(params)
+    ts = TrainState.wrap(params, state)
+    return {
+        "launches_per_step": launches_per_step(opt, grads, state, params),
+        "packed_bytes_per_step": packed_bytes_per_step(opt, grads, state,
+                                                       params),
+        "param_bytes_live": param_bytes_live(ts),
+    }

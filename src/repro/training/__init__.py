@@ -1,6 +1,6 @@
 from repro.core.optim import TrainState, init_train_state
-from repro.training.step import make_train_step, loss_fn
+from repro.training.step import make_train_step, loss_fn, run_steps
 from repro.training.loss import lm_loss
 
 __all__ = ["make_train_step", "loss_fn", "lm_loss", "TrainState",
-           "init_train_state"]
+           "init_train_state", "run_steps"]

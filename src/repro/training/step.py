@@ -151,3 +151,32 @@ def make_train_step(cfg: ModelConfig, rt: Runtime, opt: Optimizer,
         return new_state, stats
 
     return train_step
+
+
+def run_steps(step_fn, state: TrainState, batch_at, n_steps: int, *,
+              start: int = 0, tracker=None, callbacks=(), log_every: int = 1,
+              summary: Optional[Dict[str, Any]] = None) -> TrainState:
+    """Host-side training loop around a (possibly jitted, possibly
+    donated) ``train_step(state, batch) -> (state', stats)``: threads the
+    state, buffers the per-step device stats, and drains them into the
+    tracker every ``log_every`` steps (stats stay device scalars between
+    drains, so logging never serializes dispatch — the same pending-drain
+    discipline the launcher documents).
+
+    ``batch_at(t)`` produces the batch for step ``t``.  ``callbacks``
+    (``repro.tracker.callbacks.Callback``) run in registration order at
+    each drain and may add derived metrics (wall-clock, tokens/sec);
+    their ``on_end`` summaries merge with ``summary`` into one
+    ``tracker.log_summary`` record before the tracker is finished.
+
+    This is the ONE loop the launcher, the benchmark harness, and the
+    sweep share — so every run emits the same record stream regardless
+    of entry point.
+    """
+    from repro.tracker.callbacks import CallbackRunner
+    runner = CallbackRunner(tracker, callbacks, flush_every=log_every)
+    for t in range(start, n_steps):
+        state, stats = step_fn(state, batch_at(t))
+        runner.push(t, stats)
+    runner.close(summary)
+    return state

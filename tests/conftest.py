@@ -8,6 +8,9 @@ import pytest
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root too, so the benchmarks/ namespace package (bench harness,
+# artifact schema, check_bench gate) is importable from the suite
+sys.path.insert(1, os.path.join(os.path.dirname(__file__), ".."))
 
 # Parametrized cases that individually exceed ~10s on the CI CPU runner.
 # Whole long-running modules carry ``pytestmark = pytest.mark.slow`` instead;

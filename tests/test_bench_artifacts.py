@@ -1,0 +1,284 @@
+"""Canonical BENCH artifact schema + check_bench gate + sweep smoke.
+
+The gate must enforce exactly what the old inline CI heredoc asserts
+enforced (launch counts, packing ratio, residency, donation warnings),
+reject schema skew loudly, and catch trend regressions against the
+committed baseline.
+"""
+from __future__ import annotations
+
+import copy
+import json
+
+import pytest
+
+from benchmarks import artifact as A
+from benchmarks import check_bench as C
+
+GOOD_RESULTS = {
+    "launches_per_step": {"per_leaf": 16, "multi_tensor": 2,
+                          "lamb_fused": 2, "clip_sngm": 3},
+    "packed_bytes_per_step": {"resident": 100, "per_step": 300,
+                              "ratio": 1 / 3, "lamb_resident": 100,
+                              "clip_sngm_resident": 200},
+    "param_bytes_live": {"resident": 110, "raw_params": 100,
+                         "legacy_two_copies": 210},
+    "donation_warnings": [],
+}
+
+
+def write_artifact(tmp_path, name="overhead", results=None, quick=True,
+                   mutate=None, fname="a.json"):
+    env = A.make_envelope(name, results if results is not None
+                          else copy.deepcopy(GOOD_RESULTS),
+                          quick=quick, env={})
+    if mutate:
+        mutate(env)
+    p = tmp_path / fname
+    p.write_text(json.dumps(env))
+    return str(p)
+
+
+# --- envelope schema ---------------------------------------------------
+
+def test_envelope_round_trip(tmp_path):
+    path = A.write_bench_artifact("overhead", GOOD_RESULTS, quick=True,
+                                  json_dir=str(tmp_path))
+    assert path.endswith("BENCH_overhead.json")
+    art = A.load_bench_artifact(path)
+    assert art["schema_version"] == A.SCHEMA_VERSION
+    assert art["bench"] == "overhead" and art["quick"] is True
+    assert art["results"]["launches_per_step"]["multi_tensor"] == 2
+
+
+def test_envelope_rejects_missing_fields():
+    probs = A.validate_envelope({"schema_version": A.SCHEMA_VERSION})
+    assert any("missing required field 'bench'" in p for p in probs)
+    assert any("missing required field 'results'" in p for p in probs)
+    assert any("missing required field 'quick'" in p for p in probs)
+
+
+def test_envelope_rejects_unknown_fields_and_versions():
+    env = A.make_envelope("overhead", {}, quick=False, env={})
+    assert A.validate_envelope(env) == []
+    bad = dict(env, extra_field=1)
+    assert any("unknown field 'extra_field'" in p
+               for p in A.validate_envelope(bad))
+    bad = dict(env, schema_version=99)
+    assert any("unknown schema_version 99" in p
+               for p in A.validate_envelope(bad))
+    assert A.validate_envelope([1, 2]) != []
+
+
+def test_load_bench_artifact_raises_on_invalid(tmp_path):
+    path = write_artifact(tmp_path,
+                          mutate=lambda e: e.update(surprise=True))
+    with pytest.raises(ValueError, match="surprise"):
+        A.load_bench_artifact(path)
+
+
+# --- threshold gate ----------------------------------------------------
+
+def thresholds():
+    with open(C.DEFAULT_THRESHOLDS) as f:
+        return json.load(f)
+
+
+def test_committed_thresholds_parse():
+    th = C.load_thresholds(C.DEFAULT_THRESHOLDS)
+    assert "overhead" in th and "sweep" in th
+    # the exact guarantees the old heredoc asserts enforced
+    checks = th["overhead"]["checks"]
+    assert checks["launches_per_step.multi_tensor"] == {"op": "eq", "value": 2}
+    assert checks["launches_per_step.lamb_fused"] == {"op": "eq", "value": 2}
+    assert checks["launches_per_step.clip_sngm"] == {"op": "eq", "value": 3}
+    assert "donation_warnings" in checks
+    trend = th["overhead"]["trend"]
+    assert any(k.startswith("launches_per_step") for k in trend)
+    assert any(k.startswith("packed_bytes_per_step") for k in trend)
+    assert any(k.startswith("param_bytes_live") for k in trend)
+
+
+def test_gate_passes_good_artifact(tmp_path, capsys):
+    path = write_artifact(tmp_path)
+    assert C.main([path]) == 0
+    out = capsys.readouterr().out
+    assert "PASS" in out and "FAIL" not in out
+
+
+@pytest.mark.parametrize("break_it, broken_check", [
+    (lambda r: r["launches_per_step"].update(multi_tensor=4),
+     "launches_per_step.multi_tensor"),
+    (lambda r: r["launches_per_step"].update(lamb_fused=5),
+     "launches_per_step.lamb_fused"),
+    (lambda r: r["launches_per_step"].update(clip_sngm=7),
+     "launches_per_step.clip_sngm"),
+    (lambda r: r["packed_bytes_per_step"].update(resident=200),
+     "packed_bytes_per_step.resident"),
+    (lambda r: r["packed_bytes_per_step"].update(lamb_resident=150),
+     "packed_bytes_per_step.lamb_resident"),
+    (lambda r: r["packed_bytes_per_step"].update(clip_sngm_resident=250),
+     "packed_bytes_per_step.clip_sngm_resident"),
+    (lambda r: r["param_bytes_live"].update(resident=200),
+     "param_bytes_live.resident"),
+    (lambda r: r.update(donation_warnings=["donated buffer not aliased"]),
+     "donation_warnings"),
+])
+def test_gate_fails_each_regression(tmp_path, capsys, break_it,
+                                    broken_check):
+    results = copy.deepcopy(GOOD_RESULTS)
+    break_it(results)
+    path = write_artifact(tmp_path, results=results)
+    assert C.main([path]) == 1
+    out = capsys.readouterr().out
+    assert any(broken_check in line and "FAIL" in line
+               for line in out.splitlines())
+
+
+def test_gate_fails_on_missing_results_key(tmp_path, capsys):
+    results = copy.deepcopy(GOOD_RESULTS)
+    del results["param_bytes_live"]
+    path = write_artifact(tmp_path, results=results)
+    assert C.main([path]) == 1
+    assert "<missing>" in capsys.readouterr().out
+
+
+def test_gate_rejects_unknown_op():
+    with pytest.raises(C.CheckError, match="unknown threshold op"):
+        C.eval_check({"x": 1}, "x", {"op": "approximately_vibes"})
+
+
+def test_gate_schema_error_is_exit_2(tmp_path, capsys):
+    path = write_artifact(tmp_path, mutate=lambda e: e.pop("results"))
+    assert C.main([path]) == 2
+    assert "ERROR" in capsys.readouterr().out
+
+
+# --- trend mode --------------------------------------------------------
+
+def test_trend_passes_on_equal_and_improved(tmp_path):
+    base = write_artifact(tmp_path, fname="base.json")
+    fresh = write_artifact(tmp_path, fname="fresh.json")
+    assert C.main([fresh, "--trend", "--baseline", base]) == 0
+    better = copy.deepcopy(GOOD_RESULTS)
+    better["packed_bytes_per_step"]["resident"] = 50   # improvement is fine
+    fresh2 = write_artifact(tmp_path, results=better, fname="fresh2.json")
+    assert C.main([fresh2, "--trend", "--baseline", base]) == 0
+
+
+@pytest.mark.parametrize("worsen, key", [
+    (lambda r: r["launches_per_step"].update(multi_tensor=3),
+     "launches_per_step.multi_tensor"),
+    (lambda r: r["packed_bytes_per_step"].update(resident=101),
+     "packed_bytes_per_step.resident"),
+    (lambda r: r["param_bytes_live"].update(resident=111),
+     "param_bytes_live.resident"),
+])
+def test_trend_fails_on_regression(tmp_path, capsys, worsen, key):
+    base = write_artifact(tmp_path, fname="base.json")
+    worse = copy.deepcopy(GOOD_RESULTS)
+    worsen(worse)
+    fresh = write_artifact(tmp_path, results=worse, fname="fresh.json")
+    assert C.main([fresh, "--trend", "--baseline", base]) == 1
+    out = capsys.readouterr().out
+    assert any(key in line and "FAIL" in line for line in out.splitlines())
+
+
+def test_trend_rejects_scale_mismatch(tmp_path, capsys):
+    base = write_artifact(tmp_path, quick=True, fname="base.json")
+    fresh = write_artifact(tmp_path, quick=False, fname="fresh.json")
+    assert C.main([fresh, "--trend", "--baseline", base]) == 2
+    assert "scales" in capsys.readouterr().out
+
+
+def test_trend_requires_baseline(tmp_path):
+    path = write_artifact(tmp_path)
+    assert C.main([path, "--trend"]) == 2
+
+
+# --- sweep record schema ----------------------------------------------
+
+def make_sweep_record(**over):
+    rec = {"name": "convnet_sngm_b16", "arch": "convnet", "family": "sngm",
+           "fused": "multi_tensor", "batch": 16, "steps": 4,
+           "grad_computations": 64, "budget_unit": "examples",
+           "final_loss": 2.3, "test_acc": 0.1, "diverged": False,
+           "wall_time_s": 1.0, "throughput": 64.0,
+           "engine": {"launches_per_step": 2, "packed_bytes_per_step": 100,
+                      "param_bytes_live": 100}}
+    rec.update(over)
+    return rec
+
+
+def make_sweep_results(records):
+    return {"record_schema_version": A.SWEEP_RECORD_SCHEMA_VERSION,
+            "records": records}
+
+
+def test_sweep_results_validation():
+    assert A.validate_sweep_results(
+        make_sweep_results([make_sweep_record()])) == []
+    probs = A.validate_sweep_results({"records": [make_sweep_record()]})
+    assert any("record_schema_version" in p for p in probs)
+    probs = A.validate_sweep_results(make_sweep_results([]))
+    assert any("non-empty" in p for p in probs)
+    rec = make_sweep_record()
+    del rec["grad_computations"]
+    probs = A.validate_sweep_results(make_sweep_results([rec]))
+    assert any("grad_computations" in p for p in probs)
+    rec = make_sweep_record()
+    del rec["engine"]["param_bytes_live"]
+    probs = A.validate_sweep_results(make_sweep_results([rec]))
+    assert any("param_bytes_live" in p for p in probs)
+
+
+def test_sweep_gate_checks_records(tmp_path, capsys):
+    good = write_artifact(tmp_path, name="sweep",
+                          results=make_sweep_results([make_sweep_record()]),
+                          fname="sweep.json")
+    assert C.main([good]) == 0
+    # a de-fused run (O(n) launches) must fail the per-record check
+    bad_rec = make_sweep_record(
+        engine={"launches_per_step": 16, "packed_bytes_per_step": 100,
+                "param_bytes_live": 100})
+    bad = write_artifact(tmp_path, name="sweep",
+                         results=make_sweep_results([bad_rec]),
+                         fname="sweep_bad.json")
+    assert C.main([bad]) == 1
+    out = capsys.readouterr().out
+    assert "engine.launches_per_step" in out
+
+
+# --- fast-lane sweep smoke --------------------------------------------
+
+def test_bench_sweep_quick_record_shape(tmp_path):
+    """bench_sweep --quick at micro scale: real training on the fused
+    resident path, canonical artifact written, records carry the full
+    schema, and the gate passes on the result."""
+    from benchmarks import bench_sweep
+
+    results = bench_sweep.run(
+        quick=True, json_dir=str(tmp_path),
+        convnet_batches=(16,), convnet_epochs=1, convnet_n_train=64,
+        lm_batches=(8,), lm_tokens_budget=8 * 32 * 2,
+        families=("sngm",))
+    assert A.validate_sweep_results(results) == []
+    names = [r["name"] for r in results["records"]]
+    assert names == ["convnet_sngm_b16", "lm_sngm_b8"]
+    conv, lm = results["records"]
+    assert conv["arch"] == "convnet" and conv["budget_unit"] == "examples"
+    assert lm["arch"] == "transformer" and lm["budget_unit"] == "tokens"
+    for rec in results["records"]:
+        # fused resident path: O(1) launches, finite loss, real timing
+        assert rec["fused"] == "multi_tensor"
+        assert rec["engine"]["launches_per_step"] == 2
+        assert rec["engine"]["packed_bytes_per_step"] > 0
+        assert rec["engine"]["param_bytes_live"] > 0
+        assert rec["wall_time_s"] > 0
+        assert rec["final_loss"] == pytest.approx(rec["final_loss"])
+    assert lm["grad_computations"] == 8 * 32 * 2
+    # the artifact landed in canonical form and passes the gate
+    path = str(tmp_path / "BENCH_sweep.json")
+    art = A.load_bench_artifact(path)
+    assert art["bench"] == "sweep" and art["quick"] is True
+    assert C.main([path]) == 0
