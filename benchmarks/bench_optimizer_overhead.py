@@ -17,8 +17,11 @@ buffers per steady-state step, ~1/3 of the per-step path's
 params+grads+momentum re-pack on an fp32 tree.
 
 Also benchmarks the gradient-transform chain interpreter on a novel
-composition (clip -> normalize -> trace -> schedule) against the
-compiled sngm chain, so the jnp-fallback overhead stays visible.
+composition (adam -> trace -> schedule, which neither the matcher nor
+the segment planner can fuse) against the compiled sngm chain, so the
+jnp-fallback overhead stays visible — plus the segment-compiled plans
+(mid-chain clip, nesterov, EMA slots), whose launch counts the CI gate
+pins exactly.
 
 CLI:  python -m benchmarks.bench_optimizer_overhead [--quick] [--json OUT]
 ``--quick`` shrinks the tree and iteration counts for the CI smoke lane;
@@ -98,14 +101,14 @@ def run(quick: bool = False, json_path: str | None = None):
         bench(name, opt)
 
     # --- chain interpreter: a novel composition no fused kind covers ----
-    # (normalize -> nesterov momentum -> schedule -> EMA; clip-PREFIXED
-    # chains compile onto the engine now, so the novel row needs a shape
-    # the matcher genuinely rejects); measures the jnp fallback's
-    # overhead relative to the compiled sngm path above
-    novel = T.chain(T.normalize_by_global_norm(),
-                    T.trace(0.9, nesterov=True),
-                    T.scale_by_schedule(constant(0.1)), T.ema_params(0.99))
+    # (Adam moments feeding a momentum trace; since the segment compiler,
+    # clip/nesterov/EMA compositions all fuse, so the novel row needs a
+    # stateful non-canonical stage the PLANNER genuinely rejects too);
+    # measures the jnp fallback's overhead vs the compiled sngm above
+    novel = T.chain(T.scale_by_adam(0.9, 0.999, 1e-6), T.trace(0.9),
+                    T.scale_by_schedule(constant(0.1)))
     assert T.match_chain(novel) is None
+    assert T.plan_chain(novel).kind is None
     bench("chain_interpreter_novel", compile_chain(novel))
 
     # --- fused: per-leaf (O(n_leaves) launches) vs multi-tensor (O(1)) --
@@ -134,6 +137,25 @@ def run(quick: bool = False, json_path: str | None = None):
     opt_clip = compile_chain(clip_sngm_tx, fused="multi_tensor")
     assert opt_clip.kind == "sngm_global"
     us_clip, l_clip = bench("clip_sngm_fused_multi_tensor", opt_clip)
+
+    # --- segment plans: nesterov variant, mid-chain clip, EMA slots -----
+    # nesterov fuses into the update kernel (no extra launch); a clip
+    # BETWEEN normalize and trace folds into the tail's coefficient round
+    # (jnp prefix nodes are launch-free); ema_params becomes a resident
+    # f32 shadow slot advanced elementwise (no launch, no packing)
+    opt_nest = sngm(constant(0.1), beta=0.9, weight_decay=1e-4,
+                    nesterov=True, fused="multi_tensor")
+    us_nest, l_nest = bench("nesterov_sngm_fused_multi_tensor", opt_nest)
+    clip_mid_tx = T.chain(T.add_decayed_weights(1e-4),
+                          T.normalize_by_global_norm(),
+                          T.clip_by_global_norm(5.0), T.trace(0.9),
+                          T.scale_by_schedule(constant(0.1)))
+    opt_cm = compile_chain(clip_mid_tx, fused="multi_tensor")
+    assert T.match_chain(clip_mid_tx) is None and opt_cm.kind == "msgd"
+    us_cm, l_cm = bench("sngm_clip_mid_fused_multi_tensor", opt_cm)
+    opt_ema = sngm(constant(0.1), beta=0.9, weight_decay=1e-4,
+                   ema_decay=0.999, fused="multi_tensor")
+    us_ema, l_ema = bench("sngm_ema_fused_multi_tensor", opt_ema)
 
     assert l_pl == n_leaves, (l_pl, n_leaves)
     assert l_mt <= 3, l_mt          # norm pass + update pass per dtype bucket
@@ -175,6 +197,22 @@ def run(quick: bool = False, json_path: str | None = None):
                         "raw + clipped gradient packing"))
     print(f"  lamb resident packing {b_lamb} B/step; clip->sngm {b_clip} "
           f"B/step (2x grads: raw norm round + clipped update)")
+    # segment plans: nesterov and EMA stay at gradient-only packing
+    # (shadow slots update flats in place); mid-chain clip packs the
+    # prefix output twice, same 2x as the clip-prefixed whole match
+    b_nest = packed_bytes_per_step(opt_nest, grads, opt_nest.init(params),
+                                   params)
+    b_cm = packed_bytes_per_step(opt_cm, grads, opt_cm.init(params), params)
+    b_ema = packed_bytes_per_step(opt_ema, grads, opt_ema.init(params),
+                                  params)
+    rows.append(csv_row("nesterov_sngm_packed_bytes_per_step_resident",
+                        b_nest, "gradients only"))
+    rows.append(csv_row("sngm_clip_mid_packed_bytes_per_step_resident",
+                        b_cm, "prefix output: clip round + tail packing"))
+    rows.append(csv_row("sngm_ema_packed_bytes_per_step_resident", b_ema,
+                        "gradients only; EMA slots update in place"))
+    print(f"  plan packing: nesterov {b_nest} B/step, clip-mid {b_cm} "
+          f"B/step, ema {b_ema} B/step")
 
     # --- parameter residency: live param bytes held across steps --------
     # the donated TrainState on the resident path holds the params ONCE
@@ -210,14 +248,22 @@ def run(quick: bool = False, json_path: str | None = None):
     out = {"rows": rows, "n_params": n_params, "n_leaves": n_leaves,
            "launches_per_step": {"per_leaf": l_pl, "multi_tensor": l_mt,
                                  "lamb_fused": l_lamb,
-                                 "clip_sngm": l_clip},
+                                 "clip_sngm": l_clip,
+                                 "nesterov_sngm": l_nest,
+                                 "sngm_clip_mid": l_cm,
+                                 "sngm_ema": l_ema},
            "us_per_step": {"per_leaf": us_pl, "multi_tensor": us_mt,
-                           "lamb_fused": us_lamb, "clip_sngm": us_clip},
+                           "lamb_fused": us_lamb, "clip_sngm": us_clip,
+                           "nesterov_sngm": us_nest,
+                           "sngm_clip_mid": us_cm, "sngm_ema": us_ema},
            "packed_bytes_per_step": {"resident": int(b_res),
                                      "per_step": int(b_per),
                                      "ratio": b_res / b_per,
                                      "lamb_resident": int(b_lamb),
-                                     "clip_sngm_resident": int(b_clip)},
+                                     "clip_sngm_resident": int(b_clip),
+                                     "nesterov_resident": int(b_nest),
+                                     "sngm_clip_mid_resident": int(b_cm),
+                                     "sngm_ema_resident": int(b_ema)},
            "param_bytes_live": {"resident": int(pb_live),
                                 "raw_params": int(param_bytes),
                                 "legacy_two_copies": int(pb_legacy)},

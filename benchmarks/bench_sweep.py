@@ -12,7 +12,11 @@ comparison axis, after Keskar et al. 1609.04836 and Hoffer et al.
   * LM ladder (Table-3 proxy, smoke transformer on the learnable bigram
     language): every batch size sees the same token budget;
   * an optional Hoffer-style "train longer" baseline: MSGD at the
-    largest batch with a doubled epoch budget (full mode only).
+    largest batch with a doubled epoch budget (full mode only);
+  * a ghost-batch-norm axis (Hoffer et al.): the largest convnet rung
+    again with parameter-free ghost normalization, so the sweep
+    separates optimization effects from normalization-statistics
+    effects at large batch.
 
 Every run trains through ``benchmarks.common`` (donated TrainState,
 ``fused="multi_tensor"`` — flat buffers as the single parameter owner),
@@ -79,8 +83,13 @@ def _run_tracker(jsonl_dir: Optional[str], name: str):
 def convnet_ladder(batches: Sequence[int], epochs: int, n_train: int,
                    n_test: int, families: Sequence[str] = FAMILIES,
                    train_longer: bool = False,
+                   ghost_batch: Optional[int] = None,
                    jsonl_dir: Optional[str] = None) -> List[dict]:
-    """Fig-1/Table-2 proxy: every rung sees epochs*n_train examples."""
+    """Fig-1/Table-2 proxy: every rung sees epochs*n_train examples.
+    ``ghost_batch`` adds a ghost-batch-norm axis: the LARGEST rung again
+    with parameter-free ghost normalization (Hoffer et al.) at that
+    virtual batch size — the classic control for whether large-batch
+    degradation is a normalization-statistics artifact."""
     from repro.data.synthetic import synthetic_images
     from repro.models.convnet import init_convnet
 
@@ -89,27 +98,31 @@ def convnet_ladder(batches: Sequence[int], epochs: int, n_train: int,
     base_batch = min(batches)
     records = []
 
-    jobs = [(b, epochs, "") for b in batches]
+    jobs = [(b, epochs, "", None) for b in batches]
     if train_longer:
         # Hoffer et al.: "train longer, generalize better" — the largest
         # batch again, with twice the example budget
-        jobs.append((max(batches), 2 * epochs, "_longer"))
+        jobs.append((max(batches), 2 * epochs, "_longer", None))
+    if ghost_batch:
+        jobs.append((max(batches), epochs, "_ghost", ghost_batch))
 
     stamps: Dict[str, Dict[str, int]] = {}
     for family in families:
-        for batch, eps, suffix in jobs:
+        for batch, eps, suffix, gb in jobs:
             steps = max(1, eps * n_train // batch)
             opt = make_opt(family, steps, batch, base_batch)
             if family not in stamps:
                 stamps[family] = _engine_stamp(opt, init_convnet(0))
             name = f"convnet_{family}_b{batch}{suffix}"
             r = train_convnet(opt, x, y, xt, yt, batch, steps,
+                              ghost_batch=gb,
                               tracker=_run_tracker(jsonl_dir, name))
             records.append({
                 "name": name, "arch": "convnet", "family": family,
                 "fused": "multi_tensor", "batch": batch, "steps": steps,
                 "grad_computations": steps * batch,
                 "budget_unit": "examples",
+                "ghost_batch": gb,
                 "final_loss": r["final_loss"], "test_acc": r["test_acc"],
                 "diverged": r["diverged"],
                 "wall_time_s": r["wall_time_s"],
@@ -176,6 +189,7 @@ def run(quick: bool = False, json_path: str | None = None,
         lm_seq: Optional[int] = None,
         lm_tokens_budget: Optional[int] = None,
         families: Sequence[str] = FAMILIES,
+        ghost_batch: Optional[int] = None,
         write_artifact: bool = True) -> dict:
     """Run the ladder(s) and write canonical BENCH_sweep.json.  The
     explicit knobs exist for the fast-lane pytest smoke, which runs a
@@ -189,6 +203,7 @@ def run(quick: bool = False, json_path: str | None = None,
         ls = lm_seq or 32
         ltb = lm_tokens_budget or 8 * 32 * 24
         train_longer = False
+        gb = ghost_batch or 16
     else:
         cb = convnet_batches or (64, 256, 1024)
         ce, cn = convnet_epochs or 8, convnet_n_train or 4096
@@ -196,14 +211,16 @@ def run(quick: bool = False, json_path: str | None = None,
         ls = lm_seq or 64
         ltb = lm_tokens_budget or 256 * 64 * 8
         train_longer = True
+        gb = ghost_batch or 32
 
     records: List[dict] = []
     if cb:
         print(f"[sweep] convnet ladder B={list(cb)} x {list(families)} "
-              f"({ce} epochs x {cn} examples each)")
+              f"({ce} epochs x {cn} examples each, ghost batch {gb})")
         records += convnet_ladder(cb, ce, cn, max(cn // 4, 64),
                                   families=families,
                                   train_longer=train_longer,
+                                  ghost_batch=gb,
                                   jsonl_dir=jsonl_dir)
     if lb:
         print(f"[sweep] LM ladder B={list(lb)} x {list(families)} "
@@ -218,7 +235,7 @@ def run(quick: bool = False, json_path: str | None = None,
         for family in families:
             rung = [r for r in records
                     if r["arch"] == arch and r["family"] == family
-                    and not r["name"].endswith("_longer")]
+                    and not r["name"].endswith(("_longer", "_ghost"))]
             if len(rung) >= 2:
                 lo = min(rung, key=lambda r: r["batch"])
                 hi = max(rung, key=lambda r: r["batch"])
@@ -237,7 +254,8 @@ def run(quick: bool = False, json_path: str | None = None,
                           "lm_batches": list(lb), "lm_seq": ls,
                           "lm_tokens_budget": ltb,
                           "families": list(families),
-                          "train_longer": train_longer}}
+                          "train_longer": train_longer,
+                          "ghost_batch": gb}}
     problems = validate_sweep_results(results)
     assert not problems, problems   # producer-side schema self-check
     if write_artifact:
@@ -256,5 +274,9 @@ if __name__ == "__main__":
     ap.add_argument("--jsonl-dir", default=None,
                     help="also write one per-step JSONL metrics file per "
                          "run into this directory")
+    ap.add_argument("--ghost-batch", type=int, default=None,
+                    help="virtual batch size for the ghost-batch-norm rung "
+                         "(default: 16 quick / 32 full)")
     args = ap.parse_args()
-    run(quick=args.quick, json_dir=args.json_dir, jsonl_dir=args.jsonl_dir)
+    run(quick=args.quick, json_dir=args.json_dir, jsonl_dir=args.jsonl_dir,
+        ghost_batch=args.ghost_batch)

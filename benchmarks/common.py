@@ -39,16 +39,20 @@ def _tracked(tracker, callbacks, log_every):
 
 def train_convnet(opt: Optimizer, x, y, xt, yt, batch: int, steps: int,
                   accum_micro: int = 128, seed: int = 0, log_every: int = 0,
-                  tracker=None):
+                  tracker=None, ghost_batch: Optional[int] = None):
     """Train the Fig-1 convnet with global batch `batch`; batches larger
     than `accum_micro` use gradient accumulation exactly as the paper.
-    The optimizer step runs donated over the unified TrainState, so a
+    ``ghost_batch`` turns on parameter-free ghost batch normalization
+    (Hoffer et al.) with that virtual batch size — the normalization
+    statistics stay small-batch even on the large-batch rungs.  The
+    optimizer step runs donated over the unified TrainState, so a
     resident fused optimizer holds ~1x param bytes throughout."""
     ts = opt.init_state(init_convnet(seed))
     n = x.shape[0]
     micro = min(batch, accum_micro)
     n_micro = batch // micro
-    grad_fn = jax.jit(jax.value_and_grad(ce_loss))
+    grad_fn = jax.jit(jax.value_and_grad(
+        lambda p, xb, yb: ce_loss(p, xb, yb, ghost_batch=ghost_batch)))
     opt_step = jax.jit(opt.step_state, donate_argnums=(1,))
 
     runner, mem = _tracked(tracker, [StepTimer(examples_per_step=batch)],
@@ -77,7 +81,8 @@ def train_convnet(opt: Optimizer, x, y, xt, yt, batch: int, steps: int,
         if not np.isfinite(last_loss):
             break
     diverged = not np.isfinite(last_loss)
-    acc = 0.0 if diverged else float(accuracy(ts.params_view, xt, yt))
+    acc = 0.0 if diverged else float(
+        accuracy(ts.params_view, xt, yt, ghost_batch=ghost_batch))
     runner.close({"final_loss": last_loss, "test_acc": acc,
                   "diverged": diverged})
     return {"final_loss": last_loss, "test_acc": acc,

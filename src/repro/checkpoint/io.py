@@ -12,12 +12,20 @@ round-trip is bit-exact in both values and dtypes while old/drifted
 checkpoints still load.  Works for any state form — plain param trees,
 ``OptState`` pytrees, flat-buffer-resident ``FlatOptState`` (whose
 static ``TreeLayout``/``form`` are pytree aux data and never touch disk;
-the Adam family's ``m_flats``/``v_flats`` moment slots are ordinary
-child buffers and round-trip like any leaf), or the chain interpreter's
-``ChainOptState`` (a NamedTuple-of-NamedTuples whose keys come from the
-tuple positions, so a chain's state layout — i.e. the transform
-sequence — must match between save and load; the optimizer spec in
-``train_meta.json`` is what guarantees that on ``--resume``).
+the Adam family's ``m_flats``/``v_flats`` moment slots and the segment
+compiler's ``e_flats`` EMA shadow slots — one f32 bucket set per
+``ema_params`` stage, keyed under ``e_flats`` by slot-then-bucket
+position — are ordinary child buffers and round-trip like any leaf;
+a nesterov trace adds NO slot, its look-ahead recomputes from the same
+momentum buffers), or the chain interpreter's ``ChainOptState`` (a
+NamedTuple-of-NamedTuples whose keys come from the tuple positions, so
+a chain's state layout — i.e. the transform sequence — must match
+between save and load; the optimizer spec in ``train_meta.json`` is
+what guarantees that on ``--resume``).  ``to_pytree``/``from_pytree``
+interconvert the flat and pytree forms losslessly, so a checkpoint
+saved in either form resumes in either execution mode — including the
+``("chain", slots)`` segment-plan form, whose pytree view is the
+interpreter's ``ChainOptState``.
 
 Atomic commit: a save is staged in a ``<path>.tmp-staging`` directory,
 finished with a ``COMMIT`` marker file, and renamed into place (an

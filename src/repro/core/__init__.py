@@ -17,7 +17,8 @@ from repro.core.multi_tensor import (
 )
 from repro.core import transform
 from repro.core.transform import (
-    ChainOptState, GradientTransform, chain, compile_chain, as_optimizer,
+    ChainOptState, GradientTransform, PlanNode, SegmentPlan, chain,
+    compile_chain, as_optimizer, match_chain, plan_chain,
 )
 from repro.core import schedules
 from repro.core.schedules import make_schedule
@@ -32,5 +33,6 @@ __all__ = ["Optimizer", "OptState", "OptimizerSpec", "TrainState", "sngm",
            "leaf_sumsq", "multi_tensor_lamb_step",
            "multi_tensor_lamb_step_flat", "multi_tensor_step",
            "multi_tensor_step_flat", "resident_lamb_step", "resident_step",
-           "transform", "ChainOptState", "GradientTransform", "chain",
-           "compile_chain", "as_optimizer"]
+           "transform", "ChainOptState", "GradientTransform", "PlanNode",
+           "SegmentPlan", "chain", "compile_chain", "as_optimizer",
+           "match_chain", "plan_chain"]

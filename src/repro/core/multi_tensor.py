@@ -270,13 +270,20 @@ class FlatOptState:
     family: momentum kinds (sngm/msgd/lars) carry the f32 momentum in
     ``u_flats``; the Adam family (lamb) instead carries the f32 first and
     second moments in ``m_flats``/``v_flats`` (``u_flats`` is empty).
+    ``e_flats`` hold the resident EMA shadow parameters of
+    ``ema_params`` stages compiled by the segment planner: one tuple of
+    per-bucket f32 buffers PER ema stage (empty for chains without one),
+    updated elementwise on the flats each step (zero launches) and
+    materialized to pytrees only via ``.ema_views`` / ``to_pytree``.
     ``layout`` and ``form`` ride along as static pytree aux data, so a
     jitted step never rebuilds or re-packs them; ``form`` records which
-    family (and, for compiled chains, the stateless-prefix arity) so
-    ``to_pytree`` can rebuild the matching pytree-form state.  The
-    resident buffers are authoritative: materialize pytree views via
-    ``.params`` / ``.momentum`` / ``.moments`` only for ``loss_fn``,
-    logging, and checkpointing.
+    family — ``"momentum"``, ``("lamb", n_prefix, n_mid)``, or a
+    segment-compiled chain's ``("chain", slots)`` with one per-stage
+    state tag ("empty"|"trace"|"sched"|"adam"|"ema") — so ``to_pytree``
+    can rebuild the matching pytree-form state.  The resident buffers
+    are authoritative: materialize pytree views via ``.params`` /
+    ``.momentum`` / ``.moments`` only for ``loss_fn``, logging, and
+    checkpointing.
     """
     step: jnp.ndarray                    # scalar int32
     p_flats: Tuple[jnp.ndarray, ...]
@@ -284,7 +291,9 @@ class FlatOptState:
     layout: TreeLayout
     m_flats: Tuple[jnp.ndarray, ...] = ()
     v_flats: Tuple[jnp.ndarray, ...] = ()
+    e_flats: Tuple[Tuple[jnp.ndarray, ...], ...] = ()
     form: Any = "momentum"               # static; "momentum" | ("lamb", ...)
+    #                                    #         | ("chain", slots)
 
     def tree_flatten_with_keys(self):
         G = jax.tree_util.GetAttrKey
@@ -292,17 +301,18 @@ class FlatOptState:
                  (G("p_flats"), tuple(self.p_flats)),
                  (G("u_flats"), tuple(self.u_flats)),
                  (G("m_flats"), tuple(self.m_flats)),
-                 (G("v_flats"), tuple(self.v_flats))),
+                 (G("v_flats"), tuple(self.v_flats)),
+                 (G("e_flats"), tuple(tuple(e) for e in self.e_flats))),
                 (self.layout, self.form))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        step, p_flats, u_flats, m_flats, v_flats = children
+        step, p_flats, u_flats, m_flats, v_flats, e_flats = children
         layout, form = aux
         return cls(step=step, p_flats=tuple(p_flats),
                    u_flats=tuple(u_flats), layout=layout,
                    m_flats=tuple(m_flats), v_flats=tuple(v_flats),
-                   form=form)
+                   e_flats=tuple(tuple(e) for e in e_flats), form=form)
 
     @property
     def params(self) -> PyTree:
@@ -317,6 +327,12 @@ class FlatOptState:
         """(m, v) pytree views of the Adam moments (f32)."""
         return (unflatten(self.m_flats, self.layout, keep_dtype=True),
                 unflatten(self.v_flats, self.layout, keep_dtype=True))
+
+    @property
+    def ema_views(self) -> Tuple[PyTree, ...]:
+        """One f32 pytree view per resident EMA stage."""
+        return tuple(unflatten(e, self.layout, keep_dtype=True)
+                     for e in self.e_flats)
 
 
 def init_flat_state(params: PyTree) -> FlatOptState:
@@ -354,9 +370,32 @@ def init_flat_adam_state(params: PyTree,
         m_flats=zeros(), v_flats=zeros(), form=form)
 
 
+def init_ema_flats(params: PyTree, layout: TreeLayout
+                   ) -> Tuple[jnp.ndarray, ...]:
+    """Resident shadow-parameter buffers for ONE ``ema_params`` stage:
+    the params packed to f32, copied so the EMA slot never aliases
+    ``p_flats`` (double donation).  Matches the interpreter's
+    ``jnp.array(p, dtype=f32, copy=True)`` init leaf-for-leaf."""
+    return tuple(jnp.array(f, copy=True)
+                 for f in flatten(params, layout, cast_to=jnp.float32))
+
+
+def ema_flats_update(e_flats: Sequence[jnp.ndarray],
+                     p_flats: Sequence[jnp.ndarray],
+                     decay: float) -> Tuple[jnp.ndarray, ...]:
+    """One EMA advance on the resident flats, elementwise (zero launches):
+    ``e <- decay*e + (1-decay)*p`` with the PRE-step params, the
+    interpreter's exact ``ema_params`` expression.  Zero padding maps to
+    zero, so the buffers stay bit-equal to re-flattening the leafwise
+    EMA."""
+    return tuple(decay * e + (1.0 - decay) * pf.astype(jnp.float32)
+                 for e, pf in zip(e_flats, p_flats))
+
+
 def resident_step(kind: str, grads: PyTree, state: FlatOptState, *, lr,
                   beta: float, weight_decay: float = 0.0, eps: float = 1e-12,
                   trust: float = 0.001, clip: Optional[float] = None,
+                  nesterov: bool = False,
                   materialize_view: bool = True
                   ) -> Tuple[Optional[PyTree], FlatOptState, dict]:
     """The resident fast path: flatten ONLY the gradients; params and
@@ -378,7 +417,7 @@ def resident_step(kind: str, grads: PyTree, state: FlatOptState, *, lr,
     po, uo, stats = multi_tensor_step_flat(
         kind, layout, state.p_flats, g_flats, state.u_flats, lr=lr,
         beta=beta, weight_decay=weight_decay, eps=eps, trust=trust,
-        stat_gnorm=stat_gnorm)
+        nesterov=nesterov, stat_gnorm=stat_gnorm)
     new_state = FlatOptState(step=state.step + 1, p_flats=tuple(po),
                              u_flats=tuple(uo), layout=layout,
                              form=state.form)
@@ -450,7 +489,7 @@ def _leaf_values(parts_per_bucket, layout: TreeLayout) -> List[jnp.ndarray]:
 
 
 def _clip_tree_round(grads: PyTree, layout: TreeLayout, clip: float,
-                     backend: str):
+                     backend: str, cast_to: Optional[Any] = None):
     """Round 0 of a clip-prefixed chain: pack the raw gradients and reduce
     their global norm in one ``chunk_sumsq`` launch per bucket, then apply
     the interpreter's exact ``clip_by_global_norm`` expression LEAF-WISE on
@@ -460,9 +499,12 @@ def _clip_tree_round(grads: PyTree, layout: TreeLayout, clip: float,
     chains', which is what keeps their last-ulp contraction behaviour
     under XLA fusion (and hence bit-identity against the per-leaf jnp
     reference) stable.  Costs one extra gradient packing per step.
-    Returns (clipped_grads, raw_gnorm)."""
+    ``cast_to`` overrides the packing dtype for the norm round — the
+    segment planner passes f32 when the clip sits MID-chain on updates an
+    earlier stage already promoted (packing them at the bucket dtype
+    would silently round).  Returns (clipped_grads, raw_gnorm)."""
     parts = [_ops.chunk_sumsq(gf, backend=backend)
-             for gf in flatten(grads, layout)]
+             for gf in flatten(grads, layout, cast_to=cast_to)]
     gnorm = jnp.sqrt(sum(_leaf_values(parts, layout)))
     scale = clip / jnp.maximum(gnorm, clip)
     clipped = jax.tree.map(
@@ -474,6 +516,7 @@ def multi_tensor_step(kind: str, params: PyTree, grads: PyTree,
                       momentum: PyTree, *, lr, beta: float,
                       weight_decay: float = 0.0, eps: float = 1e-12,
                       trust: float = 0.001, clip: Optional[float] = None,
+                      nesterov: bool = False,
                       backend: str = "pallas") -> Tuple[PyTree, PyTree, dict]:
     """One fused optimizer step over the whole tree (pytree in/out).
 
@@ -497,7 +540,7 @@ def multi_tensor_step(kind: str, params: PyTree, grads: PyTree,
     u_flats = flatten(momentum, layout, cast_to=jnp.float32)
     po_flats, uo_flats, stats = multi_tensor_step_flat(
         kind, layout, p_flats, g_flats, u_flats, lr=lr, beta=beta,
-        weight_decay=weight_decay, eps=eps, trust=trust,
+        weight_decay=weight_decay, eps=eps, trust=trust, nesterov=nesterov,
         stat_gnorm=stat_gnorm, backend=backend)
     return (unflatten(po_flats, layout),
             unflatten(uo_flats, layout, keep_dtype=True), stats)
@@ -508,7 +551,8 @@ def multi_tensor_step_flat(kind: str, layout: TreeLayout,
                            g_flats: Sequence[jnp.ndarray],
                            u_flats: Sequence[jnp.ndarray], *, lr, beta: float,
                            weight_decay: float = 0.0, eps: float = 1e-12,
-                           trust: float = 0.001,
+                           trust: float = 0.001, nesterov: bool = False,
+                           suffix_clip: Optional[float] = None,
                            stat_gnorm: Optional[jnp.ndarray] = None,
                            backend: str = "pallas"
                            ) -> Tuple[List[jnp.ndarray], List[jnp.ndarray],
@@ -527,6 +571,17 @@ def multi_tensor_step_flat(kind: str, layout: TreeLayout,
     norm-emitting stage after the clip, so the decayed norm is never
     needed); sngm/lars ignore ``stat_gnorm`` for stats because their
     chains re-report the norm downstream of the clip.
+
+    ``nesterov=True`` runs the look-ahead momentum variant of the update
+    kernel (``trace(nesterov=True)`` fused).  ``suffix_clip`` compiles a
+    TRAILING ``clip_by_global_norm`` (the segment planner's
+    clip-at-suffix position): the update pass defers the parameter write
+    and emits the effective f32 direction, whose lr-scaled norm feeds
+    the interpreter's clip expression, and a third ``scale_apply``
+    launch applies the clipped step — one extra launch, agreement with
+    the interpreter at the documented "close" tolerance (the clip norm
+    associates ``lr * ||u||`` where the interpreter folds
+    ``||lr * u||``, the same lr-product association LARS already has).
     """
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
@@ -535,9 +590,13 @@ def multi_tensor_step_flat(kind: str, layout: TreeLayout,
     # ---- pass 1: squared-norm partials per bucket -------------------------
     # sngm/msgd norm the coupled-decayed gradient (g + wd*w, computed inside
     # the kernel); lars needs raw ||g|| and ||w|| per tensor instead.
+    # msgd's constant coefficients need no norm at all — pass 1 runs there
+    # only for the grad_norm stat, so it is skipped whenever a later (or
+    # earlier) clip stage supplies that stat instead.
     g_parts = []
     w_parts = []
-    if not (kind == "msgd" and stat_gnorm is not None):
+    if not (kind == "msgd" and (stat_gnorm is not None
+                                or suffix_clip is not None)):
         for b, pf, gf in zip(layout.buckets, p_flats, g_flats):
             if kind == "lars":
                 g_parts.append(_ops.chunk_sumsq(gf, backend=backend))
@@ -586,18 +645,43 @@ def multi_tensor_step_flat(kind: str, layout: TreeLayout,
 
     # ---- pass 2: fused momentum + apply per bucket -----------------------
     po_flats, uo_flats, usq_parts = [], [], []
+    apply_now = suffix_clip is None
     for b, pf, gf, uf, ac in zip(layout.buckets, p_flats, g_flats, u_flats,
                                  a_chunks):
         po, uo, usq = _ops.fused_update(pf, gf, uf, ac, c, beta=beta, wd=wd,
                                         cast_g_first=cast_g_first,
+                                        nesterov=nesterov, apply=apply_now,
                                         backend=backend)
         po_flats.append(po)
         uo_flats.append(uo)
         usq_parts.append(usq)
 
-    stats = {"grad_norm": gnorm, "lr": lr,
-             "update_norm": jnp.sqrt(sum(_leaf_values(usq_parts, layout)))}
-    return po_flats, uo_flats, stats
+    unorm = jnp.sqrt(sum(_leaf_values(usq_parts, layout)))
+    if suffix_clip is None:
+        stats = {"grad_norm": gnorm, "lr": lr, "update_norm": unorm}
+        return po_flats, uo_flats, stats
+
+    # ---- pass 3 (suffix clip): rescale the deferred direction + apply ----
+    # With apply=False pass 2 returned the effective f32 direction in
+    # ``po_flats``; the interpreter's trailing clip sees the lr-scaled
+    # step, so its norm is lr * ||direction|| (up to the documented
+    # lr-product association) and its scale feeds one scale_apply launch:
+    # ``p <- p - c*(cscale * direction)`` with c carrying the schedule lr.
+    snorm = lr * unorm
+    cscale = suffix_clip / jnp.maximum(snorm, suffix_clip)
+    out_flats, ssq_parts = [], []
+    for b, pf, eff in zip(layout.buckets, p_flats, po_flats):
+        ac = jnp.full((b.n_chunks,), cscale, jnp.float32)
+        po, ssq = _ops.scale_apply(pf, eff, ac, lr, backend=backend)
+        out_flats.append(po)
+        ssq_parts.append(ssq)
+    del ssq_parts   # the chain's update_norm stat is sched's (pre-clip)
+    # stats mirror the interpreter's left-to-right merge: the trailing
+    # clip re-reports grad_norm as the norm of ITS input (the lr-scaled
+    # update), overriding any earlier reporter; update_norm stays the
+    # schedule stage's pre-scaling report.
+    stats = {"grad_norm": snorm, "lr": lr, "update_norm": unorm}
+    return out_flats, uo_flats, stats
 
 
 # ---------------------------------------------------------------------------

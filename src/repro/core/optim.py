@@ -83,9 +83,11 @@ import jax.numpy as jnp
 
 from repro.core import transform as T
 from repro.core.multi_tensor import (
-    FlatOptState, build_layout, flatten, global_norm, init_flat_adam_state,
-    init_flat_state, leaf_sumsq, multi_tensor_step, resident_lamb_step,
-    resident_step, tree_squared_norm)
+    FlatOptState, _clip_tree_round, build_layout, ema_flats_update, flatten,
+    global_norm, init_ema_flats, init_flat_adam_state, init_flat_state,
+    leaf_sumsq, multi_tensor_lamb_step_flat, multi_tensor_step,
+    multi_tensor_step_flat, resident_lamb_step, resident_step,
+    tree_squared_norm, unflatten)
 from repro.core.schedules import Schedule, make_schedule
 
 PyTree = Any
@@ -119,7 +121,11 @@ class Optimizer:
     The state is an ``OptState`` pytree, a flat-buffer-resident
     ``FlatOptState`` (``fused="multi_tensor"``), or a ``ChainOptState``
     (interpreter-run novel chains).  ``kind`` names the fused engine kind
-    a compiled chain matched, or None for interpreter-run chains.
+    a compiled chain matched (the whole-chain kind or a segment plan's
+    tail kind), or None for interpreter-run chains.  ``plan`` carries the
+    chain compiler's ``SegmentPlan`` — the launch-accounting IR — for any
+    compiled chain, fused or not (None for optimizers built outside
+    ``compile_chain`` or under ``interpret=True``).
 
     ``step_state`` is the ``TrainState``-level entry every training loop
     should use: it consumes/produces the unified state (params + optimizer
@@ -131,6 +137,7 @@ class Optimizer:
     init: Callable[[PyTree], Any]
     step: Callable[[PyTree, Any, PyTree], Tuple[PyTree, Any, dict]]
     kind: Optional[str] = None
+    plan: Any = None
 
     def init_state(self, params: PyTree) -> "TrainState":
         """Build the unified ``TrainState``.  When ``init`` returns a
@@ -241,54 +248,123 @@ def _chain_state_of_flat(state: FlatOptState) -> T.ChainOptState:
     return T.ChainOptState(step=state.step, inner=inner)
 
 
+def _chain_state_of_chain_form(state: FlatOptState) -> T.ChainOptState:
+    """Rebuild the interpreter's ChainOptState for a segment-plan flat
+    state: the ``("chain", slots)`` form tags every stage's state, the
+    momentum/moment views come from the resident buffers, EMA shadows
+    from ``e_flats`` (in stage order), and every counter equals the step
+    (they advance in lockstep by construction)."""
+    _, slots = state.form
+    emas = state.ema_views
+    j, inner = 0, []
+    for tag in slots:
+        if tag == "trace":
+            inner.append(T.TraceState(momentum=state.momentum))
+        elif tag == "sched":
+            inner.append(T.ScaleByScheduleState(count=state.step))
+        elif tag == "adam":
+            m, v = state.moments
+            inner.append(T.ScaleByAdamState(count=state.step, m=m, v=v))
+        elif tag == "ema":
+            inner.append(T.EmaParamsState(ema=emas[j]))
+            j += 1
+        else:
+            inner.append(T.EmptyState())
+    return T.ChainOptState(step=state.step, inner=tuple(inner))
+
+
 def to_pytree(state) -> Union[OptState, "T.ChainOptState"]:
     """FlatOptState -> its pytree form, lossless: OptState (pytree
     momentum) for the momentum kinds, the interpreter's ChainOptState for
-    the Adam family (so a fused-lamb checkpoint loads straight into the
-    interpreter path).  OptState/ChainOptState pass through.  Use to hand
-    a resident state to code that expects per-leaf state (checkpoints,
-    external tooling)."""
+    the Adam family and for segment-plan chain states (so a fused
+    checkpoint loads straight into the interpreter path).
+    OptState/ChainOptState pass through.  Use to hand a resident state to
+    code that expects per-leaf state (checkpoints, external tooling)."""
     if not isinstance(state, FlatOptState):
         return state
+    if isinstance(state.form, tuple) and state.form[0] == "chain":
+        return _chain_state_of_chain_form(state)
     if state.m_flats:
         return _chain_state_of_flat(state)
     return OptState(step=state.step, momentum=state.momentum)
 
 
+def _flat_of_chain_state(state: T.ChainOptState, params: PyTree,
+                         layout) -> FlatOptState:
+    """General ChainOptState -> segment-plan ``("chain", slots)`` flat
+    form: momentum into ``u_flats`` OR Adam moments into
+    ``m_flats``/``v_flats`` (a chain carrying both has no single-slot
+    flat form), EMA shadows into ``e_flats`` in stage order."""
+    slots, traces, adams, emas = [], [], [], []
+    for s in state.inner:
+        if isinstance(s, T.TraceState):
+            slots.append("trace")
+            traces.append(s)
+        elif isinstance(s, T.ScaleByScheduleState):
+            slots.append("sched")
+        elif isinstance(s, T.ScaleByAdamState):
+            slots.append("adam")
+            adams.append(s)
+        elif isinstance(s, T.EmaParamsState):
+            slots.append("ema")
+            emas.append(s)
+        elif isinstance(s, T.EmptyState):
+            slots.append("empty")
+        else:
+            raise TypeError(
+                f"from_pytree: no flat slot for chain stage state "
+                f"{type(s).__name__}; only the canonical transform states "
+                f"(trace/sched/adam/ema/stateless) have a flat form")
+    if len(traces) > 1 or len(adams) > 1 or (traces and adams):
+        raise TypeError(
+            "from_pytree: only canonical single-momentum chain states have "
+            "a flat form (at most one trace XOR one scale_by_adam); got "
+            f"inner types {[type(s).__name__ for s in state.inner]}")
+    u_flats = (tuple(flatten(traces[0].momentum, layout,
+                             cast_to=jnp.float32)) if traces else ())
+    if adams:
+        m_flats = tuple(flatten(adams[0].m, layout, cast_to=jnp.float32))
+        v_flats = tuple(flatten(adams[0].v, layout, cast_to=jnp.float32))
+    else:
+        m_flats, v_flats = (), ()
+    return FlatOptState(
+        step=state.step, p_flats=tuple(flatten(params, layout)),
+        u_flats=u_flats, layout=layout, m_flats=m_flats, v_flats=v_flats,
+        e_flats=tuple(tuple(flatten(e.ema, layout, cast_to=jnp.float32))
+                      for e in emas),
+        form=("chain", tuple(slots)))
+
+
 def from_pytree(state, params: PyTree) -> FlatOptState:
     """pytree form -> FlatOptState (flat-buffer-resident), lossless;
     FlatOptState passes through.  ``params`` supplies the layout and the
-    resident parameter buffers.  A ChainOptState is accepted when it has
-    the canonical Adam-family shape (one ScaleByAdamState, schedule
-    last); its per-stage counters are assumed equal to the step, which
-    the chain update guarantees."""
+    resident parameter buffers.  A ChainOptState with the canonical
+    Adam-family shape (one ScaleByAdamState, schedule last, all other
+    stages stateless) keeps the ``("lamb", ...)`` form; any other
+    canonical-stage chain state (momentum / EMA / mixed) lands in the
+    segment planner's ``("chain", slots)`` form.  Per-stage counters are
+    assumed equal to the step, which the chain update guarantees."""
     if isinstance(state, FlatOptState):
         return state
     layout = build_layout(params)
     if isinstance(state, T.ChainOptState):
         adam_i = [i for i, s in enumerate(state.inner)
                   if isinstance(s, T.ScaleByAdamState)]
-        # every other stage must be STATELESS: a flat form that silently
-        # dropped a TraceState/EmaParamsState would corrupt a resumed run
         others_ok = all(isinstance(s, T.EmptyState)
                         for i, s in enumerate(state.inner)
                         if i not in adam_i and i != len(state.inner) - 1)
-        if len(adam_i) != 1 or not others_ok or not isinstance(
-                state.inner[-1], T.ScaleByScheduleState):
-            raise TypeError(
-                "from_pytree: only the canonical (clip ->) scale_by_adam "
-                "-> stateless... -> scale_by_schedule chain state has a "
-                "flat form; "
-                f"got inner types {[type(s).__name__ for s in state.inner]}")
-        adam = state.inner[adam_i[0]]
-        n_mid = len(state.inner) - adam_i[0] - 2
-        return FlatOptState(
-            step=state.step,
-            p_flats=tuple(flatten(params, layout)),
-            u_flats=(), layout=layout,
-            m_flats=tuple(flatten(adam.m, layout, cast_to=jnp.float32)),
-            v_flats=tuple(flatten(adam.v, layout, cast_to=jnp.float32)),
-            form=("lamb", adam_i[0], n_mid))
+        if (len(adam_i) == 1 and others_ok
+                and isinstance(state.inner[-1], T.ScaleByScheduleState)):
+            adam = state.inner[adam_i[0]]
+            n_mid = len(state.inner) - adam_i[0] - 2
+            return FlatOptState(
+                step=state.step,
+                p_flats=tuple(flatten(params, layout)),
+                u_flats=(), layout=layout,
+                m_flats=tuple(flatten(adam.m, layout, cast_to=jnp.float32)),
+                v_flats=tuple(flatten(adam.v, layout, cast_to=jnp.float32)),
+                form=("lamb", adam_i[0], n_mid))
+        return _flat_of_chain_state(state, params, layout)
     return FlatOptState(
         step=state.step,
         p_flats=tuple(flatten(params, layout)),
@@ -341,9 +417,14 @@ def _clip_tree(grads: PyTree, clip: float):
 
 def _jnp_kind_step(kind: str, grads: PyTree, momentum: PyTree, params: PyTree,
                    *, lr, beta: float, weight_decay: float, eps: float,
-                   trust: float, clip: Optional[float] = None):
+                   trust: float, clip: Optional[float] = None,
+                   nesterov: bool = False):
     """Pure-jnp reference step for one engine kind.  Returns
-    (new_params, new_momentum, stats)."""
+    (new_params, new_momentum, stats).  ``nesterov=True`` applies the
+    interpreter's look-ahead momentum: the per-kind ``upd`` expression is
+    applied a second time with the fresh momentum in place of the old
+    (exactly ``trace(nesterov=True)``'s second tree.map); the momentum
+    STATE stays the plain trace."""
     raw_gnorm = None
     if clip is not None:
         grads, raw_gnorm = _clip_tree(grads, clip)
@@ -358,32 +439,34 @@ def _jnp_kind_step(kind: str, grads: PyTree, momentum: PyTree, params: PyTree,
             return beta * v + lr * local * (g + weight_decay * w)
 
         new_u = jax.tree.map(upd, momentum, grads, params)
+        out_u = (jax.tree.map(upd, new_u, grads, params) if nesterov
+                 else new_u)
         new_p = jax.tree.map(lambda w, v: (w - v).astype(w.dtype),
-                             params, new_u)
+                             params, out_u)
         gnorm = global_norm(grads)
     else:
         g = _decayed(grads, params, weight_decay)
         gnorm = global_norm(g)
         if kind == "sngm_global":
             inv = 1.0 / (gnorm + eps)
-            new_u = jax.tree.map(
-                lambda u, gi: beta * u + gi.astype(jnp.float32) * inv,
-                momentum, g)
+            def upd(u, gi):
+                return beta * u + gi.astype(jnp.float32) * inv
         elif kind == "sngm_per_tensor":
             def upd(u, gi):
                 n = jnp.sqrt(leaf_sumsq(gi))
                 return beta * u + gi.astype(jnp.float32) * (1.0 / (n + eps))
-            new_u = jax.tree.map(upd, momentum, g)
         else:  # msgd
-            new_u = jax.tree.map(
-                lambda v, gi: beta * v + gi.astype(jnp.float32), momentum, g)
+            def upd(v, gi):
+                return beta * v + gi.astype(jnp.float32)
+        new_u = jax.tree.map(upd, momentum, g)
+        out_u = jax.tree.map(upd, new_u, g) if nesterov else new_u
         new_p = jax.tree.map(lambda w, u: (w - lr * u).astype(w.dtype),
-                             params, new_u)
+                             params, out_u)
     if clip is not None and kind == "msgd":
         # a clipped msgd chain has no norm-emitting stage after the clip,
         # so the interpreter reports the RAW gradient norm
         gnorm = raw_gnorm
-    stats = {"grad_norm": gnorm, "lr": lr, "update_norm": global_norm(new_u)}
+    stats = {"grad_norm": gnorm, "lr": lr, "update_norm": global_norm(out_u)}
     return new_p, new_u, stats
 
 
@@ -420,6 +503,7 @@ def _per_leaf_kind_step(kind: str, grads: PyTree, momentum: PyTree,
 def _kind_optimizer(kind: str, schedule: Schedule, *, beta: float,
                     weight_decay: float = 0.0, eps: float = 1e-12,
                     trust: float = 0.001, clip: Optional[float] = None,
+                    nesterov: bool = False,
                     fused_mode: Optional[str] = None,
                     name: Optional[str] = None) -> Optimizer:
     """Build the Optimizer for one fused-engine kind in the requested
@@ -428,7 +512,9 @@ def _kind_optimizer(kind: str, schedule: Schedule, *, beta: float,
     implementation instead of re-implementing the four-way
     jnp/per_leaf/multi_tensor/resident dispatch.  ``clip`` prepends the
     two-round-norm clip_by_global_norm compilation (engine paths) or the
-    equivalent leaf-wise pre-scale (jnp path)."""
+    equivalent leaf-wise pre-scale (jnp path); ``nesterov`` fuses
+    ``trace(nesterov=True)`` into the update pass (jnp and multi_tensor
+    modes; the per-leaf kernels have no look-ahead variant)."""
     if fused_mode == "per_leaf" and kind not in _PER_LEAF_KINDS:
         raise ValueError(f"fused='per_leaf' is not available for kind "
                          f"{kind!r}; only {_PER_LEAF_KINDS} have per-leaf "
@@ -436,8 +522,12 @@ def _kind_optimizer(kind: str, schedule: Schedule, *, beta: float,
     if fused_mode == "per_leaf" and clip is not None:
         raise ValueError("fused='per_leaf' has no clip round; use "
                          "fused='multi_tensor' for clip-prefixed chains")
+    if fused_mode == "per_leaf" and nesterov:
+        raise ValueError("fused='per_leaf' has no nesterov variant; use "
+                         "fused='multi_tensor' or fused=None for "
+                         "trace(nesterov=True) chains")
     kw = dict(beta=beta, weight_decay=weight_decay, eps=eps, trust=trust,
-              clip=clip)
+              clip=clip, nesterov=nesterov)
 
     def step_fn(grads, state, params):
         lr = schedule(state.step)
@@ -546,6 +636,133 @@ def _lamb_optimizer(schedule: Schedule, *, b1: float, b2: float, eps: float,
 
 
 # ---------------------------------------------------------------------------
+# segment-plan execution: jnp prefix stages + one fused engine tail +
+# resident EMA slots, on the ("chain", slots) FlatOptState form
+# ---------------------------------------------------------------------------
+
+def _packing_cast(updates: PyTree, layout) -> Optional[Any]:
+    """Packing dtype for a plan tail's update tree: None when every leaf
+    still matches its layout (parameter) dtype, f32 when an earlier stage
+    promoted every leaf (packing promoted updates at the bucket dtype
+    would silently round them back)."""
+    leaves = jax.tree_util.tree_leaves(updates)
+    if all(leaves[s.index].dtype == s.dtype
+           for b in layout.buckets for s in b.segments):
+        return None
+    if all(l.dtype == jnp.float32 for l in leaves):
+        return jnp.float32
+    raise ValueError(
+        "segment plan tail got an update tree that neither matches the "
+        "parameter dtypes leaf-for-leaf nor is uniformly f32; got dtypes "
+        f"{sorted({jnp.dtype(l.dtype).name for l in leaves})}")
+
+
+def _plan_optimizer(tx: "T.GradientTransform", plan: "T.SegmentPlan", *,
+                    name: Optional[str] = None) -> Optimizer:
+    """``compile_chain``'s target for segment plans (fused tail + jnp
+    prefix + EMA slots) under ``fused="multi_tensor"``.
+
+    State is a ``FlatOptState`` with the ``("chain", slots)`` form: the
+    tail's momentum (or Adam moments) resident in ``u_flats``
+    (``m_flats``/``v_flats``), one f32 shadow bucket set per
+    ``ema_params`` stage in ``e_flats``.  Each step runs the plan's jnp
+    prefix nodes leafwise (interpreter-exact, zero launches), folds a
+    tail-adjacent clip through the two-round-norm machinery, lowers the
+    tail onto the engine (nesterov / suffix-clip variants included), and
+    advances every EMA slot elementwise on the PRE-step ``p_flats``.
+    Stats merge left-to-right exactly like the interpreter; a tail with
+    no norm-emitting stage (msgd/lamb) takes its ``grad_norm`` from the
+    prefix's report or the interpreter's raw-gradient fallback.  A
+    restored ``ChainOptState`` fed here steps on the interpreter (the
+    lamb cross-form precedent); convert with ``from_pytree`` to get back
+    on the engine, which is what the launcher does on ``--resume``."""
+    fused_node = plan.fused
+    kind = fused_node.kind
+    kp = dict(fused_node.kwargs)
+    schedule = kp["schedule"]
+    jnp_nodes = tuple(n for n in plan.nodes if n.op == "jnp")
+    ema_nodes = tuple(n for n in plan.nodes if n.op == "ema")
+    form = ("chain", plan.slots)
+
+    def init(params):
+        if kind == "lamb":
+            st = init_flat_adam_state(params, form=form)
+        else:
+            st = dataclasses.replace(init_flat_state(params), form=form)
+        if ema_nodes:
+            st = dataclasses.replace(st, e_flats=tuple(
+                init_ema_flats(params, st.layout) for _ in ema_nodes))
+        return st
+
+    def flat_step(grads, state, params):
+        layout = state.layout
+        lr = schedule(state.step)
+        # the prefix stages' params argument; under donation XLA schedules
+        # these reads (and the EMA reads below) before the aliased write
+        pview = params if params is not None else unflatten(state.p_flats,
+                                                            layout)
+        updates, stats = grads, {}
+        for node in jnp_nodes:
+            updates, _, st = node.transform.update(updates, T.EmptyState(),
+                                                   pview)
+            stats.update(st)
+        cast = _packing_cast(updates, layout)
+        stat_gnorm = None
+        if kp.get("clip") is not None:
+            updates, stat_gnorm = _clip_tree_round(
+                updates, layout, float(kp["clip"]), "pallas", cast_to=cast)
+        g_flats = flatten(updates, layout, cast_to=cast)
+        if kind == "lamb":
+            if stat_gnorm is None:
+                # the tail has no norm-emitting stage: keep the prefix's
+                # grad_norm report, or the interpreter's raw fallback
+                stat_gnorm = stats.get("grad_norm", global_norm(grads))
+            po, mo, vo, tstats = multi_tensor_lamb_step_flat(
+                layout, state.p_flats, g_flats, state.m_flats,
+                state.v_flats, count=state.step, lr=lr, b1=kp["b1"],
+                b2=kp["b2"], eps=kp["eps"],
+                weight_decay=kp["weight_decay"],
+                trust_eps=kp["trust_eps"], stat_gnorm=stat_gnorm)
+            uo, mo, vo = (), tuple(mo), tuple(vo)
+        else:
+            if kind == "msgd" and stat_gnorm is None:
+                stat_gnorm = stats.get("grad_norm", global_norm(grads))
+            po, uo, tstats = multi_tensor_step_flat(
+                kind, layout, state.p_flats, g_flats, state.u_flats,
+                lr=lr, beta=kp["beta"], weight_decay=kp["weight_decay"],
+                eps=kp["eps"], trust=kp["trust"],
+                nesterov=kp.get("nesterov", False),
+                suffix_clip=kp.get("suffix_clip"), stat_gnorm=stat_gnorm)
+            uo, mo, vo = tuple(uo), (), ()
+        stats.update(tstats)
+        new_e = tuple(ema_flats_update(e, state.p_flats, n.arg("decay"))
+                      for e, n in zip(state.e_flats, ema_nodes))
+        new_state = FlatOptState(step=state.step + 1, p_flats=tuple(po),
+                                 u_flats=uo, layout=layout, m_flats=mo,
+                                 v_flats=vo, e_flats=new_e,
+                                 form=state.form)
+        view = unflatten(po, layout) if params is not None else None
+        return view, new_state, stats
+
+    def step_fn(grads, state, params):
+        if isinstance(state, FlatOptState):
+            if state.form != form:
+                raise TypeError(
+                    f"segment-plan optimizer {name!r} got a FlatOptState "
+                    f"with form {state.form!r}, expected {form!r}; restore "
+                    f"through from_pytree against the same chain")
+            return flat_step(grads, state, params)
+        if not isinstance(state, T.ChainOptState):
+            raise TypeError(
+                f"segment-plan optimizer expects a FlatOptState or "
+                f"ChainOptState, got {type(state).__name__}")
+        return T.interpreter_step(tx, grads, state, params)
+
+    return Optimizer(name or f"chain[{kind}]", init, step_fn, kind=kind,
+                     plan=plan)
+
+
+# ---------------------------------------------------------------------------
 # SNGM — the paper's Algorithm 1
 # ---------------------------------------------------------------------------
 
@@ -554,6 +771,8 @@ def sngm(schedule: Schedule,
          weight_decay: float = 0.0,
          eps: float = 1e-12,
          norm_mode: str = "global",
+         nesterov: bool = False,
+         ema_decay: Optional[float] = None,
          use_pallas: bool = False,
          fused: Optional[str] = None) -> Optimizer:
     """Stochastic Normalized Gradient descent with Momentum (Algorithm 1).
@@ -567,6 +786,11 @@ def sngm(schedule: Schedule,
       * "per_tensor" — beyond-paper block-normalized variant (LARS-
                        flavoured); each tensor normalized by its own norm.
                        Lemma 4 then holds per tensor.
+    ``nesterov`` — look-ahead momentum (``trace(beta, nesterov=True)``);
+    the engine fuses it into the update pass, so launch counts are
+    unchanged.  ``ema_decay`` — keep an exponential moving average of the
+    params (``ema_params`` stage); with ``fused="multi_tensor"`` the
+    shadow params are resident f32 flat slots (``FlatOptState.e_flats``).
     ``fused`` / ``use_pallas`` — see module docstring; numerics identical
     to the jnp path (validated bitwise in tests/test_multi_tensor.py).
     """
@@ -578,10 +802,13 @@ def sngm(schedule: Schedule,
                          "use fused='multi_tensor' for per_tensor")
     normalize = (T.normalize_by_global_norm if norm_mode == "global"
                  else T.normalize_per_tensor)
-    tx = T.chain(T.add_decayed_weights(weight_decay),
-                 normalize(eps),
-                 T.trace(beta),
-                 T.scale_by_schedule(schedule))
+    stages = [T.add_decayed_weights(weight_decay),
+              normalize(eps),
+              T.trace(beta, nesterov=nesterov),
+              T.scale_by_schedule(schedule)]
+    if ema_decay is not None:
+        stages.append(T.ema_params(ema_decay))
+    tx = T.chain(*stages)
     return T.compile_chain(tx, fused=fused_mode, name=f"sngm[{norm_mode}]")
 
 
@@ -605,12 +832,15 @@ def sngd(schedule: Schedule,
 def msgd(schedule: Schedule,
          beta: float = 0.9,
          weight_decay: float = 0.0,
+         nesterov: bool = False,
          use_pallas: bool = False,
          fused: Optional[str] = None) -> Optimizer:
-    """Momentum SGD:  v_{t+1} = beta v_t + g_t ;  w_{t+1} = w_t - eta v_{t+1}."""
+    """Momentum SGD:  v_{t+1} = beta v_t + g_t ;  w_{t+1} = w_t - eta v_{t+1}.
+    ``nesterov=True`` applies the look-ahead update w -= eta (beta v_{t+1}
+    + g_t); the engine fuses it into the same update pass."""
     fused_mode = _resolve_fused(use_pallas, fused, allowed=("multi_tensor",))
     tx = T.chain(T.add_decayed_weights(weight_decay),
-                 T.trace(beta),
+                 T.trace(beta, nesterov=nesterov),
                  T.scale_by_schedule(schedule))
     return T.compile_chain(tx, fused=fused_mode, name="msgd")
 

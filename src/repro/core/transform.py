@@ -15,23 +15,33 @@ This module makes that pipeline a first-class object: a
 Every norm-taking transform uses the engine's canonical ``leaf_sumsq``
 chunked reduction, so numerics are path-independent by construction.
 
-Execution is two-tier:
+Execution is three-tier (the segment compiler):
 
-  * ``compile_chain`` pattern-matches the chain's shape against the
-    multi-tensor engine's fused kinds (``sngm_global``,
-    ``sngm_per_tensor``, ``msgd``, ``lars``, ``lamb``), each optionally
-    prefixed by ``clip_by_global_norm`` (compiled as a two-round norm
-    pass, not an interpreter fallback).  A match compiles to the
-    kind-level optimizer in ``core.optim`` — the bit-exact jnp reference
-    path, the O(1)-launch Pallas engine, and the ``FlatOptState``
-    resident fast path all stay available, exactly as before the chain
-    API existed.
-  * A chain that matches no kind falls back to the **interpreter**: the
+  * ``match_chain`` recognizes whole chains shaped like the engine's
+    fused kinds (``sngm_global``, ``sngm_per_tensor``, ``msgd``,
+    ``lars``, ``lamb``), each optionally prefixed by
+    ``clip_by_global_norm`` (compiled as a two-round norm pass) and —
+    for the momentum kinds — with ``trace(nesterov=True)`` fused into
+    the update kernel.  A whole match compiles to the kind-level
+    optimizer in ``core.optim`` — the bit-exact jnp reference path, the
+    O(1)-launch Pallas engine, and the ``FlatOptState`` resident fast
+    path all stay available, exactly as before the chain API existed.
+  * Everything else goes through ``plan_chain``, which builds a
+    ``SegmentPlan``: the LONGEST suffix of the chain matching a fused
+    kind becomes one engine-lowered segment (with a mid-chain clip
+    folded into its coefficient round and a TRAILING clip compiled as a
+    deferred-apply third pass), ``ema_params`` stages anywhere become
+    resident ``FlatOptState.e_flats`` slots (zero launches), and the
+    remaining verifiably-stateless prefix stages interleave as plain
+    jnp nodes between input and segment — novel stages no longer
+    de-fuse their neighbors.  ``compile_chain`` hands fusible plans to
+    ``core.optim._plan_optimizer`` when ``fused="multi_tensor"``.
+  * A chain with no fusible tail falls back to the **interpreter**: the
     transforms run leaf-wise in pure jnp, state is a ``ChainOptState``
     (a pytree, so it jits / shards / checkpoints like any other), and the
     final update is applied as ``w <- (w - u).astype(w.dtype)``.  If a
-    fused mode was requested for such a chain a ``UserWarning`` is
-    emitted — novel compositions train correctly but without fusion.
+    fused mode was requested for such a chain a ``UserWarning`` names
+    the exact stage that blocked fusion and the degenerate plan.
 
 Both tiers consume/produce the unified ``TrainState``
 (``core.optim``) through ``Optimizer.init_state`` / ``step_state``:
@@ -383,8 +393,9 @@ def chain(*transforms: GradientTransform) -> GradientTransform:
 
 # Chain shapes the compiler recognizes, mapped to the engine's fused kinds.
 # '?'-suffixed stages are optional: ``add_decayed_weights`` absent == wd 0,
-# ``clip_by_global_norm`` absent == no clip round.  A nesterov trace, an
-# adam eps <= 0, or any other deviation falls through to the interpreter.
+# ``clip_by_global_norm`` absent == no clip round.  A nesterov trace fuses
+# into the momentum kinds' update kernel; an adam eps <= 0 (pad invariance)
+# or any other deviation falls through to the segment planner.
 _PATTERNS = (
     ("sngm_global",
      ("clip_by_global_norm?", "add_decayed_weights?",
@@ -419,104 +430,339 @@ def _try_match(parts, pattern):
     return got if i == len(parts) else None
 
 
+def _kind_params(kind: str, got: Dict[str, GradientTransform]
+                 ) -> Dict[str, Any]:
+    """Extract the kind-level optimizer parameters from a pattern match."""
+    kp = {"schedule": got["scale_by_schedule"].get("schedule"),
+          "clip": None}
+    if "clip_by_global_norm" in got:
+        kp["clip"] = got["clip_by_global_norm"].get("max_norm")
+    wd = (got["add_decayed_weights"].get("weight_decay")
+          if "add_decayed_weights" in got else 0.0)
+    if kind == "lamb":
+        adam = got["scale_by_adam"]
+        kp.update(b1=adam.get("b1"), b2=adam.get("b2"),
+                  eps=adam.get("eps"), weight_decay=wd,
+                  trust_eps=got["scale_by_trust_ratio"].get("eps"))
+        return kp
+    kp.update(beta=got["trace"].get("beta"),
+              nesterov=bool(got["trace"].get("nesterov")),
+              weight_decay=wd, eps=1e-12, trust=0.001)
+    for src in ("normalize_by_global_norm", "normalize_per_tensor"):
+        if src in got:
+            kp["eps"] = got[src].get("eps")
+    if "trust_ratio" in got:
+        tr = got["trust_ratio"]
+        kp.update(trust=tr.get("trust"),
+                  weight_decay=tr.get("weight_decay"),
+                  eps=tr.get("eps"))
+    return kp
+
+
 def match_chain(tx: GradientTransform) -> Optional[Tuple[str, Dict[str, Any]]]:
-    """Pattern-match a chain onto a fused kind.  Returns ``(kind,
+    """Pattern-match a WHOLE chain onto a fused kind.  Returns ``(kind,
     params)``: for the momentum kinds params are ``{schedule, beta,
-    weight_decay, eps, trust, clip}``, for ``lamb`` they are ``{schedule,
-    b1, b2, eps, weight_decay, trust_eps, clip}``.  Returns None when the
-    chain is a novel composition."""
+    nesterov, weight_decay, eps, trust, clip}``, for ``lamb`` they are
+    ``{schedule, b1, b2, eps, weight_decay, trust_eps, clip}``.  Returns
+    None when the chain is not one of the five whole-chain shapes —
+    callers should then consult ``plan_chain``, which fuses the longest
+    canonical SUFFIX instead of requiring a whole match (migration note:
+    before the segment compiler, ``match_chain is None`` meant
+    "interpreter-only"; now it only means "not a whole-chain kind", and
+    a ``trace(nesterov=True)`` momentum chain — previously rejected —
+    matches with ``params["nesterov"] = True``)."""
     parts = tx.parts if tx.parts else (tx,)
     for kind, pattern in _PATTERNS:
         got = _try_match(parts, pattern)
         if got is None:
             continue
-        if "trace" in got and got["trace"].get("nesterov"):
-            return None                       # no fused nesterov kind
-        kp = {"schedule": got["scale_by_schedule"].get("schedule"),
-              "clip": None}
-        if "clip_by_global_norm" in got:
-            kp["clip"] = got["clip_by_global_norm"].get("max_norm")
-        wd = (got["add_decayed_weights"].get("weight_decay")
-              if "add_decayed_weights" in got else 0.0)
-        if kind == "lamb":
-            adam = got["scale_by_adam"]
-            if adam.get("eps") <= 0.0:
-                return None   # engine pad invariance needs eps > 0
-            kp.update(b1=adam.get("b1"), b2=adam.get("b2"),
-                      eps=adam.get("eps"), weight_decay=wd,
-                      trust_eps=got["scale_by_trust_ratio"].get("eps"))
-            return kind, kp
-        kp.update(beta=got["trace"].get("beta"), weight_decay=wd,
-                  eps=1e-12, trust=0.001)
-        for src in ("normalize_by_global_norm", "normalize_per_tensor"):
-            if src in got:
-                kp["eps"] = got[src].get("eps")
-        if "trust_ratio" in got:
-            tr = got["trust_ratio"]
-            kp.update(trust=tr.get("trust"),
-                      weight_decay=tr.get("weight_decay"),
-                      eps=tr.get("eps"))
-        return kind, kp
+        if kind == "lamb" and got["scale_by_adam"].get("eps") <= 0.0:
+            return None   # engine pad invariance needs eps > 0
+        return kind, _kind_params(kind, got)
     return None
+
+
+# ---------------------------------------------------------------------------
+# the segment planner: longest canonical suffix -> one fused engine segment
+# ---------------------------------------------------------------------------
+
+# transforms the planner may leave in a plan's jnp prefix without probing:
+# stateless by construction, with interpreter-exact leafwise updates
+_STATELESS_NAMES = frozenset((
+    "add_decayed_weights", "normalize_by_global_norm", "normalize_per_tensor",
+    "clip_by_global_norm", "trust_ratio", "scale_by_trust_ratio"))
+
+# per-stage state tags recorded in FlatOptState's ("chain", slots) form
+_SLOT_TAGS = {"trace": "trace", "scale_by_schedule": "sched",
+              "scale_by_adam": "adam", "ema_params": "ema"}
+
+# kinds whose apply pass carries the schedule lr in the shared scalar ``c``
+# — the only ones a TRAILING clip can fold into (the deferred-apply pass 3
+# rescales c*u; lars bakes lr into its per-chunk coefficients and lamb into
+# its scale_apply, so a suffix clip would double-count it)
+_SUFFIX_CLIP_KINDS = ("sngm_global", "sngm_per_tensor", "msgd")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanNode:
+    """One node of a ``SegmentPlan``.
+
+    ``op`` is ``"jnp"`` (a stateless prefix stage run leafwise,
+    interpreter-exact, zero launches), ``"ema"`` (an ``ema_params``
+    stage compiled to a resident ``FlatOptState.e_flats`` slot, zero
+    launches), or ``"fused"`` (the engine-lowered tail segment).
+    ``stages`` are the chain indices the node covers; ``launches`` is
+    the node's engine launch count per dtype bucket per step."""
+    op: str
+    stages: Tuple[int, ...]
+    label: str
+    launches: int
+    transform: Optional[GradientTransform] = None   # op == "jnp"
+    kind: Optional[str] = None                      # op == "fused"
+    kwargs: Tuple[Tuple[str, Any], ...] = ()        # op in ("fused", "ema")
+
+    def arg(self, key: str, default=None):
+        return dict(self.kwargs).get(key, default)
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentPlan:
+    """The segment compiler's IR: what ``compile_chain`` executes and what
+    launch accounting / tests / benchmarks inspect.
+
+    ``nodes`` run in chain order; ``slots`` tags every ORIGINAL chain
+    stage's state ("empty"|"trace"|"sched"|"adam"|"ema") — the
+    ``FlatOptState`` form aux a plan-compiled optimizer carries, which is
+    what makes ``to_pytree``/``from_pytree`` lossless for plan states.
+    ``kind`` is the fused tail's engine kind, or None when the chain has
+    no fusible suffix (then ``blocker`` names the (index, stage-name)
+    that broke fusion and the nodes merely describe the all-interpreter
+    fallback)."""
+    nodes: Tuple[PlanNode, ...]
+    slots: Tuple[str, ...]
+    kind: Optional[str]
+    blocker: Optional[Tuple[int, str]] = None
+
+    @property
+    def fused(self) -> Optional[PlanNode]:
+        return next((n for n in self.nodes if n.op == "fused"), None)
+
+    def launches_per_bucket(self) -> int:
+        """Engine launches per step per dtype bucket (multiply by the
+        layout's bucket count for the per-step total)."""
+        return sum(n.launches for n in self.nodes)
+
+    def describe(self) -> str:
+        return " -> ".join(n.label for n in self.nodes)
+
+
+def _match_tail(parts) -> Optional[Tuple[str, Dict[str, Any], int,
+                                         Optional[float]]]:
+    """Longest suffix of ``parts`` matching a fused-kind pattern,
+    optionally absorbing ONE trailing ``clip_by_global_norm`` into the
+    kinds whose apply pass carries the lr (compiled as the deferred-apply
+    suffix-clip pass).  Returns (kind, got, start, suffix_clip) or None."""
+    suffix_clip = None
+    body = list(parts)
+    if body and body[-1].name == "clip_by_global_norm":
+        suffix_clip = body[-1].get("max_norm")
+        body = body[:-1]
+    patterns = (_PATTERNS if suffix_clip is None else
+                tuple((k, p) for k, p in _PATTERNS
+                      if k in _SUFFIX_CLIP_KINDS))
+    for start in range(len(body)):
+        for kind, pattern in patterns:
+            got = _try_match(body[start:], pattern)
+            if got is None:
+                continue
+            if kind == "lamb" and got["scale_by_adam"].get("eps") <= 0.0:
+                continue
+            return kind, got, start, suffix_clip
+    return None
+
+
+def _is_stateless(p: GradientTransform) -> bool:
+    """Whether a stage can interleave as a jnp plan node: known-stateless
+    by name, or its ``init`` provably returns ``EmptyState`` (probed on an
+    empty pytree, which every ``_stateless``-built transform ignores)."""
+    if p.name in _STATELESS_NAMES:
+        return True
+    try:
+        return isinstance(p.init({}), EmptyState)
+    except Exception:
+        return False
+
+
+def _fused_launches(kind: str, kp: Dict[str, Any], whole: bool) -> int:
+    """Engine launches per dtype bucket for one fused segment.  ``whole``
+    marks a plan equivalent to a whole-chain match (executed by the
+    kind-level optimizer, where msgd runs its norm pass for the grad_norm
+    stat; a plan-executed msgd tail receives that stat from the prefix or
+    the jnp fallback and skips pass 1)."""
+    if kind == "lamb":
+        return 2 + (1 if kp.get("clip") is not None else 0)
+    n = 1                                        # fused update pass
+    if kp.get("clip") is not None:
+        n += 1                                   # raw-norm clip round
+    if kp.get("suffix_clip") is not None:
+        n += 1                                   # deferred-apply rescale
+    if kind == "lars":
+        n += 2                                   # ||g|| and ||w|| rounds
+    elif kind in ("sngm_global", "sngm_per_tensor"):
+        n += 1                                   # normalization norm round
+    elif (whole and kp.get("clip") is None
+          and kp.get("suffix_clip") is None):
+        n += 1                                   # msgd grad_norm stat pass
+    return n
+
+
+def plan_chain(tx: GradientTransform) -> SegmentPlan:
+    """Compile a chain to a ``SegmentPlan``: ``ema_params`` stages
+    (position-independent — they read the PRE-step params and pass
+    updates through) become resident-slot nodes, the longest canonical
+    suffix of what remains becomes one fused engine segment, and the
+    stages before it interleave as jnp nodes if they are verifiably
+    stateless.  Always returns a plan; ``plan.kind is None`` (with
+    ``plan.blocker`` set) marks a chain that can only interpret."""
+    parts = tx.parts if tx.parts else (tx,)
+    slots = tuple(_SLOT_TAGS.get(p.name, "empty") for p in parts)
+
+    def no_plan(blocker):
+        nodes = tuple(PlanNode("jnp", (i,), f"interp:{p.name}", 0)
+                      for i, p in enumerate(parts))
+        return SegmentPlan(nodes=nodes, slots=slots, kind=None,
+                           blocker=blocker)
+
+    indexed = list(enumerate(parts))
+    core = [(i, p) for i, p in indexed if p.name != "ema_params"]
+    emas = [(i, p) for i, p in indexed if p.name == "ema_params"]
+    if not core:
+        return no_plan((indexed[-1][0], indexed[-1][1].name))
+    tail = _match_tail([p for _, p in core])
+    if tail is None:
+        # fused tails end in schedule/trace(/clip): blame the last stage
+        return no_plan((core[-1][0], core[-1][1].name))
+    kind, got, start, suffix_clip = tail
+    for i, p in core[:start]:
+        if not _is_stateless(p):
+            return no_plan((i, p.name))
+
+    kp = _kind_params(kind, got)
+    if suffix_clip is not None:
+        kp["suffix_clip"] = suffix_clip
+    whole = start == 0 and not emas and suffix_clip is None
+    marks = "".join(
+        ["+clip" if kp.get("clip") is not None else "",
+         "+suffix_clip" if suffix_clip is not None else "",
+         "+nesterov" if kp.get("nesterov") else ""])
+    nodes = [PlanNode("jnp", (i,), f"jnp:{p.name}", 0, transform=p)
+             for i, p in core[:start]]
+    nodes += [PlanNode("ema", (i,), f"ema[{j}]:{p.get('decay')}", 0,
+                       kwargs=(("decay", p.get("decay")),))
+              for j, (i, p) in enumerate(emas)]
+    nodes.append(PlanNode(
+        "fused", tuple(i for i, _ in core[start:]), f"fused:{kind}{marks}",
+        _fused_launches(kind, kp, whole), kind=kind,
+        kwargs=tuple(kp.items())))
+    nodes.sort(key=lambda n: n.stages[0])
+    return SegmentPlan(nodes=tuple(nodes), slots=slots, kind=kind)
+
+
+def interpreter_step(tx: GradientTransform, grads, state: ChainOptState,
+                     params):
+    """One jnp-interpreter chain step — the oracle every compiled path is
+    validated against, shared by ``compile_chain``'s interpreter
+    optimizer and the fused optimizers' cross-form fallback (a restored
+    ``ChainOptState`` fed to a fused optimizer steps here)."""
+    if params is None:
+        raise TypeError(
+            "interpreter-run chains carry no resident parameter "
+            "buffers; build the TrainState with params (opt.init_state "
+            "does this — only FlatOptState owners set params=None)")
+    updates, inner, stats = tx.update(grads, state.inner, params)
+    new_p = jax.tree.map(lambda w, u: (w - u).astype(w.dtype),
+                         params, updates)
+    stats = dict(stats)
+    if "grad_norm" not in stats:
+        stats["grad_norm"] = global_norm(grads)
+    if "update_norm" not in stats:
+        stats["update_norm"] = global_norm(updates)
+    if "lr" not in stats:
+        stats["lr"] = jnp.float32(float("nan"))
+    return new_p, ChainOptState(state.step + 1, inner), stats
 
 
 def compile_chain(tx: GradientTransform, *, fused: Optional[str] = None,
                   name: Optional[str] = None, interpret: bool = False):
     """Compile a chain into an ``Optimizer``.
 
-    Known shapes (``match_chain``) compile onto the kind-level optimizer:
-    bit-identical to the pre-chain monolithic implementations in every
-    execution mode — pure jnp, ``fused="per_leaf"``,
+    Whole-chain shapes (``match_chain``) compile onto the kind-level
+    optimizer: bit-identical to the pre-chain monolithic implementations
+    in every execution mode — pure jnp, ``fused="per_leaf"``,
     ``fused="multi_tensor"``, and the ``FlatOptState`` resident path with
-    its O(1) Pallas launches per step.  Novel shapes run on the jnp
-    interpreter (``ChainOptState``); requesting a fused mode for one
-    warns and falls back rather than silently changing numerics.
-    ``interpret=True`` skips the matcher and runs ANY chain on the
-    interpreter — the oracle the compiler is validated against.
+    its O(1) Pallas launches per step.  Other chains go through
+    ``plan_chain``: a plan with a fused tail runs on the multi-tensor
+    engine under ``fused="multi_tensor"`` (resident state, jnp prefix
+    stages interleaved), and on the interpreter otherwise.  A chain with
+    no fusible tail runs on the jnp interpreter (``ChainOptState``);
+    requesting a fused mode for one warns — naming the stage that broke
+    fusion — and falls back rather than silently changing numerics.
+    ``interpret=True`` skips the compiler entirely and runs ANY chain on
+    the interpreter — the oracle the compiled paths are validated
+    against.  The returned optimizer carries its ``SegmentPlan`` as
+    ``opt.plan`` (None under ``interpret=True``).
     """
     from repro.core import optim   # deferred: optim builds chains from here
 
+    plan = None if interpret else plan_chain(tx)
     matched = None if interpret else match_chain(tx)
     if matched is not None:
         kind, kp = matched
         if kind == "lamb":
-            return optim._lamb_optimizer(
+            opt = optim._lamb_optimizer(
                 kp["schedule"], b1=kp["b1"], b2=kp["b2"], eps=kp["eps"],
                 weight_decay=kp["weight_decay"], trust_eps=kp["trust_eps"],
                 clip=kp["clip"], fused_mode=fused, name=name or kind)
-        return optim._kind_optimizer(
-            kind, kp["schedule"], beta=kp["beta"],
-            weight_decay=kp["weight_decay"], eps=kp["eps"], trust=kp["trust"],
-            clip=kp["clip"], fused_mode=fused, name=name or kind)
-    if fused is not None:
+        else:
+            opt = optim._kind_optimizer(
+                kind, kp["schedule"], beta=kp["beta"],
+                nesterov=kp["nesterov"], weight_decay=kp["weight_decay"],
+                eps=kp["eps"], trust=kp["trust"], clip=kp["clip"],
+                fused_mode=fused, name=name or kind)
+        return dataclasses.replace(opt, plan=plan)
+    if plan is not None and plan.kind is not None:
+        if fused == "multi_tensor":
+            return optim._plan_optimizer(
+                tx, plan, name=name or f"chain[{plan.kind}]")
+        if fused is not None:
+            warnings.warn(
+                f"chain {tuple(p.name for p in (tx.parts or (tx,)))} "
+                f"compiles to the segment plan [{plan.describe()}], which "
+                f"runs only on the multi-tensor engine; fused={fused!r} is "
+                f"ignored and the chain runs on the jnp interpreter",
+                UserWarning, stacklevel=2)
+    elif fused is not None:
+        if plan is not None and plan.blocker is not None:
+            i, nm = plan.blocker
+            detail = (f": stage {i} ({nm!r}) blocks segment fusion and the "
+                      f"plan degenerates to [{plan.describe()}]")
+        else:
+            detail = ""
         warnings.warn(
             f"chain {tuple(p.name for p in (tx.parts or (tx,)))} does not "
-            f"match any fused kind; fused={fused!r} is ignored and the "
-            f"chain runs on the jnp interpreter", UserWarning, stacklevel=2)
+            f"match any fused kind{detail}; fused={fused!r} is ignored and "
+            f"the chain runs on the jnp interpreter", UserWarning,
+            stacklevel=2)
 
     def init(params):
         return ChainOptState(step=jnp.zeros((), jnp.int32),
                              inner=tx.init(params))
 
     def step_fn(grads, state, params):
-        if params is None:
-            raise TypeError(
-                "interpreter-run chains carry no resident parameter "
-                "buffers; build the TrainState with params (opt.init_state "
-                "does this — only FlatOptState owners set params=None)")
-        updates, inner, stats = tx.update(grads, state.inner, params)
-        new_p = jax.tree.map(lambda w, u: (w - u).astype(w.dtype),
-                             params, updates)
-        stats = dict(stats)
-        if "grad_norm" not in stats:
-            stats["grad_norm"] = global_norm(grads)
-        if "update_norm" not in stats:
-            stats["update_norm"] = global_norm(updates)
-        if "lr" not in stats:
-            stats["lr"] = jnp.float32(float("nan"))
-        return new_p, ChainOptState(state.step + 1, inner), stats
+        return interpreter_step(tx, grads, state, params)
 
-    return optim.Optimizer(name=name or "chain", init=init, step=step_fn)
+    return optim.Optimizer(name=name or "chain", init=init, step=step_fn,
+                           plan=plan)
 
 
 def as_optimizer(opt_or_tx, *, fused: Optional[str] = None):

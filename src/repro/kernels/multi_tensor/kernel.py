@@ -186,19 +186,31 @@ def chunk_sumsq(x, p=None, *, wd: float = 0.0, interpret: bool = False,
 # ---------------------------------------------------------------------------
 
 def _update_kernel(c_ref, a_ref, p_ref, g_ref, u_ref,
-                   po_ref, uo_ref, usq_ref, *, beta, wd, cast_g_first):
+                   po_ref, uo_ref, usq_ref, *, beta, wd, cast_g_first,
+                   nesterov, apply):
     ge = _decay(g_ref[...], p_ref[...], wd=wd, cast_g_first=cast_g_first)
     a = a_ref[:, 0:1]                    # (TILE_ROWS, 1), broadcasts per row
     u_new = beta * u_ref[...] + a * ge
+    # nesterov look-ahead: the applied direction re-adds the scaled
+    # gradient on top of the NEW momentum (the interpreter's second
+    # tree.map in ``trace(nesterov=True)``); the stored slot stays u_new
+    out = beta * u_new + a * ge if nesterov else u_new
     uo_ref[...] = u_new
-    po_ref[...] = (p_ref[...] - c_ref[0] * u_new).astype(po_ref.dtype)
-    _store_partial(usq_ref, jnp.sum(jnp.square(u_new), axis=1, keepdims=True))
+    if apply:
+        po_ref[...] = (p_ref[...] - c_ref[0] * out).astype(po_ref.dtype)
+    else:
+        # deferred apply (a suffix stage — e.g. a trailing clip — still
+        # reads the effective direction): first output carries ``out``
+        po_ref[...] = out
+    _store_partial(usq_ref, jnp.sum(jnp.square(out), axis=1, keepdims=True))
 
 
 @functools.partial(jax.jit, static_argnames=("beta", "wd", "cast_g_first",
+                                             "nesterov", "apply",
                                              "interpret", "lane_pad"))
 def fused_update(p, g, u, a_chunk, c, *, beta: float, wd: float,
-                 cast_g_first: bool = False, interpret: bool = False,
+                 cast_g_first: bool = False, nesterov: bool = False,
+                 apply: bool = True, interpret: bool = False,
                  lane_pad: bool = False):
     """Whole-bucket fused optimizer update.
 
@@ -209,6 +221,15 @@ def fused_update(p, g, u, a_chunk, c, *, beta: float, wd: float,
     Returns (p_new [p.dtype], u_new [f32], u_sumsq_partials [(n/CHUNK,) f32]).
     ``p -> p_new`` and ``u -> u_new`` are declared input/output aliases,
     so donated resident buffers update in place.
+
+    ``nesterov=True`` applies (and reports in the sumsq partials) the
+    look-ahead direction ``beta*u_new + a*ge`` while still storing
+    ``u_new`` in the momentum slot — the fused form of
+    ``trace(nesterov=True)``.  ``apply=False`` skips the parameter write:
+    the first output instead carries the f32 effective direction (for a
+    suffix stage such as a trailing clip, which rescales it and applies
+    via ``scale_apply``); ``p`` is NOT aliased in that mode since a later
+    pass still reads it.
     """
     assert p.ndim == 1 and p.size % TILE == 0, p.shape
     n_chunks = p.size // CHUNK
@@ -219,17 +240,20 @@ def fused_update(p, g, u, a_chunk, c, *, beta: float, wd: float,
     tile = pl.BlockSpec((rows, CHUNK), lambda i: (i, 0))
     ctile = pl.BlockSpec((rows, width), lambda i: (i, 0))
     cs = jnp.reshape(c, (1,)).astype(jnp.float32)
+    po_dtype = p.dtype if apply else jnp.float32
+    aliases = {2: 0, 4: 1} if apply else {4: 1}
     po, uo, usq = pl.pallas_call(
         functools.partial(_update_kernel, beta=beta, wd=wd,
-                          cast_g_first=cast_g_first),
+                          cast_g_first=cast_g_first, nesterov=nesterov,
+                          apply=apply),
         grid=(grid,),
         in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
                   ctile, tile, tile, tile],
         out_specs=[tile, tile, ctile],
-        out_shape=[jax.ShapeDtypeStruct((n_chunks, CHUNK), p.dtype),
+        out_shape=[jax.ShapeDtypeStruct((n_chunks, CHUNK), po_dtype),
                    jax.ShapeDtypeStruct((n_chunks, CHUNK), jnp.float32),
                    jax.ShapeDtypeStruct((n_chunks, width), jnp.float32)],
-        input_output_aliases={2: 0, 4: 1},     # p -> p_new, u -> u_new
+        input_output_aliases=aliases,          # p -> p_new, u -> u_new
         interpret=interpret,
     )(cs, _expand_coeff(a_chunk, lane_pad), p.reshape(-1, CHUNK),
       g.reshape(-1, CHUNK), u.reshape(-1, CHUNK))

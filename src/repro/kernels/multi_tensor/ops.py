@@ -38,15 +38,17 @@ def chunk_sumsq(x, p=None, *, wd: float = 0.0, backend: str = "pallas",
 
 
 def fused_update(p, g, u, a_chunk, c, *, beta: float, wd: float,
-                 cast_g_first: bool = False, backend: str = "pallas",
+                 cast_g_first: bool = False, nesterov: bool = False,
+                 apply: bool = True, backend: str = "pallas",
                  lane_pad: Optional[bool] = None):
     if backend == "ref":
         return ref.fused_update_ref(p, g, u, a_chunk, c, beta=beta, wd=wd,
-                                    cast_g_first=cast_g_first)
+                                    cast_g_first=cast_g_first,
+                                    nesterov=nesterov, apply=apply)
     record_launches(1)
     return kernel.fused_update(p, g, u, a_chunk, c, beta=beta, wd=wd,
-                               cast_g_first=cast_g_first,
-                               interpret=_interpret(),
+                               cast_g_first=cast_g_first, nesterov=nesterov,
+                               apply=apply, interpret=_interpret(),
                                lane_pad=_lane_pad(lane_pad))
 
 

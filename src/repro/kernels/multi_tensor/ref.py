@@ -21,14 +21,19 @@ def chunk_sumsq_ref(x, p=None, *, wd: float = 0.0):
 
 
 def fused_update_ref(p, g, u, a_chunk, c, *, beta: float, wd: float,
-                     cast_g_first: bool = False):
+                     cast_g_first: bool = False, nesterov: bool = False,
+                     apply: bool = True):
     p2 = p.reshape(-1, CHUNK)
     ge = _decay(g.reshape(-1, CHUNK), p2, wd=wd, cast_g_first=cast_g_first)
     a = a_chunk.reshape(-1, 1)
     u_new = beta * u.reshape(-1, CHUNK) + a * ge
-    p_new = (p2 - jnp.asarray(c, jnp.float32) * u_new).astype(p.dtype)
-    usq = jnp.sum(jnp.square(u_new), axis=1)
-    return p_new.ravel(), u_new.ravel(), usq
+    out = beta * u_new + a * ge if nesterov else u_new
+    if apply:
+        first = (p2 - jnp.asarray(c, jnp.float32) * out).astype(p.dtype)
+    else:
+        first = out
+    usq = jnp.sum(jnp.square(out), axis=1)
+    return first.ravel(), u_new.ravel(), usq
 
 
 def scale_apply_ref(p, g, a_chunk, c):

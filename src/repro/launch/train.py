@@ -57,11 +57,13 @@ from repro.training import make_train_step, run_steps
 
 def _restore(path: str, params, state):
     """Restore {"params", "opt"} regardless of which STATE FORM the
-    checkpoint holds (pytree form — OptState, or lamb's ChainOptState —
-    vs flat-buffer-resident FlatOptState): detect the saved form from the
-    archive's key set, load via a matching template, and convert to the
-    live form with to_pytree/from_pytree (both lossless, including the
-    Adam-moment slots of a fused-lamb FlatOptState).  ChainOptState for
+    checkpoint holds (pytree form — OptState, or a ChainOptState from
+    lamb / a segment-compiled chain — vs flat-buffer-resident
+    FlatOptState): detect the saved form from the archive's key set, load
+    via a matching template, and convert to the live form with
+    to_pytree/from_pytree (both lossless, including the Adam-moment
+    slots of a fused-lamb FlatOptState and the EMA shadow slots of a
+    ``("chain", slots)`` segment-plan state).  ChainOptState for
     interpreter-run NOVEL compositions has one form and loads directly.
 
     A torn directory (no ``COMMIT`` marker and not a demonstrably
@@ -108,6 +110,15 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=1.6)
     ap.add_argument("--beta", type=float, default=0.9)
     ap.add_argument("--weight-decay", type=float, default=1e-4)
+    ap.add_argument("--nesterov", action="store_true",
+                    help="look-ahead momentum (optimizers that accept it); "
+                         "the engine fuses it into the update pass, so the "
+                         "launch count is unchanged")
+    ap.add_argument("--ema-decay", type=float, default=0.0,
+                    help="keep an exponential moving average of the params "
+                         "(0 = off); on the resident path the shadow params "
+                         "live in the flat f32 EMA slots and ride the "
+                         "checkpoint like any other optimizer state")
     ap.add_argument("--data-axis", type=int, default=0,
                     help="data-mesh size (0 = all devices)")
     ap.add_argument("--model-axis", type=int, default=1)
@@ -198,6 +209,8 @@ def main(argv=None):
                                           "power": 1.1}}}
         for k, v in (("beta", args.beta),
                      ("weight_decay", args.weight_decay),
+                     ("nesterov", args.nesterov),
+                     ("ema_decay", args.ema_decay or None),
                      ("fused", fused)):
             if builder_accepts(args.optimizer, k):
                 kwargs[k] = v

@@ -24,13 +24,37 @@ def convnet_defs(n_classes: int = 10, width: int = 32):
     }
 
 
-def convnet_apply(p: Dict, x: jnp.ndarray) -> jnp.ndarray:
-    """x: (B, 32, 32, 3) -> logits (B, n_classes)."""
+def ghost_norm(h: jnp.ndarray, ghost_batch: int,
+               eps: float = 1e-5) -> jnp.ndarray:
+    """Parameter-free ghost batch normalization (Hoffer et al. 2017,
+    1705.08741): standardize each channel over VIRTUAL batches of
+    ``ghost_batch`` examples instead of the full batch, so large-batch
+    training keeps the small-batch normalization noise the paper's
+    comparisons control for.  No learned scale/shift and no running
+    statistics — eval uses the same batch statistics."""
+    b = h.shape[0]
+    g = min(ghost_batch, b)
+    if b % g:
+        raise ValueError(f"ghost_batch {g} must divide the batch {b}")
+    hg = h.reshape(b // g, g, *h.shape[1:])
+    axes = tuple(range(1, hg.ndim - 1))     # ghost batch + spatial, not C
+    mu = hg.mean(axes, keepdims=True)
+    var = hg.var(axes, keepdims=True)
+    return ((hg - mu) / jnp.sqrt(var + eps)).reshape(h.shape)
+
+
+def convnet_apply(p: Dict, x: jnp.ndarray,
+                  ghost_batch: int | None = None) -> jnp.ndarray:
+    """x: (B, 32, 32, 3) -> logits (B, n_classes).  ``ghost_batch``
+    normalizes each conv pre-activation over ghost groups."""
     def conv(x, w, b, stride=1):
         y = jax.lax.conv_general_dilated(
             x, w, (stride, stride), "SAME",
             dimension_numbers=("NHWC", "HWIO", "NHWC"))
-        return jax.nn.relu(y + b)
+        y = y + b
+        if ghost_batch:
+            y = ghost_norm(y, ghost_batch)
+        return jax.nn.relu(y)
 
     h = conv(x, p["conv1"], p["b1"])
     h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
@@ -43,14 +67,15 @@ def convnet_apply(p: Dict, x: jnp.ndarray) -> jnp.ndarray:
     return h @ p["fc2"] + p["bo"]
 
 
-def ce_loss(p, x, y):
-    logits = convnet_apply(p, x)
+def ce_loss(p, x, y, ghost_batch=None):
+    logits = convnet_apply(p, x, ghost_batch=ghost_batch)
     ll = jax.nn.log_softmax(logits)
     return -jnp.mean(jnp.take_along_axis(ll, y[:, None], axis=1))
 
 
-def accuracy(p, x, y):
-    return jnp.mean(jnp.argmax(convnet_apply(p, x), -1) == y)
+def accuracy(p, x, y, ghost_batch=None):
+    return jnp.mean(
+        jnp.argmax(convnet_apply(p, x, ghost_batch=ghost_batch), -1) == y)
 
 
 def init_convnet(seed: int = 0, **kw):

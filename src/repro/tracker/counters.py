@@ -19,6 +19,11 @@ exact, deterministic, and free of wall-clock noise.
   * ``capture_donation_warnings`` — run a donated step and collect any
                               "donated buffer not aliased" warnings
                               (zero means every buffer aliased in place).
+  * ``plan_launches_per_step`` — the segment compiler's OWN launch
+                              accounting (``SegmentPlan.launches_per_bucket``
+                              x bucket count), checked against the traced
+                              count so the plan IR never drifts from what
+                              actually launches.
 """
 from __future__ import annotations
 
@@ -28,12 +33,14 @@ from typing import Any, Callable, Dict, List, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.multi_tensor import FlatOptState, count_packed_bytes
+from repro.core.multi_tensor import (FlatOptState, build_layout,
+                                     count_packed_bytes)
 from repro.core.optim import Optimizer, TrainState
 from repro.kernels import count_pallas_launches
 
 __all__ = ["launches_per_step", "packed_bytes_per_step", "param_bytes_live",
-           "capture_donation_warnings", "engine_counters"]
+           "capture_donation_warnings", "engine_counters",
+           "plan_launches_per_step"]
 
 
 def launches_per_step(opt: Optimizer, grads, state, params) -> int:
@@ -84,6 +91,21 @@ def capture_donation_warnings(fn: Callable, *args,
     msgs = [str(w.message) for w in wlog
             if "donat" in str(w.message).lower()]
     return out, msgs
+
+
+def plan_launches_per_step(opt: Optimizer, params) -> Any:
+    """Static launch prediction from the optimizer's ``SegmentPlan`` IR:
+    per-bucket plan launches x number of dtype buckets the param tree
+    flattens into.  Returns None when the optimizer carries no fused
+    plan (interpreter chains, per-leaf path, monolithic optimizers) —
+    the traced ``launches_per_step`` is then the only source of truth.
+    Tests cross-check this against the traced count so the plan's
+    ``launches`` annotations stay honest."""
+    plan = getattr(opt, "plan", None)
+    if plan is None or plan.kind is None or opt.kind is None:
+        return None
+    n_buckets = len(build_layout(params).buckets)
+    return plan.launches_per_bucket() * n_buckets
 
 
 def engine_counters(opt: Optimizer, params) -> Dict[str, Any]:

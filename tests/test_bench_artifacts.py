@@ -17,10 +17,15 @@ from benchmarks import check_bench as C
 
 GOOD_RESULTS = {
     "launches_per_step": {"per_leaf": 16, "multi_tensor": 2,
-                          "lamb_fused": 2, "clip_sngm": 3},
+                          "lamb_fused": 2, "clip_sngm": 3,
+                          "nesterov_sngm": 2, "sngm_clip_mid": 2,
+                          "sngm_ema": 2},
     "packed_bytes_per_step": {"resident": 100, "per_step": 300,
                               "ratio": 1 / 3, "lamb_resident": 100,
-                              "clip_sngm_resident": 200},
+                              "clip_sngm_resident": 200,
+                              "nesterov_resident": 100,
+                              "sngm_clip_mid_resident": 200,
+                              "sngm_ema_resident": 100},
     "param_bytes_live": {"resident": 110, "raw_params": 100,
                          "legacy_two_copies": 210},
     "donation_warnings": [],
@@ -264,9 +269,14 @@ def test_bench_sweep_quick_record_shape(tmp_path):
         families=("sngm",))
     assert A.validate_sweep_results(results) == []
     names = [r["name"] for r in results["records"]]
-    assert names == ["convnet_sngm_b16", "lm_sngm_b8"]
-    conv, lm = results["records"]
+    assert names == ["convnet_sngm_b16", "convnet_sngm_b16_ghost",
+                     "lm_sngm_b8"]
+    conv, ghost, lm = results["records"]
     assert conv["arch"] == "convnet" and conv["budget_unit"] == "examples"
+    # the ghost-batch-norm axis rides the schema: same record shape,
+    # ghost_batch stamped, plain rungs carry None
+    assert conv["ghost_batch"] is None
+    assert ghost["ghost_batch"] == 16 and not ghost["diverged"]
     assert lm["arch"] == "transformer" and lm["budget_unit"] == "tokens"
     for rec in results["records"]:
         # fused resident path: O(1) launches, finite loss, real timing

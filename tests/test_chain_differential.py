@@ -9,16 +9,25 @@ multi-tensor compiler honest as patterns grow.
 
 Agreement policy (documented in README "Optimizer API"):
 
-  * matched chains WITHOUT a clip prefix: compiled jnp path and fused
-    resident path are BIT-identical to each other; vs the interpreter
-    they are bit-identical for the sngm/msgd shapes and for lamb
-    (fp32 AND bf16), while lars differs only in lr-product association
-    (PR 3 precedent) — float-tolerance there;
-  * clip-prefixed chains: lamb stays bit-identical; the momentum kinds
-    agree to a few fp32 ulp per step (XLA CPU re-clusters the fusion
-    around the clip pre-scale and flips last-ulp FMA contraction; the
-    kernels compile in isolation on real TPU, where this class of drift
-    does not arise) — tight float tolerance;
+  * matched chains WITHOUT a clip prefix or nesterov: compiled jnp path
+    and fused resident path are BIT-identical to each other; vs the
+    interpreter they are bit-identical for the sngm/msgd shapes and for
+    lamb (fp32 AND bf16), while lars differs only in lr-product
+    association (PR 3 precedent) — float-tolerance there;
+  * clip-carrying and nesterov chains: lamb stays bit-identical; the
+    momentum kinds agree to a few fp32 ulp per step (XLA CPU re-clusters
+    the fusion around the clip pre-scale / the nesterov look-ahead and
+    flips last-ulp FMA contraction; the kernels compile in isolation on
+    real TPU, where this class of drift does not arise) — tight float
+    tolerance;
+  * SEGMENT PLANS (chains the whole-chain matcher rejects but whose
+    suffix lands on a fused kind — mid-chain clip, trailing clip,
+    ema_params anywhere, stateless prefixes): fused execution agrees
+    with the interpreter under the same per-kind policy — except that a
+    jnp prefix node shifts XLA fusion boundaries vs the fully inlined
+    interpreter, so prefix-bearing plans use the tight float tolerance —
+    EMA shadow slots are bit-identical (pure elementwise), and launch
+    counts equal the plan's static annotation exactly;
   * unmatched (novel) chains run the interpreter itself: zero Pallas
     launches, ``ChainOptState``, and a ``UserWarning`` when a fused mode
     was requested;
@@ -26,7 +35,8 @@ Agreement policy (documented in README "Optimizer API"):
     flat state's pytree view (momentum, or lamb's Adam-moment chain
     state) matches the interpreter's state under the same policy;
   * the engine stays O(1): exact launch-count bookkeeping per kind,
-    including the extra raw-norm round of clip-prefixed chains.
+    including the extra raw-norm round of clip-prefixed chains and the
+    deferred-apply pass of trailing clips.
 
 Fast lane runs a deterministic grid plus (when Hypothesis is installed —
 it is pinned in requirements.txt) a few randomized examples per
@@ -84,8 +94,10 @@ def materialize(spec):
 
 
 def build_canonical(kind, clip=None, wd=1e-4, with_wd_stage=True, beta=0.9,
-                    sched=None):
-    """The canonical chain for one fused kind, optionally clip-prefixed."""
+                    sched=None, nesterov=False):
+    """The canonical chain for one fused kind, optionally clip-prefixed
+    and/or with nesterov momentum (a kind variant since the segment
+    compiler)."""
     sched = sched or poly_power(0.3, 10, 1.1)
     prefix = (T.clip_by_global_norm(clip),) if clip is not None else ()
     adw = (T.add_decayed_weights(wd),) if with_wd_stage else ()
@@ -94,13 +106,15 @@ def build_canonical(kind, clip=None, wd=1e-4, with_wd_stage=True, beta=0.9,
             (T.scale_by_trust_ratio(), T.scale_by_schedule(sched))
     elif kind == "lars":
         body = (T.trust_ratio(0.001, wd), T.scale_by_schedule(sched),
-                T.trace(beta))
+                T.trace(beta, nesterov=nesterov))
     elif kind == "msgd":
-        body = adw + (T.trace(beta), T.scale_by_schedule(sched))
+        body = adw + (T.trace(beta, nesterov=nesterov),
+                      T.scale_by_schedule(sched))
     else:
         norm = (T.normalize_by_global_norm() if kind == "sngm_global"
                 else T.normalize_per_tensor())
-        body = adw + (norm, T.trace(beta), T.scale_by_schedule(sched))
+        body = adw + (norm, T.trace(beta, nesterov=nesterov),
+                      T.scale_by_schedule(sched))
     return T.chain(*(prefix + body))
 
 
@@ -142,13 +156,16 @@ def assert_trees(a, b, policy, label):
                                            err_msg=label)
 
 
-def interp_policy(kind, clip):
+def interp_policy(kind, clip, nesterov=False):
     """Agreement level of a compiled execution vs the interpreter."""
     if kind == "lamb":
         return "bitwise"
     if kind == "lars":
         return "close"                    # lr-product association (PR 3)
-    return "bitwise" if clip is None else "close"
+    # clip pre-scale and the nesterov look-ahead both re-cluster FMA
+    # contraction on XLA CPU (last-ulp drift); unclipped plain momentum
+    # chains are bit-exact
+    return "bitwise" if clip is None and not nesterov else "close"
 
 
 def state_trees(state):
@@ -192,6 +209,8 @@ def run(opt, params, grads, steps=STEPS):
 
 def check_canonical(tx_kind_clip, spec):
     tx, kind, clip = tx_kind_clip
+    nest = any(p.name == "trace" and bool(p.get("nesterov"))
+               for p in tx.parts)
     params, grads = materialize(spec)
 
     interp = compile_chain(tx, interpret=True)
@@ -204,12 +223,13 @@ def check_canonical(tx_kind_clip, spec):
     p_f, s_f, st_f = run(fused, params, grads)
     assert isinstance(s_f, FlatOptState)
 
-    pol = interp_policy(kind, clip)
+    pol = interp_policy(kind, clip, nest)
     assert_trees(p_c, p_i, pol, f"{kind} jnp-vs-interp params")
     assert_trees(p_f, p_i, pol, f"{kind} fused-vs-interp params")
     # compiled jnp and fused engine share the kind implementation: held
     # to the tighter of the two bounds
-    assert_trees(p_f, p_c, "bitwise" if clip is None else "close",
+    assert_trees(p_f, p_c,
+                 "bitwise" if clip is None and not nest else "close",
                  f"{kind} fused-vs-jnp params")
 
     # state equivalence across forms (momentum / Adam moments)
@@ -241,6 +261,7 @@ def check_canonical(tx_kind_clip, spec):
 
 def check_novel(tx, spec):
     params, grads = materialize(spec)
+    assert T.plan_chain(tx).kind is None    # genuinely novel: no fused tail
     interp = compile_chain(tx, interpret=True)
     with pytest.warns(UserWarning, match="does not match any fused kind"):
         fused = compile_chain(tx, fused="multi_tensor")
@@ -254,7 +275,64 @@ def check_novel(tx, spec):
     assert_trees(p_f, p_i, "bitwise", "novel params")
     assert_trees(s_f, s_i, "bitwise", "novel state")
     for k in ("grad_norm", "lr", "update_norm"):
-        assert k in st_f and bool(jnp.array_equal(st_f[k], st_i[k]))
+        # equal_nan: chains without a schedule stage report the lr=nan
+        # interpreter fallback on both sides
+        assert k in st_f and np.array_equal(np.asarray(st_f[k]),
+                                            np.asarray(st_i[k]),
+                                            equal_nan=True)
+
+
+def check_plan(tx, kind, launches_per_bucket, spec, policy):
+    """A segment-compiled chain: no whole-chain match, but the planner
+    lands its suffix on the engine.  Fused execution must agree with the
+    interpreter (params under ``policy``, EMA slots bitwise), the state
+    must interconvert through ``to_pytree``, and the launch count must
+    equal the plan's static annotation EXACTLY."""
+    from repro.core.optim import from_pytree
+    from repro.tracker.counters import plan_launches_per_step
+    params, grads = materialize(spec)
+    assert T.match_chain(tx) is None
+    plan = T.plan_chain(tx)
+    assert plan.kind == kind, (plan.describe(), plan.blocker)
+    assert plan.launches_per_bucket() == launches_per_bucket, plan.describe()
+
+    interp = compile_chain(tx, interpret=True)
+    fused = compile_chain(tx, fused="multi_tensor")
+    assert fused.kind == kind
+
+    p_i, s_i, st_i = run(interp, params, grads)
+    p_f, s_f, st_f = run(fused, params, grads)
+    assert isinstance(s_f, FlatOptState)
+    assert s_f.form == ("chain", plan.slots)
+
+    assert_trees(p_f, p_i, policy, f"plan[{kind}] params")
+    view = to_pytree(s_f)
+    assert isinstance(view, ChainOptState)
+    assert_trees(state_trees(view), state_trees(s_i), policy,
+                 f"plan[{kind}] state")
+    # EMA shadow slots: pure elementwise updates, bitwise across paths
+    emas_f = [s.ema for s in view.inner if isinstance(s, T.EmaParamsState)]
+    emas_i = [s.ema for s in s_i.inner if isinstance(s, T.EmaParamsState)]
+    assert len(emas_f) == len(emas_i)
+    for ef, ei in zip(emas_f, emas_i):
+        assert_trees(ef, ei, "bitwise", f"plan[{kind}] ema slots")
+    # round trip back to the flat form, losslessly
+    back = from_pytree(view, p_f)
+    assert back.form == s_f.form
+    assert_trees(tuple(back.p_flats), tuple(s_f.p_flats), "bitwise",
+                 f"plan[{kind}] p_flats round-trip")
+
+    assert bool(jnp.array_equal(st_f["lr"], st_i["lr"]))
+    for k in ("grad_norm", "update_norm"):
+        assert_trees(st_f[k], st_i[k], policy, f"plan[{kind}] stat {k}")
+
+    # EXACT launches: static plan annotation == counters == trace
+    n_buckets = len(build_layout(params).buckets)
+    with count_pallas_launches() as c:
+        jax.jit(lambda g, s, p: fused.step(g, s, p)).lower(
+            grads, fused.init(params), params)
+    assert c["launches"] == launches_per_bucket * n_buckets, plan.describe()
+    assert plan_launches_per_step(fused, params) == c["launches"]
 
 
 # ---- deterministic grid (fast lane; runs with or without hypothesis) ------
@@ -278,16 +356,72 @@ def test_canonical_differential_zero_grads():
 
 def test_novel_chain_differential_grid():
     cases = [
-        T.chain(T.normalize_by_global_norm(), T.clip_by_global_norm(1.0),
-                T.trace(0.9), T.scale_by_schedule(constant(0.1))),
+        # a stateful non-canonical stage mid-chain blocks fusion outright
         T.chain(T.scale_by_adam(0.9, 0.999, 1e-6), T.trace(0.9),
                 T.scale_by_schedule(constant(0.1))),
-        T.chain(T.clip_by_global_norm(1.0), T.trace(0.9, nesterov=True),
-                T.scale_by_schedule(constant(0.1)), T.ema_params(0.99)),
+        # schedule BEFORE trace without trust_ratio matches no grammar
+        T.chain(T.scale_by_schedule(constant(0.1)), T.trace(0.9)),
     ]
     for tx in cases:
         assert T.match_chain(tx) is None
         check_novel(tx, SPEC_GRID["f32"])
+
+
+# ---- deterministic segment-plan grid (the tentpole chains, fast lane) -----
+
+def test_plan_differential_clip_mid():
+    """SNGM-semantics chain with the clip between normalize and trace:
+    the planner peels (adw, normalize) as jnp nodes and folds the clip
+    into an msgd tail — 2 launches/bucket, same as unclipped."""
+    tx = T.chain(T.add_decayed_weights(1e-4), T.normalize_by_global_norm(),
+                 T.clip_by_global_norm(5.0), T.trace(0.9),
+                 T.scale_by_schedule(poly_power(0.3, 10, 1.1)))
+    check_plan(tx, "msgd", 2, SPEC_GRID["f32"], "close")
+    check_plan(tx, "msgd", 2, SPEC_GRID["mixed"], "close")
+
+
+def test_plan_differential_suffix_clip():
+    """Trailing clip (after the schedule): deferred-apply third pass."""
+    tx = T.chain(T.add_decayed_weights(1e-4), T.normalize_by_global_norm(),
+                 T.trace(0.9), T.scale_by_schedule(poly_power(0.3, 10, 1.1)),
+                 T.clip_by_global_norm(0.01))
+    check_plan(tx, "sngm_global", 3, SPEC_GRID["f32"], "close")
+    check_plan(tx, "sngm_global", 3, SPEC_GRID["bf16"], "close")
+
+
+def test_plan_differential_ema():
+    """ema_params rides along as a resident f32 shadow slot; the sngm
+    tail fuses exactly as without it."""
+    tx = T.chain(T.add_decayed_weights(1e-4), T.normalize_by_global_norm(),
+                 T.trace(0.9), T.scale_by_schedule(poly_power(0.3, 10, 1.1)),
+                 T.ema_params(0.99))
+    check_plan(tx, "sngm_global", 2, SPEC_GRID["f32"], "bitwise")
+    check_plan(tx, "sngm_global", 2, SPEC_GRID["bf16"], "bitwise")
+
+
+def test_plan_differential_clip_nesterov_ema():
+    """The kitchen-sink plan from the old novel grid: clip prefix,
+    nesterov trace, trailing EMA — clipped msgd tail (clip round replaces
+    pass 1) + shadow slot, 2 launches/bucket."""
+    tx = T.chain(T.clip_by_global_norm(1.0), T.trace(0.9, nesterov=True),
+                 T.scale_by_schedule(constant(0.1)), T.ema_params(0.99))
+    check_plan(tx, "msgd", 2, SPEC_GRID["f32"], "close")
+
+
+def test_plan_differential_novel_prefix_interleaves():
+    """A genuinely non-canonical composition (double normalization) does
+    not de-fuse the suffix: the leading normalize runs as a jnp node and
+    the longest canonical tail (adw -> normalize -> trace -> sched) still
+    lands on the engine."""
+    tx = T.chain(T.normalize_by_global_norm(), T.add_decayed_weights(0.1),
+                 T.normalize_by_global_norm(), T.trace(0.9),
+                 T.scale_by_schedule(constant(0.1)))
+    plan = T.plan_chain(tx)
+    assert [n.op for n in plan.nodes] == ["jnp", "fused"]
+    assert plan.fused.arg("weight_decay") == 0.1
+    # a jnp prefix shifts XLA fusion boundaries vs the fully inlined
+    # interpreter, so exact bit-parity is not guaranteed here
+    check_plan(tx, "sngm_global", 2, SPEC_GRID["f32"], "close")
 
 
 # ---- randomized sweep (hypothesis; wide version in the slow lane) ---------
@@ -324,16 +458,48 @@ if HAVE_HYPOTHESIS:
             with_wd_stage=wd != 0.0 or draw(st.booleans()),
             beta=draw(st.sampled_from([0.0, 0.5, 0.9])),
             sched=draw(st.sampled_from([constant(0.1),
-                                        poly_power(0.3, 10, 1.1)])))
+                                        poly_power(0.3, 10, 1.1)])),
+            nesterov=kind != "lamb" and draw(st.booleans()))
         return tx, kind, clip
 
     @st.composite
+    def plan_chains(draw):
+        """Randomized segment-compilable chains: a canonical momentum
+        tail with some mix of jnp-prefix stages, mid/trailing clip, and
+        EMA slots — the planner must fuse the tail every time."""
+        kind = draw(st.sampled_from(("sngm_global", "sngm_per_tensor",
+                                     "msgd")))
+        sched = draw(st.sampled_from([constant(0.1),
+                                      poly_power(0.3, 10, 1.1)]))
+        norm = {"sngm_global": (T.normalize_by_global_norm(),),
+                "sngm_per_tensor": (T.normalize_per_tensor(),),
+                "msgd": ()}[kind]
+        prefix = ()
+        if draw(st.booleans()):
+            prefix += (T.normalize_by_global_norm(),)   # jnp prefix node
+        mid_clip = draw(st.booleans())
+        body = norm + ((T.clip_by_global_norm(2.0),) if mid_clip else ()) + \
+            (T.trace(draw(st.sampled_from([0.0, 0.9])),
+                     nesterov=draw(st.booleans())),
+             T.scale_by_schedule(sched))
+        suffix = ()
+        if not mid_clip and draw(st.booleans()):
+            suffix += (T.clip_by_global_norm(0.05),)    # deferred apply
+        if draw(st.booleans()):
+            suffix += (T.ema_params(0.99),)
+        tx = T.chain(*(prefix + body + suffix))
+        hypothesis.assume(T.match_chain(tx) is None)
+        return tx
+
+    @st.composite
     def novel_chains(draw):
-        """Random transform sequences no pattern matches."""
+        """Random transform sequences neither the whole-chain matcher nor
+        the segment planner can place on the engine."""
         idx = draw(st.lists(st.integers(0, len(_POOL) - 1), min_size=2,
                             max_size=5))
         tx = T.chain(*[_POOL[i]() for i in idx])
         hypothesis.assume(T.match_chain(tx) is None)
+        hypothesis.assume(T.plan_chain(tx).kind is None)
         return tx
 
     @settings(max_examples=6, deadline=None, derandomize=True)
@@ -347,6 +513,30 @@ if HAVE_HYPOTHESIS:
         with warnings.catch_warnings():
             warnings.simplefilter("ignore", UserWarning)  # inner pytest.warns
             check_novel(tx, spec)
+
+    def _plan_policy(tx):
+        clippy = any(p.name == "clip_by_global_norm" for p in tx.parts)
+        nest = any(p.name == "trace" and bool(p.get("nesterov"))
+                   for p in tx.parts)
+        prefix = any(n.op == "jnp" for n in T.plan_chain(tx).nodes)
+        return "close" if clippy or nest or prefix else "bitwise"
+
+    @settings(max_examples=6, deadline=None, derandomize=True)
+    @given(tx=plan_chains(), spec=tree_specs())
+    def test_plan_chain_differential(tx, spec):
+        plan = T.plan_chain(tx)
+        assert plan.kind is not None, plan.describe()
+        check_plan(tx, plan.kind, plan.launches_per_bucket(), spec,
+                   _plan_policy(tx))
+
+    @pytest.mark.slow
+    @settings(max_examples=25, deadline=None)
+    @given(tx=plan_chains(), spec=tree_specs())
+    def test_plan_chain_differential_wide(tx, spec):
+        plan = T.plan_chain(tx)
+        assert plan.kind is not None, plan.describe()
+        check_plan(tx, plan.kind, plan.launches_per_bucket(), spec,
+                   _plan_policy(tx))
 
     @pytest.mark.slow
     @settings(max_examples=50, deadline=None)
@@ -405,3 +595,27 @@ def test_lamb_and_clip_launch_counts():
     gbig = {k: 2.0 * v for k, v in big.items()}
     assert _launches(chain_for("lamb"), big, gbig) == 2
     assert _launches(chain_for("sngm_global", 1.0), big, gbig) == 3
+
+    # segment plans: jnp prefixes and EMA slots are launch-free, a
+    # mid-chain clip folds into the coefficient round, a trailing clip
+    # costs exactly one deferred-apply pass
+    def plan_for(*stages):
+        opt = compile_chain(T.chain(*stages), fused="multi_tensor")
+        assert opt.kind is not None and opt.plan.kind is not None
+        return opt
+
+    clip_mid = plan_for(T.normalize_by_global_norm(),
+                        T.clip_by_global_norm(5.0), T.trace(0.9),
+                        T.scale_by_schedule(sched))
+    assert _launches(clip_mid, params, grads) == 2
+    suffix = plan_for(T.normalize_by_global_norm(), T.trace(0.9),
+                      T.scale_by_schedule(sched),
+                      T.clip_by_global_norm(0.01))
+    assert _launches(suffix, params, grads) == 3
+    ema = plan_for(T.normalize_by_global_norm(), T.trace(0.9),
+                   T.scale_by_schedule(sched), T.ema_params(0.99))
+    assert _launches(ema, params, grads) == 2
+    nest = compile_chain(build_canonical("sngm_global", nesterov=True,
+                                         sched=sched),
+                         fused="multi_tensor")
+    assert _launches(nest, params, grads) == 2

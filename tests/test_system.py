@@ -216,6 +216,41 @@ def test_lamb_fused_save_resume_loss_continuity(tmp_path):
                                atol=1e-5)
 
 
+def test_segment_plan_save_resume_loss_continuity(tmp_path):
+    """--resume continuity for a SEGMENT-COMPILED chain (nesterov sngm
+    with a resident EMA slot — no whole-chain match, the plan executor
+    runs it): the ("chain", slots) FlatOptState is saved in ChainOptState
+    pytree form and rebuilt resident on restore, so 6 + save/resume + 6
+    equals an uninterrupted 12-step run — and the same checkpoint also
+    resumes onto the jnp interpreter (--fused none), the fused->interp
+    cross-form continuity the compiler's tolerance policy promises."""
+    from repro.launch.train import main as train_main
+
+    def run(extra):
+        return train_main(
+            ["--arch", "gemma-2b", "--reduced", "--batch", "4", "--seq", "16",
+             "--n-micro", "2", "--optimizer", "sngm", "--fused",
+             "multi_tensor", "--lr", "0.5", "--nesterov", "--ema-decay",
+             "0.999", "--total-steps", "12", "--log-every", "100"] + extra)
+
+    full = run(["--steps", "12"])
+    part1 = run(["--steps", "6", "--ckpt", str(tmp_path / "ck1")])
+    part1b = run(["--steps", "6", "--ckpt", str(tmp_path / "ck2")])
+    np.testing.assert_allclose(part1, full[:6], rtol=1e-6)
+    np.testing.assert_allclose(part1b, part1, rtol=0)   # deterministic
+
+    resumed = run(["--steps", "12", "--ckpt", str(tmp_path / "ck1"),
+                   "--resume"])
+    assert len(resumed) == 6
+    np.testing.assert_allclose(resumed, full[6:], rtol=1e-5, atol=1e-6)
+
+    # cross-form resume: segment-plan checkpoint -> interpreter run
+    resumed_interp = run(["--steps", "12", "--ckpt", str(tmp_path / "ck2"),
+                          "--resume", "--fused", "none"])
+    np.testing.assert_allclose(resumed_interp, full[6:], rtol=1e-4,
+                               atol=1e-5)
+
+
 def test_optimizer_spec_round_trips_through_resume(tmp_path):
     """The OptimizerSpec saved in train_meta.json is the optimizer's
     identity: --resume reconstructs from it (conflicting CLI hyperparams

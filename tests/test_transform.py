@@ -368,23 +368,163 @@ def test_chain_without_decay_matches_with_wd0():
     assert tree_bitwise_equal(p_a, p_b)
 
 
-def test_nesterov_trace_falls_back_to_interpreter():
+def test_nesterov_trace_matches_as_kind_variant():
+    """Since the segment compiler, trace(nesterov=True) is a fused kind
+    parameter, not a de-fusing novelty."""
     tx = T.chain(T.normalize_by_global_norm(), T.trace(0.9, nesterov=True),
                  T.scale_by_schedule(constant(0.1)))
-    assert T.match_chain(tx) is None
+    kind, kp = T.match_chain(tx)
+    assert kind == "sngm_global" and kp["nesterov"] is True
     opt = compile_chain(tx)
-    assert opt.kind is None
+    assert opt.kind == "sngm_global"
 
 
 def test_fused_request_on_novel_chain_warns_and_falls_back():
-    tx = T.chain(T.clip_by_global_norm(1.0), T.trace(0.9),
-                 T.scale_by_schedule(constant(0.1)), T.ema_params(0.99))
+    # scale_by_adam followed by trace matches no kind (Adam feeds the
+    # trust-ratio grammar, not the momentum one) and adam is a stateful
+    # mid-chain stage the planner cannot interleave as jnp
+    tx = T.chain(T.scale_by_adam(0.9, 0.999, 1e-8), T.trace(0.9),
+                 T.scale_by_schedule(constant(0.1)))
     with pytest.warns(UserWarning, match="does not match any fused kind"):
         opt = compile_chain(tx, fused="multi_tensor")
     assert opt.kind is None
     params, grads = make_tree(0), make_tree(1)
     p, s, st = jax.jit(opt.step)(grads, opt.init(params), params)
     assert all(np.all(np.isfinite(np.asarray(l))) for l in jax.tree.leaves(p))
+
+
+def test_defusion_warning_names_blocking_stage():
+    """Satellite guarantee: the fallback warning is actionable — it names
+    the exact stage (index + transform) that broke the segment and shows
+    the degenerate plan."""
+    tx = T.chain(T.scale_by_adam(0.9, 0.999, 1e-8), T.trace(0.9),
+                 T.scale_by_schedule(constant(0.1)))
+    plan = T.plan_chain(tx)
+    assert plan.kind is None
+    assert plan.blocker == (0, "scale_by_adam")
+    with pytest.warns(UserWarning,
+                      match=r"stage 0 \('scale_by_adam'\)") as rec:
+        compile_chain(tx, fused="multi_tensor")
+    assert "interp:scale_by_adam" in str(rec[0].message)
+
+
+# ---------------------------------------------------------------------------
+# the segment planner: plan shapes, launch accounting, mixed jnp/fused plans
+# ---------------------------------------------------------------------------
+
+def test_plan_chain_clip_mid_compiles_with_jnp_prefix():
+    """clip at a non-prefix position: the planner peels the stateless
+    stages before the matchable tail into jnp nodes and folds the clip
+    into the engine tail's coefficient round — 2 launches/bucket, same
+    as unclipped msgd."""
+    tx = T.chain(T.add_decayed_weights(1e-4), T.normalize_by_global_norm(),
+                 T.clip_by_global_norm(5.0), T.trace(0.9),
+                 T.scale_by_schedule(SCHED))
+    assert T.match_chain(tx) is None          # not a whole-chain shape
+    plan = T.plan_chain(tx)
+    assert plan.kind == "msgd"
+    assert [n.op for n in plan.nodes] == ["jnp", "jnp", "fused"]
+    assert plan.fused.arg("clip") == 5.0
+    assert plan.launches_per_bucket() == 2
+    opt = compile_chain(tx, fused="multi_tensor")
+    assert opt.kind == "msgd" and opt.plan.kind == "msgd"
+
+
+def test_plan_chain_suffix_clip_defers_apply():
+    """A trailing clip after the schedule compiles as the deferred-apply
+    third pass (3 launches/bucket for sngm)."""
+    tx = T.chain(T.add_decayed_weights(1e-4), T.normalize_by_global_norm(),
+                 T.trace(0.9), T.scale_by_schedule(SCHED),
+                 T.clip_by_global_norm(0.01))
+    plan = T.plan_chain(tx)
+    assert plan.kind == "sngm_global"
+    assert plan.fused.arg("suffix_clip") == 0.01
+    assert plan.launches_per_bucket() == 3
+
+
+def test_plan_chain_ema_becomes_resident_slot():
+    tx = T.chain(T.add_decayed_weights(1e-4), T.normalize_by_global_norm(),
+                 T.trace(0.9), T.scale_by_schedule(SCHED), T.ema_params(0.99))
+    plan = T.plan_chain(tx)
+    assert plan.kind == "sngm_global"
+    assert plan.slots == ("empty", "empty", "trace", "sched", "ema")
+    assert [n.op for n in plan.nodes] == ["fused", "ema"]
+    assert plan.launches_per_bucket() == 2    # EMA is elementwise, no launch
+    opt = compile_chain(tx, fused="multi_tensor")
+    state = opt.init(make_tree(0))
+    assert isinstance(state, FlatOptState)
+    assert state.form == ("chain", plan.slots)
+    assert len(state.e_flats) == 1
+
+
+def test_plan_launch_accounting_matches_trace():
+    """SegmentPlan's static launch annotation == the traced launch count,
+    for mixed jnp/fused plans — the IR never drifts from reality."""
+    from repro.tracker.counters import launches_per_step, \
+        plan_launches_per_step
+    params, grads = make_tree(0), make_tree(1, scale=3.0)
+    chains = {
+        "clip_mid": T.chain(T.add_decayed_weights(1e-4),
+                            T.normalize_by_global_norm(),
+                            T.clip_by_global_norm(5.0), T.trace(0.9),
+                            T.scale_by_schedule(SCHED)),
+        "nesterov": T.chain(T.normalize_by_global_norm(),
+                            T.trace(0.9, nesterov=True),
+                            T.scale_by_schedule(SCHED)),
+        "ema": T.chain(T.normalize_by_global_norm(), T.trace(0.9),
+                       T.scale_by_schedule(SCHED), T.ema_params(0.99)),
+        "suffix_clip": T.chain(T.normalize_by_global_norm(), T.trace(0.9),
+                               T.scale_by_schedule(SCHED),
+                               T.clip_by_global_norm(0.01)),
+    }
+    for name, tx in chains.items():
+        opt = compile_chain(tx, fused="multi_tensor")
+        state = opt.init(params)
+        planned = plan_launches_per_step(opt, params)
+        traced = launches_per_step(opt, grads, state, params)
+        assert planned == traced, (name, planned, traced)
+
+
+def test_plan_optimizer_rejects_mismatched_chain_form():
+    """A FlatOptState restored against a different chain must be refused,
+    not silently misinterpreted."""
+    tx_a = T.chain(T.normalize_by_global_norm(), T.trace(0.9),
+                   T.scale_by_schedule(SCHED), T.ema_params(0.99))
+    tx_b = T.chain(T.add_decayed_weights(1e-4), T.normalize_by_global_norm(),
+                   T.clip_by_global_norm(5.0), T.trace(0.9),
+                   T.scale_by_schedule(SCHED))
+    opt_a = compile_chain(tx_a, fused="multi_tensor")
+    opt_b = compile_chain(tx_b, fused="multi_tensor")
+    params, grads = make_tree(0), make_tree(1)
+    with pytest.raises(TypeError, match="form"):
+        opt_b.step(grads, opt_a.init(params), params)
+
+
+def test_plan_chain_state_interconverts_losslessly():
+    """to_pytree on a ('chain', slots) FlatOptState yields the
+    interpreter's ChainOptState (momentum + EMA slots in place);
+    from_pytree rebuilds the flat form bitwise."""
+    from repro.core.optim import from_pytree
+    params, grads = make_tree(0), make_tree(1, scale=3.0)
+    tx = T.chain(T.normalize_by_global_norm(), T.trace(0.9),
+                 T.scale_by_schedule(SCHED), T.ema_params(0.99))
+    opt = compile_chain(tx, fused="multi_tensor")
+    p, state, _ = jax.jit(opt.step)(grads, opt.init(params), params)
+    view = to_pytree(state)
+    assert isinstance(view, ChainOptState)
+    assert [type(s).__name__ for s in view.inner] == [
+        "EmptyState", "TraceState", "ScaleByScheduleState", "EmaParamsState"]
+    assert int(view.inner[2].count) == 1
+    back = from_pytree(view, p)
+    assert back.form == state.form
+    assert tree_bitwise_equal(tuple(back.p_flats), tuple(state.p_flats))
+    assert tree_bitwise_equal(tuple(back.u_flats), tuple(state.u_flats))
+    for ea, eb in zip(back.e_flats, state.e_flats):
+        assert tree_bitwise_equal(tuple(ea), tuple(eb))
+    # and the interpreter continues from the converted state: the fused
+    # optimizer accepts the ChainOptState directly (interpreter fallback)
+    p2, s2, _ = opt.step(grads, view, p)
+    assert isinstance(s2, ChainOptState)
 
 
 def test_per_leaf_restricted_to_kinds_with_kernels():
