@@ -1,0 +1,163 @@
+"""Input-pipeline benchmark: prefetch hides host read latency.
+
+Two rungs over the same loader and the same (deliberately slow) source —
+every ``read()`` sleeps a fixed ``READ_DELAY_S``, modeling disk/decode
+latency an order of magnitude above the CPU container's real npz reads,
+while the consumer "computes" for ``COMPUTE_S`` per step:
+
+  * ``sync``     — ``next(loader)`` inline: every step pays the read
+                   latency in full, so input stall/step ~= read delay;
+  * ``prefetch`` — ``PrefetchIterator`` (depth 2, double buffering): the
+                   worker reads WHILE the consumer computes, so measured
+                   input stall/step ~= 0.  This is the number CI gates
+                   (``bench_thresholds.json``: an absolute ceiling plus a
+                   ratio vs the sync rung) — the acceptance claim of the
+                   streaming-data subsystem.
+
+Plus the async-checkpoint rung: ``AsyncCheckpointer.save()`` must return
+in device->host-copy time even when the commit itself is slowed
+(``commit_delay_s``) — gated as a ratio against the delayed commit wall
+time, so "training never blocks on commit I/O" stays a measured claim.
+
+CLI:  python -m benchmarks.bench_data_pipeline [--quick] [--json OUT]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, Tuple
+
+import numpy as np
+
+from benchmarks.artifact import make_envelope, validate_envelope
+
+READ_DELAY_S = 0.006     # per source.read() call — synthetic "slow disk"
+COMPUTE_S = 0.012        # per consumer step — the window prefetch hides in
+
+
+class DelayedSource:
+    """A ``DataSource`` whose every ``read`` sleeps — latency injection
+    for the stall measurement (values still deterministic)."""
+
+    def __init__(self, inner, delay_s: float):
+        self.inner = inner
+        self.delay_s = delay_s
+        self.reads = 0
+
+    def shard_lengths(self) -> Tuple[int, ...]:
+        return self.inner.shard_lengths()
+
+    def read(self, shard: int, start: int, count: int):
+        time.sleep(self.delay_s)
+        self.reads += 1
+        return self.inner.read(shard, start, count)
+
+
+def _make_loader(n: int, batch: int, delay_s: float):
+    from repro.data import MemorySource, StreamingLoader
+    base = MemorySource(
+        {"tokens": np.arange(n * 8, dtype=np.int32).reshape(n, 8),
+         "loss_mask": np.ones((n, 8), np.float32)},
+        shard_size=batch)          # ~one read per batch
+    return StreamingLoader(DelayedSource(base, delay_s), batch, shuffle=True)
+
+
+def _consume_sync(loader, steps: int, compute_s: float) -> Dict[str, float]:
+    stall = 0.0
+    for _ in range(steps):
+        t0 = time.perf_counter()
+        next(loader)
+        stall += time.perf_counter() - t0
+        time.sleep(compute_s)
+    return {"input_stall_s": stall, "input_stall_s_per_step": stall / steps,
+            "steps": steps}
+
+
+def _consume_prefetch(loader, steps: int, compute_s: float,
+                      depth: int) -> Dict[str, float]:
+    from repro.data import PrefetchIterator
+    # place=None: keep the rung jax-free — placement cost is the same for
+    # both rungs and is not what this bench isolates
+    with PrefetchIterator(loader, depth=depth, place=None) as pf:
+        for _ in range(steps):
+            next(pf)
+            time.sleep(compute_s)
+        c = pf.counters()
+    c["steps"] = steps
+    return c
+
+
+def _bench_async_save(quick: bool) -> Dict[str, float]:
+    import jax.numpy as jnp
+
+    from repro.checkpoint import AsyncCheckpointer, save_checkpoint
+    import os
+    import shutil
+    import tempfile
+
+    tree = {f"p{i}": jnp.arange(2048, dtype=jnp.float32) for i in range(8)}
+    delay = 0.02 if quick else 0.05
+    base = tempfile.mkdtemp(prefix="bench_async_ckpt_")
+    try:
+        t0 = time.perf_counter()
+        save_checkpoint(os.path.join(base, "sync"), tree, 0)
+        sync_commit_s = time.perf_counter() - t0
+
+        with AsyncCheckpointer(commit_delay_s=delay) as ac:
+            t0 = time.perf_counter()
+            ac.save(os.path.join(base, "async"), tree, 0)
+            save_call_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            ac.wait()
+            commit_wait_s = time.perf_counter() - t0
+        return {"save_call_s": save_call_s,
+                "delayed_commit_s": commit_wait_s,
+                "sync_commit_s": sync_commit_s}
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+
+def run(quick: bool = False, json_path: str | None = None):
+    steps = 30 if quick else 120
+    batch, depth = 16, 2
+    n = batch * 64
+    print(f"  {steps} steps, read delay {READ_DELAY_S*1e3:.0f}ms, "
+          f"compute {COMPUTE_S*1e3:.0f}ms/step")
+
+    sync = _consume_sync(_make_loader(n, batch, READ_DELAY_S),
+                         steps, COMPUTE_S)
+    print(f"  sync      stall {sync['input_stall_s_per_step']*1e3:6.2f} "
+          f"ms/step")
+    pf = _consume_prefetch(_make_loader(n, batch, READ_DELAY_S),
+                           steps, COMPUTE_S, depth)
+    print(f"  prefetch  stall {pf['input_stall_s_per_step']*1e3:6.2f} "
+          f"ms/step  (depth avg {pf['prefetch_depth_avg']:.2f}/{depth})")
+    async_save = _bench_async_save(quick)
+    print(f"  async save() {async_save['save_call_s']*1e3:.2f}ms vs "
+          f"delayed commit {async_save['delayed_commit_s']*1e3:.0f}ms")
+
+    out = {"read_delay_s": READ_DELAY_S, "compute_s": COMPUTE_S,
+           "sync": sync, "prefetch": pf, "async_save": async_save}
+    if json_path:
+        import json
+        import os
+        envelope = make_envelope("data_pipeline", out, quick=quick)
+        assert not validate_envelope(envelope)
+        d = os.path.dirname(json_path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump(envelope, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"  wrote {json_path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer steps (CI smoke lane)")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write the canonical BENCH artifact to this path")
+    args = ap.parse_args()
+    run(quick=args.quick, json_path=args.json)

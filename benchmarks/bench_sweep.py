@@ -27,9 +27,12 @@ whole sweep lands in canonical ``BENCH_sweep.json`` via
 ``benchmarks.artifact``.
 
 CLI:  python -m benchmarks.bench_sweep [--quick] [--json-dir DIR]
-                                       [--jsonl-dir DIR]
+                                       [--jsonl-dir DIR] [--data-dir DS]
 ``--quick`` is the CI smoke scale; ``--jsonl-dir`` additionally writes
-one per-step JSONL metrics file per run.
+one per-step JSONL metrics file per run; ``--data-dir`` adds a
+real-data LM rung (on-disk pack through the StreamingLoader +
+prefetch, records suffixed ``_disk`` and stamped with the input-stall
+counters).
 """
 from __future__ import annotations
 
@@ -90,7 +93,7 @@ def convnet_ladder(batches: Sequence[int], epochs: int, n_train: int,
     with parameter-free ghost normalization (Hoffer et al.) at that
     virtual batch size — the classic control for whether large-batch
     degradation is a normalization-statistics artifact."""
-    from repro.data.synthetic import synthetic_images
+    from repro.data import synthetic_images
     from repro.models.convnet import init_convnet
 
     x, y = synthetic_images(n_train, seed=0)
@@ -180,6 +183,73 @@ def lm_ladder(batches: Sequence[int], seq: int, tokens_budget: int,
     return records
 
 
+def lm_disk_rung(data_dir: str, batch: int, seq: int, tokens_budget: int,
+                 families: Sequence[str] = FAMILIES, prefetch: int = 2,
+                 jsonl_dir: Optional[str] = None) -> List[dict]:
+    """Real-data rung: the Table-3 LM proxy trained from an on-disk
+    ``repro-data-pack`` dataset through the StreamingLoader + prefetch.
+    Records carry the standard sweep schema (names suffixed ``_disk``)
+    plus the measured input-stall counters, so the artifact shows the
+    disk pipeline keeping up with the same step the synthetic stream
+    feeds.  The dataset's index meta is validated against the proxy
+    config up front — a vocab mismatch must fail loudly, not train on
+    out-of-range tokens."""
+    import jax
+
+    from benchmarks.bench_table3_lm_proxy import proxy_config
+    from repro.data import DiskShardedSource, n_examples
+    from repro.models import model_defs
+    from repro.models.param import materialize
+
+    cfg = proxy_config()
+    probe = DiskShardedSource(data_dir)
+    meta, total = probe.meta, n_examples(probe)
+    probe.close()
+    v = meta.get("vocab_size")
+    if v is not None and v != cfg.vocab_size:
+        raise ValueError(f"--data-dir {data_dir!r}: dataset vocab_size {v} "
+                         f"!= LM proxy vocab {cfg.vocab_size} — repack with "
+                         f"--vocab {cfg.vocab_size}")
+    seq = int(meta.get("seq_len", seq))   # the pack fixes the sequence length
+    base_batch = batch
+    steps = max(1, tokens_budget // (batch * seq))
+    records = []
+    stamps: Dict[str, Dict[str, int]] = {}
+    print(f"[sweep] disk rung: {data_dir} ({total} examples, seq={seq}) "
+          f"B={batch} x {list(families)}, prefetch={prefetch}")
+    for family in families:
+        opt = make_opt(family, steps, batch, base_batch, base_lr=_BASE_LR_LM)
+        if family not in stamps:
+            params = materialize(model_defs(cfg), jax.random.PRNGKey(0))
+            stamps[family] = _engine_stamp(opt, params)
+            del params
+        name = f"lm_{family}_b{batch}_disk"
+        r = train_lm(opt, cfg, batch, seq, steps,
+                     n_micro=max(1, batch // 16),
+                     data_dir=data_dir, prefetch=prefetch,
+                     tracker=_run_tracker(jsonl_dir, name))
+        records.append({
+            "name": name, "arch": "transformer", "family": family,
+            "fused": "multi_tensor", "batch": batch, "steps": steps,
+            "grad_computations": steps * batch * seq,
+            "budget_unit": "tokens",
+            "data_dir": data_dir,
+            "final_loss": r["final_loss"],
+            "optimal_loss": r["optimal_loss"],
+            "wall_time_s": r["wall_time_s"],
+            "throughput": r["tokens_per_s"],
+            "input_stall_s_per_step": r.get("input_stall_s_per_step"),
+            "prefetch_depth_avg": r.get("prefetch_depth_avg"),
+            "engine": stamps[family],
+        })
+        stall = r.get("input_stall_s_per_step")
+        print(f"  {name:28s} steps={steps:4d}: "
+              f"loss={r['final_loss']:.4f} "
+              f"stall={(stall or 0.0)*1e3:.2f}ms/step "
+              f"launches/step={stamps[family]['launches_per_step']}")
+    return records
+
+
 def run(quick: bool = False, json_path: str | None = None,
         json_dir: Optional[str] = None, jsonl_dir: Optional[str] = None,
         convnet_batches: Optional[Sequence[int]] = None,
@@ -190,6 +260,7 @@ def run(quick: bool = False, json_path: str | None = None,
         lm_tokens_budget: Optional[int] = None,
         families: Sequence[str] = FAMILIES,
         ghost_batch: Optional[int] = None,
+        data_dir: Optional[str] = None, prefetch: int = 2,
         write_artifact: bool = True) -> dict:
     """Run the ladder(s) and write canonical BENCH_sweep.json.  The
     explicit knobs exist for the fast-lane pytest smoke, which runs a
@@ -227,6 +298,10 @@ def run(quick: bool = False, json_path: str | None = None,
               f"({ltb} tokens each, seq={ls})")
         records += lm_ladder(lb, ls, ltb, families=families,
                              jsonl_dir=jsonl_dir)
+    if data_dir:
+        records += lm_disk_rung(data_dir, max(lb), ls, ltb,
+                                families=families, prefetch=prefetch,
+                                jsonl_dir=jsonl_dir)
 
     # the Fig-1 readout: per family, quality at the smallest vs largest
     # rung of each ladder (matched compute — the generalization gap)
@@ -255,7 +330,8 @@ def run(quick: bool = False, json_path: str | None = None,
                           "lm_tokens_budget": ltb,
                           "families": list(families),
                           "train_longer": train_longer,
-                          "ghost_batch": gb}}
+                          "ghost_batch": gb,
+                          "data_dir": data_dir, "prefetch": prefetch}}
     problems = validate_sweep_results(results)
     assert not problems, problems   # producer-side schema self-check
     if write_artifact:
@@ -277,6 +353,15 @@ if __name__ == "__main__":
     ap.add_argument("--ghost-batch", type=int, default=None,
                     help="virtual batch size for the ghost-batch-norm rung "
                          "(default: 16 quick / 32 full)")
+    ap.add_argument("--data-dir", default=None,
+                    help="repro-data-pack dataset dir: adds a real-data LM "
+                         "rung (StreamingLoader + prefetch, records "
+                         "suffixed _disk with input-stall counters); the "
+                         "index meta must match the LM proxy vocab")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="prefetch depth for the --data-dir rung (0 = "
+                         "synchronous reads)")
     args = ap.parse_args()
     run(quick=args.quick, json_dir=args.json_dir, jsonl_dir=args.jsonl_dir,
-        ghost_batch=args.ghost_batch)
+        ghost_batch=args.ghost_batch, data_dir=args.data_dir,
+        prefetch=args.prefetch)

@@ -19,6 +19,8 @@ Threshold ops (each keyed by a dotted path into the artifact's
     {"op": "gt_key",    "key": "a.b"}            value >  results[a.b]
     {"op": "ratio_eq",  "key": "a.b", "ratio": 2}  value == 2 * results[a.b]
     {"op": "max_ratio", "key": "a.b", "ratio": .5} value <  .5 * results[a.b]
+    {"op": "max",       "value": 0.003}          value <= 0.003
+    {"op": "min",       "value": 1.0}            value >= 1.0
     {"op": "empty"}                              value is an empty list
 
 A bench section may also carry ``record_checks`` (applied to every
@@ -69,6 +71,10 @@ def _describe(spec: Dict[str, Any]) -> str:
         return f"== {spec['ratio']} * [{spec['key']}]"
     if op == "max_ratio":
         return f"< {spec['ratio']} * [{spec['key']}]"
+    if op == "max":
+        return f"<= {spec['value']}"
+    if op == "min":
+        return f">= {spec['value']}"
     if op == "empty":
         return "is empty"
     return f"?{op}?"
@@ -77,8 +83,11 @@ def _describe(spec: Dict[str, Any]) -> str:
 def eval_check(results: Dict[str, Any], path: str,
                spec: Dict[str, Any]) -> Tuple[Any, bool]:
     """(observed value, passed).  Unknown ops fail loudly — a typo in the
-    thresholds file must not silently pass."""
-    value = dotted_get(results, path)
+    thresholds file must not silently pass.  A ``#suffix`` on the check
+    path is ignored for the lookup — JSON keys are unique, so the suffix
+    is how one results key carries several constraints (e.g. both a
+    ratio and an absolute ceiling on the same stall counter)."""
+    value = dotted_get(results, path.split("#", 1)[0])
     op = spec.get("op")
     if op == "eq":
         return value, value == spec["value"]
@@ -90,6 +99,10 @@ def eval_check(results: Dict[str, Any], path: str,
         return value, value == spec["ratio"] * dotted_get(results, spec["key"])
     if op == "max_ratio":
         return value, value < spec["ratio"] * dotted_get(results, spec["key"])
+    if op == "max":
+        return value, value <= spec["value"]
+    if op == "min":
+        return value, value >= spec["value"]
     if op == "empty":
         return value, isinstance(value, list) and not value
     raise CheckError(f"unknown threshold op {op!r} for {path!r}")

@@ -93,34 +93,69 @@ def train_convnet(opt: Optimizer, x, y, xt, yt, batch: int, steps: int,
 
 def train_lm(opt: Optimizer, cfg, batch: int, seq: int, steps: int,
              n_micro: int = 1, seed: int = 0, tracker=None,
-             log_every: int = 0, runtime=None):
+             log_every: int = 0, runtime=None,
+             data_dir: Optional[str] = None, prefetch: int = 0):
     """Train a (smoke-scale) LM config on the learnable synthetic bigram
     language for `steps` steps of global batch `batch` — the Table-3
     equal-C loop, on the donated TrainState path (``make_train_step``,
-    ``donate_argnums=(0,)``), shared by bench_table3 and bench_sweep."""
-    from repro.data.synthetic import SyntheticLM
+    ``donate_argnums=(0,)``), shared by bench_table3 and bench_sweep.
+
+    ``data_dir`` switches the input from the in-process ``batch_at``
+    stream to an on-disk ``repro-data-pack`` dataset read through the
+    ``StreamingLoader`` (``prefetch`` > 0 adds that deep a host→device
+    prefetch queue and stamps the input-stall counters into the result)
+    — the real-data rung of the sweep."""
+    from repro.data import (DiskShardedSource, PrefetchIterator,
+                            StreamingLoader, SyntheticLM)
     from repro.models import CPU_RUNTIME, model_defs
     from repro.models.param import materialize
+    from repro.tracker.callbacks import PrefetchMonitor
     from repro.training import make_train_step, run_steps
 
     params = materialize(model_defs(cfg), jax.random.PRNGKey(seed))
-    data = SyntheticLM(cfg.vocab_size, seq, batch, branching=4)
     state = opt.init_state(params)
     del params
     step = jax.jit(make_train_step(cfg, runtime or CPU_RUNTIME, opt,
                                    n_micro=n_micro),
                    donate_argnums=(0,))
+    callbacks = [StepTimer(tokens_per_step=batch * seq)]
+    loader = prefetcher = None
+    if data_dir:
+        source = DiskShardedSource(data_dir)
+        v = source.meta.get("vocab_size")
+        if v is not None and v != cfg.vocab_size:
+            raise ValueError(f"dataset {data_dir!r} vocab_size {v} != "
+                             f"model vocab {cfg.vocab_size}")
+        loader = StreamingLoader(source, batch, seed=seed)
+        batches = loader
+        if prefetch > 0:
+            prefetcher = PrefetchIterator(loader, depth=prefetch)
+            batches = prefetcher
+            callbacks.append(PrefetchMonitor(prefetcher))
+        optimal = float(source.meta.get("optimal_loss", float("nan")))
+    else:
+        data = SyntheticLM(cfg.vocab_size, seq, batch, branching=4)
+        batches = data.batch_at
+        optimal = float(data.optimal_loss())
     mem = MemoryTracker()
     fan = CompositeTracker([mem, tracker if tracker is not None
                             else NullTracker()])
-    run_steps(step, state, data.batch_at, steps, tracker=fan,
-              log_every=log_every or 50,
-              callbacks=[StepTimer(tokens_per_step=batch * seq)])
+    run_steps(step, state, batches, steps, tracker=fan,
+              log_every=log_every or 50, callbacks=callbacks)
+    if prefetcher is not None:
+        prefetcher.close()
+    elif loader is not None:
+        loader.close()
     losses = mem.series("loss")
-    return {"losses": losses, "final_loss": losses[-1],
-            "optimal_loss": float(data.optimal_loss()),
-            "wall_time_s": mem.summary.get("wall_time_s", 0.0),
-            "tokens_per_s": mem.summary.get("tokens_per_s", 0.0)}
+    out = {"losses": losses, "final_loss": losses[-1],
+           "optimal_loss": optimal,
+           "wall_time_s": mem.summary.get("wall_time_s", 0.0),
+           "tokens_per_s": mem.summary.get("tokens_per_s", 0.0)}
+    if prefetcher is not None:
+        out["input_stall_s_per_step"] = mem.summary.get(
+            "input_stall_s_per_step", 0.0)
+        out["prefetch_depth_avg"] = mem.summary.get("prefetch_depth_avg", 0.0)
+    return out
 
 
 def csv_row(name: str, us_per_call: float, derived: str = "") -> str:

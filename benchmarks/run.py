@@ -7,6 +7,7 @@
   overhead    optimizer-update us/call + fused-kernel HBM model
   sweep       Fig-1/Table-2/3 ladder, SNGM vs MSGD vs LAMB, fused path
   roofline    render §Roofline table from dry-run artifacts (if present)
+  data_pipeline  input stall with/without prefetch + async-save latency
 
 ``python -m benchmarks.run [names...] [--quick] [--json-dir DIR]``
 (default: the fast set).  Every benchmark's results are written in the
@@ -26,7 +27,8 @@ BENCHES = {}
 
 
 def _register():
-    from benchmarks import (bench_fig1_large_batch_drop,
+    from benchmarks import (bench_data_pipeline,
+                            bench_fig1_large_batch_drop,
                             bench_table1_complexity,
                             bench_table2_cifar_proxy,
                             bench_table3_lm_proxy,
@@ -41,6 +43,7 @@ def _register():
         "overhead": bench_optimizer_overhead.run,
         "sweep": bench_sweep.run,
         "roofline": roofline_report.run,
+        "data_pipeline": bench_data_pipeline.run,
     })
 
 
@@ -73,7 +76,7 @@ def main(argv=None) -> int:
                                      write_bench_artifact)
     _register()
     names = args.names or ["overhead", "table1", "fig1", "table2", "table3",
-                           "roofline"]
+                           "roofline", "data_pipeline"]
     unknown = [n for n in names if n not in BENCHES]
     if unknown:
         print(f"[bench] unknown bench(es) {unknown}; "

@@ -22,7 +22,8 @@ from repro.configs import ARCHS
 from repro.core import make_optimizer
 from repro.core.optim import OptState, builder_accepts, optimizer_names
 from repro.core.schedules import poly_power
-from repro.data import SyntheticLM
+from repro.data import (DiskShardedSource, PrefetchIterator, StreamingLoader,
+                        SyntheticLM, device_put_batch)
 from repro.models import model_defs
 from repro.models.param import count, materialize
 from repro.models.runtime import Runtime
@@ -44,6 +45,12 @@ def main():
                     choices=list(optimizer_names()))
     ap.add_argument("--lr", type=float, default=0.3)
     ap.add_argument("--ckpt", default="")
+    ap.add_argument("--data-dir", default="",
+                    help="train from a packed on-disk dataset "
+                         "(python -m repro.data.pack) instead of the "
+                         "synthetic stream")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="host->device prefetch depth for --data-dir")
     args = ap.parse_args()
 
     base = ARCHS[args.arch]
@@ -74,18 +81,39 @@ def main():
     del params
     step = jax.jit(make_train_step(cfg, rt, opt, n_micro=args.n_micro),
                    donate_argnums=(0,))
-    data = SyntheticLM(cfg.vocab_size, args.seq, args.batch, branching=8)
+    seq, it = args.seq, None
+    if args.data_dir:
+        # on-disk dataset through the streaming pipeline: sharded loader
+        # + background host->device prefetch (batches arrive resident)
+        source = DiskShardedSource(args.data_dir)
+        v = source.meta.get("vocab_size")
+        if v is not None and v != cfg.vocab_size:
+            raise SystemExit(f"--data-dir vocab_size {v} != model vocab "
+                             f"{cfg.vocab_size} (pass --vocab {v})")
+        seq = int(source.meta.get("seq_len", args.seq))
+        loader = StreamingLoader(source, args.batch)
+        bsh = NamedSharding(mesh, batch_spec(mesh, 2)) if mesh else None
+        it = (PrefetchIterator(loader, depth=args.prefetch,
+                               place=lambda b: device_put_batch(b, bsh))
+              if args.prefetch > 0 else loader)
+        next_batch = lambda t: next(it)  # noqa: E731
+        floor = float(source.meta.get("optimal_loss", float("nan")))
+    else:
+        data = SyntheticLM(cfg.vocab_size, seq, args.batch, branching=8)
+        next_batch = data.batch_at
+        floor = float(data.optimal_loss())
 
     t0 = time.time()
     for t in range(args.steps):
-        state, stats = step(state, data.batch_at(t))
+        state, stats = step(state, next_batch(t))
         if t % 20 == 0 or t == args.steps - 1:
-            tok_s = args.batch * args.seq * (t + 1) / (time.time() - t0)
+            tok_s = args.batch * seq * (t + 1) / (time.time() - t0)
             print(f"step {t:4d}  loss={float(stats['loss']):.4f}  "
                   f"||g||={float(stats['grad_norm']):.2f}  "
                   f"lr={float(stats['lr']):.4f}  tok/s={tok_s:,.0f}")
-    print(f"entropy floor ~{data.optimal_loss():.3f} nats; "
-          f"total {time.time()-t0:.0f}s")
+    if it is not None:
+        it.close()
+    print(f"entropy floor ~{floor:.3f} nats; total {time.time()-t0:.0f}s")
     if args.ckpt:
         save_checkpoint(args.ckpt, {"params": state.params_view},
                         step=args.steps)

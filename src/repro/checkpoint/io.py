@@ -39,13 +39,47 @@ when demonstrably complete (meta ``n_leaves`` matches the archive).
 Multi-host runs fall back to in-place shard writes with the marker
 written LAST by process 0 (cross-host atomic commit is the orbax-style
 coordination on the ROADMAP).
+
+Loader state (meta format 3): ``save_checkpoint(..., loader_state=)``
+persists the data pipeline's serialized cursor (``repro.data.loader
+.LoaderState.to_dict()`` — epoch, shard cursor, within-shard offset,
+rng key) as a ``loader_state`` entry in ``meta.json``, and
+``load_loader_state`` reads it back — so ``--resume`` re-seeks the
+``StreamingLoader`` and batch ``t`` after resume is bitwise the batch
+``t`` of an uninterrupted run.  Format 2 checkpoints (no entry) load
+fine and report no loader state; format 3 adds only the two optional
+entries ``loader_state`` and ``metric``, so older readers that ignore
+unknown keys keep working.  Under prefetch the caller must snapshot
+``PrefetchIterator.state`` (the cursor of the next batch TRAINING will
+consume), not the run-ahead loader's.
+
+Retention & symlinks: ``save_checkpoint(..., keep_last_n=, metric=)``
+maintains sibling symlinks ``latest`` (always the newest commit) and
+``best`` (the commit with the LOWEST ``metric`` seen so far, e.g. loss)
+next to step-named checkpoint dirs (``step_00000010/``), then prunes
+older committed ``step_*`` siblings beyond ``keep_last_n`` — never the
+dir a symlink points at, never the one just written, and never a
+non-checkpoint dir.  ``resolve_checkpoint`` follows ``latest`` (or
+picks the newest committed ``step_*`` child) so ``--resume`` can point
+at the base directory.
+
+Async save: ``AsyncCheckpointer.save`` copies device→host synchronously
+at the step boundary (so the donated ``TrainState`` buffers are free to
+be aliased by the very next step) and runs the UNCHANGED atomic-commit
+path above on a background thread — training never blocks on commit
+I/O.  Saves commit in submission order (one worker, FIFO); ``wait()``
+drains the queue and re-raises the first background failure.
 """
 from __future__ import annotations
 
 import json
 import os
+import queue
+import re
 import shutil
-from typing import Any, Optional
+import threading
+import time
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -131,7 +165,9 @@ def _dtype_by_name(name: str) -> np.dtype:
         return np.dtype(getattr(ml_dtypes, name))
 
 
-def _write_shard_and_meta(outdir: str, tree: Any, step: int) -> None:
+def _write_shard_and_meta(outdir: str, tree: Any, step: int,
+                          loader_state: Optional[Dict[str, Any]] = None,
+                          metric: Optional[float] = None) -> None:
     flat = _flatten(tree)
     arrays, dtypes = {}, {}
     for k, v in flat.items():
@@ -142,9 +178,14 @@ def _write_shard_and_meta(outdir: str, tree: Any, step: int) -> None:
         arrays[k] = a
     np.savez(os.path.join(outdir, f"shard_{jax.process_index():05d}.npz"),
              **arrays)
+    meta: Dict[str, Any] = {"step": step, "n_leaves": len(arrays),
+                            "format": 3, "dtypes": dtypes}
+    if loader_state is not None:
+        meta["loader_state"] = loader_state
+    if metric is not None:
+        meta["metric"] = float(metric)
     with open(os.path.join(outdir, "meta.json"), "w") as f:
-        json.dump({"step": step, "n_leaves": len(arrays), "format": 2,
-                   "dtypes": dtypes}, f)
+        json.dump(meta, f)
 
 
 def _looks_like_checkpoint(path: str) -> bool:
@@ -174,10 +215,125 @@ def _looks_like_checkpoint(path: str) -> bool:
     return False
 
 
-def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+STEP_DIR_RE = re.compile(r"^step_\d+$")
+
+
+def step_dir(base: str, step: int) -> str:
+    """Canonical step-named checkpoint path under a base directory —
+    what the retention policy prunes and ``latest``/``best`` point at."""
+    return os.path.join(base, f"step_{step:08d}")
+
+
+def _repoint_symlink(parent: str, name: str, target: str) -> None:
+    """Atomically (re)point ``parent/name`` at sibling ``target``."""
+    link = os.path.join(parent, name)
+    tmp = os.path.join(parent, f".{name}.tmp-link")
+    if os.path.lexists(tmp):
+        os.remove(tmp)
+    os.symlink(target, tmp)
+    os.replace(tmp, link)
+
+
+def _symlink_target(parent: str, name: str) -> Optional[str]:
+    link = os.path.join(parent, name)
+    if os.path.islink(link):
+        return os.readlink(link)
+    return None
+
+
+def _metric_of(path: str) -> Optional[float]:
+    meta_p = os.path.join(path, "meta.json")
+    try:
+        with open(meta_p) as f:
+            m = json.load(f).get("metric")
+        return float(m) if m is not None else None
+    except Exception:
+        return None
+
+
+def _apply_retention(path: str, keep_last_n: Optional[int],
+                     metric: Optional[float]) -> None:
+    """Maintain ``latest``/``best`` symlinks beside ``path`` and prune
+    old committed ``step_*`` siblings beyond ``keep_last_n``.  Pruning
+    is deliberately narrow: only dirs NAMED like step checkpoints that
+    also pass ``_looks_like_checkpoint`` are candidates, and a symlink
+    target or the dir just written is never deleted."""
+    parent = os.path.dirname(os.path.abspath(path))
+    name = os.path.basename(path.rstrip(os.sep))
+    _repoint_symlink(parent, "latest", name)
+    if metric is not None:
+        best = _symlink_target(parent, "best")
+        best_metric = (_metric_of(os.path.join(parent, best))
+                       if best is not None else None)
+        # lower is better (loss-like); first metric-stamped save wins
+        if best_metric is None or float(metric) <= best_metric:
+            _repoint_symlink(parent, "best", name)
+    if not keep_last_n or keep_last_n <= 0:
+        return
+    protected = {name}
+    for link in ("latest", "best"):
+        t = _symlink_target(parent, link)
+        if t is not None:
+            protected.add(t)
+    sibs = [d for d in os.listdir(parent)
+            if STEP_DIR_RE.match(d) and d not in protected
+            and is_committed(os.path.join(parent, d))
+            and _looks_like_checkpoint(os.path.join(parent, d))]
+    # newest keep_last_n step dirs survive IN ADDITION to the protected
+    # set; step number comes from the name (zero-padded, so lexical ==
+    # numeric order)
+    survivors = sorted(sibs)[-(keep_last_n - 1):] if keep_last_n > 1 else []
+    for d in sibs:
+        if d not in survivors:
+            shutil.rmtree(os.path.join(parent, d), ignore_errors=True)
+
+
+def resolve_checkpoint(path: str) -> str:
+    """Resolve a ``--resume`` target: ``path`` itself when it is a
+    checkpoint dir; otherwise follow a ``latest`` symlink inside it, or
+    fall back to the newest committed ``step_*`` child.  Returns
+    ``path`` unchanged when nothing matches (the loader then fails with
+    its own, clearer error)."""
+    if _looks_like_checkpoint(path) and os.listdir(path):
+        return path
+    if os.path.isdir(path):
+        latest = _symlink_target(path, "latest")
+        if latest is not None:
+            cand = os.path.join(path, latest)
+            if os.path.isdir(cand):
+                return cand
+        steps = sorted(d for d in os.listdir(path)
+                       if STEP_DIR_RE.match(d)
+                       and is_committed(os.path.join(path, d)))
+        if steps:
+            return os.path.join(path, steps[-1])
+    return path
+
+
+def load_loader_state(path: str) -> Optional[Dict[str, Any]]:
+    """The ``loader_state`` entry saved with this checkpoint (format 3),
+    or None for older checkpoints / runs without a streaming loader."""
+    check_loadable(path)
+    with open(os.path.join(path, "meta.json")) as f:
+        return json.load(f).get("loader_state")
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0, *,
+                    loader_state: Optional[Any] = None,
+                    keep_last_n: Optional[int] = None,
+                    metric: Optional[float] = None) -> None:
     """Save ``tree`` atomically: shards + meta are staged in a temp dir,
     the ``COMMIT`` marker is written last, and the staged dir is renamed
-    into place — a reader never observes a torn save at ``path``."""
+    into place — a reader never observes a torn save at ``path``.
+
+    ``loader_state`` (a dict or anything with ``.to_dict()``, e.g. a
+    ``repro.data.LoaderState``) rides ``meta.json`` so resume can
+    re-seek the data stream exactly.  ``keep_last_n``/``metric`` turn on
+    the retention policy (module docstring): ``latest``/``best``
+    symlinks in the parent dir and pruning of older committed ``step_*``
+    siblings — meant for step-named paths from ``step_dir()``."""
+    if loader_state is not None and hasattr(loader_state, "to_dict"):
+        loader_state = loader_state.to_dict()
     path = path.rstrip(os.sep)
     if jax.process_count() > 1:
         # multi-host: every process writes its own shard into the live
@@ -191,10 +347,12 @@ def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
         marker = os.path.join(path, COMMIT_MARKER)
         if jax.process_index() == 0 and os.path.exists(marker):
             os.remove(marker)
-        _write_shard_and_meta(path, tree, step)
+        _write_shard_and_meta(path, tree, step, loader_state, metric)
         if jax.process_index() == 0:
             with open(marker, "w") as f:
                 f.write("committed\n")
+            if keep_last_n is not None or metric is not None:
+                _apply_retention(path, keep_last_n, metric)
         return
     # a previous save may have crashed mid-swap: restore its surviving
     # committed dir to `path` BEFORE the leftover cleanup below, so the
@@ -213,7 +371,7 @@ def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
         if os.path.exists(leftover):
             shutil.rmtree(leftover)
     os.makedirs(staging)
-    _write_shard_and_meta(staging, tree, step)
+    _write_shard_and_meta(staging, tree, step, loader_state, metric)
     with open(os.path.join(staging, COMMIT_MARKER), "w") as f:
         f.write("committed\n")                 # marker iff dir is complete
     # swap: move the old checkpoint ASIDE (not rmtree) before installing
@@ -224,6 +382,8 @@ def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
         os.rename(path, backup)
     os.replace(staging, path)                  # atomic on POSIX
     shutil.rmtree(backup, ignore_errors=True)
+    if keep_last_n is not None or metric is not None:
+        _apply_retention(path, keep_last_n, metric)
 
 
 def load_checkpoint(path: str, like: Any, shardings: Optional[Any] = None):
@@ -277,3 +437,93 @@ def load_checkpoint(path: str, like: Any, shardings: Optional[Any] = None):
     if shardings is not None:
         out = jax.device_put(out, shardings)
     return out, meta["step"]
+
+
+class AsyncCheckpointer:
+    """Non-blocking saves on top of the atomic ``save_checkpoint`` path.
+
+    ``save()`` does the only step-coupled work SYNCHRONOUSLY — a
+    device→host copy of every leaf (``jax.device_get``), after which the
+    donated device buffers are free for the next step to alias — and
+    hands the host copy to a single background worker that runs the
+    unchanged staged/atomic commit (including retention).  One worker
+    thread means saves commit in submission order; a bounded queue
+    applies back-pressure if commits fall behind the save cadence
+    instead of accumulating host copies without limit.
+
+    ``wait()`` blocks until every queued save has committed and
+    re-raises the first background failure (also re-raised by the next
+    ``save()`` — an async save error must not be silently swallowed).
+    ``close()`` waits and stops the worker; the instance is also a
+    context manager.  ``commit_delay_s`` artificially delays each commit
+    — a test hook to prove training never blocks on commit I/O.
+    """
+
+    def __init__(self, max_pending: int = 2, commit_delay_s: float = 0.0):
+        self.commit_delay_s = commit_delay_s
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, max_pending))
+        self._error: Optional[BaseException] = None
+        self._closed = False
+        self._thread = threading.Thread(target=self._worker, daemon=True,
+                                        name="repro-async-ckpt")
+        self._thread.start()
+
+    def _worker(self) -> None:
+        while True:
+            job = self._q.get()
+            try:
+                if job is None:
+                    return
+                if self.commit_delay_s:
+                    time.sleep(self.commit_delay_s)
+                path, tree, step, kw = job
+                if self._error is None:   # fail fast after first error
+                    save_checkpoint(path, tree, step, **kw)
+            except BaseException as e:
+                if self._error is None:
+                    self._error = e
+            finally:
+                self._q.task_done()
+
+    def _raise_pending(self) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, path: str, tree: Any, step: int = 0, *,
+             loader_state: Optional[Any] = None,
+             keep_last_n: Optional[int] = None,
+             metric: Optional[float] = None) -> None:
+        """Snapshot ``tree`` to host memory now; commit in background."""
+        if self._closed:
+            raise RuntimeError("AsyncCheckpointer is closed")
+        self._raise_pending()
+        if loader_state is not None and hasattr(loader_state, "to_dict"):
+            loader_state = loader_state.to_dict()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._q.put((path, host_tree, step,
+                     {"loader_state": loader_state, "keep_last_n": keep_last_n,
+                      "metric": metric}))
+
+    def wait(self) -> None:
+        """Block until all queued saves have committed; re-raise the
+        first background failure."""
+        self._q.join()
+        self._raise_pending()
+
+    def close(self) -> None:
+        """Drain, stop the worker, and surface any pending error.
+        Idempotent."""
+        if self._closed:
+            return
+        self._closed = True
+        self._q.join()
+        self._q.put(None)
+        self._thread.join(timeout=30.0)
+        self._raise_pending()
+
+    def __enter__(self) -> "AsyncCheckpointer":
+        return self
+
+    def __exit__(self, *_) -> None:
+        self.close()

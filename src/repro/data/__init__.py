@@ -1,3 +1,36 @@
-from repro.data.synthetic import SyntheticLM, synthetic_images
+"""repro.data — the input pipeline subsystem.
 
-__all__ = ["SyntheticLM", "synthetic_images"]
+Layers, bottom to top:
+
+  * ``source``   — the ``DataSource`` protocol (sharded, host-side,
+                   random-access examples) + ``MemorySource``;
+  * ``synthetic``— deterministic synthetic sources (``SyntheticLM``
+                   bigram language, ``synthetic_images`` CIFAR proxy);
+  * ``format``   — the ``repro-data-pack`` on-disk sharded format
+                   (``pack_dataset``/``DataPackWriter`` writers,
+                   ``DiskShardedSource`` reader; CLI:
+                   ``python -m repro.data.pack``);
+  * ``loader``   — ``StreamingLoader``: per-process sharded batches,
+                   seekable via the serializable ``LoaderState`` that
+                   rides the checkpoint (exact-batch resume);
+  * ``prefetch`` — ``PrefetchIterator``: background host→device
+                   prefetch (double-buffered) with input-stall and
+                   queue-depth counters.
+
+README "Data pipeline & resumable input" documents the contracts.
+"""
+from repro.data.format import (DataPackWriter, DiskShardedSource,
+                               pack_dataset, pack_iterable)
+from repro.data.loader import LoaderState, StreamingLoader
+from repro.data.prefetch import PrefetchIterator, device_put_batch
+from repro.data.source import DataSource, MemorySource, n_examples
+from repro.data.synthetic import (SyntheticLM, synthetic_images,
+                                  synthetic_images_source)
+
+__all__ = [
+    "DataSource", "MemorySource", "n_examples",
+    "SyntheticLM", "synthetic_images", "synthetic_images_source",
+    "DataPackWriter", "DiskShardedSource", "pack_dataset", "pack_iterable",
+    "LoaderState", "StreamingLoader",
+    "PrefetchIterator", "device_put_batch",
+]

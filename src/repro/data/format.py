@@ -1,0 +1,236 @@
+"""``repro-data-pack`` — the on-disk sharded array/token format.
+
+A packed dataset is a directory:
+
+    dataset/
+      shard_00000.npz     # one array per field, shape (n_0, *field_shape)
+      shard_00001.npz
+      ...
+      dataset.json        # written LAST = the commit marker
+
+``dataset.json``::
+
+    {"format": 1,
+     "fields": {"tokens": {"dtype": "int32", "shape": [128]}, ...},
+     "shard_lengths": [1024, 1024, ...],
+     "meta": {...}}        # free-form provenance (vocab size, seq len, ...)
+
+Design points:
+
+  * the index file is written last, so a crash mid-pack can never leave
+    a directory that LOOKS like a dataset (readers require it);
+  * shards are uncompressed ``.npz`` — zip-member reads are cheap and
+    sequential, and the loader reads shards mostly front-to-back;
+  * extension dtypes (bfloat16, ...) are stored as same-width unsigned
+    views with the true dtype recorded per field — the same sidecar
+    trick ``checkpoint/io.py`` uses — so any array dtype round-trips
+    bit-exactly;
+  * shard size is the SHUFFLE GRANULARITY: ``StreamingLoader`` permutes
+    shard order per epoch but reads within a shard sequentially, so
+    pack with small shards (hundreds–thousands of examples) for good
+    mixing.
+
+``pack_dataset`` packs in-memory arrays; ``DataPackWriter`` streams
+example batches of unknown total length; ``python -m repro.data.pack``
+is the CLI around both.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Iterable, Optional, Tuple
+
+import numpy as np
+
+from repro.data.source import check_read_range
+
+PACK_FORMAT = 1
+INDEX_NAME = "dataset.json"
+
+
+def _np_savable(dt: np.dtype) -> bool:
+    """True iff the .npy descr string round-trips this dtype (extension
+    dtypes like bfloat16 silently degrade to void records otherwise)."""
+    import warnings
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            descr = np.lib.format.dtype_to_descr(dt)
+            return np.lib.format.descr_to_dtype(descr) == dt
+    except Exception:
+        return False
+
+
+def _dtype_by_name(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # jax dependency; owns bfloat16/float8_* dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def shard_name(i: int) -> str:
+    return f"shard_{i:05d}.npz"
+
+
+class DataPackWriter:
+    """Streaming pack writer: feed example batches with ``add``; shards
+    of ``shard_size`` examples are flushed as they fill and the index is
+    committed by ``close()`` (or the ``with`` exit).  A directory with
+    no ``dataset.json`` is an aborted pack and is refused by readers."""
+
+    def __init__(self, out_dir: str, shard_size: int = 1024,
+                 meta: Optional[Dict[str, Any]] = None):
+        if shard_size <= 0:
+            raise ValueError(f"shard_size must be positive, got {shard_size}")
+        if os.path.exists(os.path.join(out_dir, INDEX_NAME)):
+            raise ValueError(f"{out_dir!r} already holds a packed dataset; "
+                             f"refusing to overwrite")
+        os.makedirs(out_dir, exist_ok=True)
+        self.out_dir = out_dir
+        self.shard_size = shard_size
+        self.meta = dict(meta or {})
+        self._fields: Optional[Dict[str, Dict[str, Any]]] = None
+        self._buf: Dict[str, list] = {}
+        self._buffered = 0
+        self._shard_lengths: list = []
+        self._closed = False
+
+    def add(self, batch: Dict[str, np.ndarray]) -> None:
+        batch = {k: np.asarray(v) for k, v in batch.items()}
+        ns = {k: v.shape[0] for k, v in batch.items()}
+        if len(set(ns.values())) != 1:
+            raise ValueError(f"fields disagree on example count: {ns}")
+        fields = {k: {"dtype": v.dtype.name, "shape": list(v.shape[1:])}
+                  for k, v in batch.items()}
+        if self._fields is None:
+            self._fields = fields
+            self._buf = {k: [] for k in fields}
+        elif fields != self._fields:
+            raise ValueError(f"batch schema {fields} != first batch's "
+                             f"{self._fields}")
+        for k, v in batch.items():
+            self._buf[k].append(v)
+        self._buffered += next(iter(ns.values()))
+        while self._buffered >= self.shard_size:
+            self._flush(self.shard_size)
+
+    def _flush(self, n: int) -> None:
+        if n == 0:
+            return
+        cat = {k: np.concatenate(v) if len(v) > 1 else v[0]
+               for k, v in self._buf.items()}
+        out, keep = {}, {}
+        for k, v in cat.items():
+            out[k], keep[k] = v[:n], [v[n:]]
+        arrays = {}
+        for k, a in out.items():
+            if not _np_savable(a.dtype):
+                a = a.view(f"uint{8 * a.dtype.itemsize}")
+            arrays[k] = a
+        np.savez(os.path.join(self.out_dir,
+                              shard_name(len(self._shard_lengths))), **arrays)
+        self._shard_lengths.append(n)
+        self._buf = keep
+        self._buffered -= n
+
+    def close(self) -> str:
+        """Flush the tail shard and commit the index; returns the index
+        path.  Idempotent."""
+        if self._closed:
+            return os.path.join(self.out_dir, INDEX_NAME)
+        if self._fields is None or (not self._shard_lengths
+                                    and self._buffered == 0):
+            raise ValueError("nothing packed: add at least one example")
+        self._flush(self._buffered)
+        index = {"format": PACK_FORMAT, "fields": self._fields,
+                 "shard_lengths": self._shard_lengths, "meta": self.meta}
+        with open(os.path.join(self.out_dir, INDEX_NAME), "w") as f:
+            json.dump(index, f, indent=1, sort_keys=True)
+        self._closed = True
+        return os.path.join(self.out_dir, INDEX_NAME)
+
+    def __enter__(self) -> "DataPackWriter":
+        return self
+
+    def __exit__(self, exc_type, *_) -> None:
+        if exc_type is None:
+            self.close()
+
+
+def pack_dataset(out_dir: str, arrays: Dict[str, np.ndarray],
+                 shard_size: int = 1024,
+                 meta: Optional[Dict[str, Any]] = None) -> str:
+    """Pack in-memory arrays (dict of equal-leading-length fields) into
+    ``out_dir``; returns the committed index path."""
+    with DataPackWriter(out_dir, shard_size=shard_size, meta=meta) as w:
+        w.add(arrays)
+    return os.path.join(out_dir, INDEX_NAME)
+
+
+def pack_iterable(out_dir: str, batches: Iterable[Dict[str, np.ndarray]],
+                  shard_size: int = 1024,
+                  meta: Optional[Dict[str, Any]] = None) -> str:
+    """Pack a stream of example batches of unknown total length."""
+    with DataPackWriter(out_dir, shard_size=shard_size, meta=meta) as w:
+        for b in batches:
+            w.add(b)
+    return os.path.join(out_dir, INDEX_NAME)
+
+
+class DiskShardedSource:
+    """``DataSource`` over a ``repro-data-pack`` directory.
+
+    Reads are served from per-shard ``NpzFile`` handles with a tiny
+    (2-entry) cache — the loader's access pattern is sequential within a
+    shard, so at most the current and next shard stay open.  Extension
+    dtypes are viewed back through the per-field dtype record, so reads
+    return bit-exact arrays.
+    """
+
+    _CACHE = 2
+
+    def __init__(self, path: str):
+        index_p = os.path.join(path, INDEX_NAME)
+        if not os.path.exists(index_p):
+            raise FileNotFoundError(
+                f"{path!r} is not a packed dataset (no {INDEX_NAME}; an "
+                f"aborted pack leaves no index — re-run the packer)")
+        with open(index_p) as f:
+            index = json.load(f)
+        if index.get("format") != PACK_FORMAT:
+            raise ValueError(f"{index_p}: unknown pack format "
+                             f"{index.get('format')!r} (this reader "
+                             f"understands {PACK_FORMAT})")
+        self.path = path
+        self.fields: Dict[str, Dict[str, Any]] = index["fields"]
+        self._lengths = tuple(int(n) for n in index["shard_lengths"])
+        self.meta: Dict[str, Any] = index.get("meta", {})
+        self._open: Dict[int, Any] = {}
+
+    def shard_lengths(self) -> Tuple[int, ...]:
+        return self._lengths
+
+    def _shard(self, i: int):
+        if i not in self._open:
+            if len(self._open) >= self._CACHE:
+                self._open.pop(next(iter(self._open))).close()
+            self._open[i] = np.load(os.path.join(self.path, shard_name(i)))
+        return self._open[i]
+
+    def read(self, shard: int, start: int, count: int) -> Dict[str, np.ndarray]:
+        check_read_range(self._lengths, shard, start, count)
+        data = self._shard(shard)
+        out = {}
+        for k, spec in self.fields.items():
+            a = data[k][start:start + count]
+            want = _dtype_by_name(spec["dtype"])
+            if a.dtype != want:
+                a = a.view(want)
+            out[k] = a
+        return out
+
+    def close(self) -> None:
+        for f in self._open.values():
+            f.close()
+        self._open.clear()

@@ -1,0 +1,207 @@
+"""``StreamingLoader`` — a per-process, sharded, seekable batch stream.
+
+The loader turns a ``DataSource`` into an infinite (or epoch-bounded)
+stream of host-side numpy batches, with three properties the training
+stack depends on:
+
+  * **per-process sharding** — with ``process_count`` processes, process
+    ``p`` owns source shards ``p, p+P, p+2P, ...`` (round-robin) and
+    yields the LOCAL ``batch_size / process_count`` rows of every global
+    batch; the global batch is the concatenation across processes, in
+    process order, which is exactly the batch-axis layout
+    ``sharding/rules.batch_spec`` shards over the data mesh axes.
+  * **determinism** — shard order is permuted per epoch from a fixed rng
+    key (``jax.random.fold_in(key, epoch)``); within a shard reads are
+    sequential, so the shard is the shuffle granularity (pack with small
+    shards for mixing).  Batch ``t`` is a pure function of
+    (source, batch size, key, process layout).
+  * **seekability** — the full iterator position is a four-field
+    ``LoaderState`` (epoch, shard cursor, within-shard offset, rng key).
+    ``loader.state`` after consuming batch ``t`` describes batch
+    ``t+1``; constructing a loader with ``state=`` (or calling
+    ``seek``) resumes so that the next batch is BITWISE the batch an
+    uninterrupted run would have produced.  The state is JSON-trivial
+    and rides the checkpoint (``checkpoint/io.py`` ``loader_state``).
+
+Epoch tails smaller than one local batch are dropped (classic
+``drop_last``) and batches never mix epochs, so every yielded batch has
+a fixed shape — a jit-stability requirement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.data.source import DataSource
+
+
+@dataclasses.dataclass
+class LoaderState:
+    """Serializable cursor of a ``StreamingLoader``: everything needed
+    to reproduce the rest of the stream bit-for-bit.  ``key`` is the
+    base rng key's raw uint32 pair (the per-epoch permutation derives
+    from it; storing the base key keeps every future epoch exact)."""
+    epoch: int = 0
+    shard_cursor: int = 0
+    offset: int = 0
+    key: Tuple[int, int] = (0, 0)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"epoch": int(self.epoch),
+                "shard_cursor": int(self.shard_cursor),
+                "offset": int(self.offset),
+                "key": [int(self.key[0]), int(self.key[1])]}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "LoaderState":
+        missing = {"epoch", "shard_cursor", "offset", "key"} - set(d)
+        if missing:
+            raise ValueError(f"loader state missing fields {sorted(missing)}")
+        return cls(epoch=int(d["epoch"]), shard_cursor=int(d["shard_cursor"]),
+                   offset=int(d["offset"]),
+                   key=(int(d["key"][0]), int(d["key"][1])))
+
+
+def _key_data(seed: int) -> Tuple[int, int]:
+    import jax
+    k = jax.random.key_data(jax.random.PRNGKey(seed))
+    return int(k[0]), int(k[1])
+
+
+def _epoch_perm(key: Tuple[int, int], epoch: int, n: int) -> np.ndarray:
+    """Permutation of ``n`` local shards for ``epoch``, derived from the
+    base key — host-side numpy; stable across jax versions by using a
+    plain SeedSequence over (key, epoch)."""
+    rng = np.random.Generator(np.random.PCG64(
+        np.random.SeedSequence([key[0], key[1], epoch])))
+    return rng.permutation(n)
+
+
+class StreamingLoader:
+    """See module docstring.  ``batch_size`` is the GLOBAL batch; the
+    loader yields this process's ``batch_size // process_count`` rows.
+
+    ``max_epochs=None`` streams forever (training bounds the run by
+    steps); an int raises ``StopIteration`` once that many epochs are
+    exhausted.  ``shuffle=False`` keeps shard order fixed — useful for
+    evaluation sweeps.
+    """
+
+    def __init__(self, source: DataSource, batch_size: int, *,
+                 seed: int = 0, shuffle: bool = True,
+                 max_epochs: Optional[int] = None,
+                 process_index: Optional[int] = None,
+                 process_count: Optional[int] = None,
+                 state: Optional[LoaderState] = None):
+        import jax
+        P = process_count if process_count is not None else jax.process_count()
+        p = process_index if process_index is not None else jax.process_index()
+        if not 0 <= p < P:
+            raise ValueError(f"process_index {p} out of range for {P}")
+        if batch_size % P:
+            raise ValueError(f"global batch {batch_size} must divide across "
+                             f"{P} processes")
+        self.source = source
+        self.batch_size = batch_size
+        self.local_batch = batch_size // P
+        self.shuffle = shuffle
+        self.max_epochs = max_epochs
+        lengths = tuple(source.shard_lengths())
+        self._my_shards = tuple(range(p, len(lengths), P))
+        self._my_lengths = tuple(lengths[s] for s in self._my_shards)
+        if not self._my_shards:
+            raise ValueError(f"process {p}/{P} owns no shards "
+                             f"({len(lengths)} total); pack more shards")
+        if sum(self._my_lengths) < self.local_batch:
+            raise ValueError(
+                f"process {p} owns {sum(self._my_lengths)} examples < local "
+                f"batch {self.local_batch}; every epoch would be empty")
+        self._st = state if state is not None \
+            else LoaderState(key=_key_data(seed))
+        self._st = dataclasses.replace(self._st)   # private copy
+        self._perm_epoch: Optional[int] = None
+        self._perm: Optional[np.ndarray] = None
+
+    # -- state ----------------------------------------------------------
+    @property
+    def state(self) -> LoaderState:
+        """The cursor of the NEXT batch (snapshot — safe to serialize)."""
+        return dataclasses.replace(self._st)
+
+    def seek(self, state: LoaderState) -> None:
+        self._st = dataclasses.replace(state)
+        self._perm_epoch = None
+
+    # -- iteration ------------------------------------------------------
+    def _order(self, epoch: int) -> np.ndarray:
+        """This epoch's local-shard visit order (cached per epoch)."""
+        if self._perm_epoch != epoch:
+            n = len(self._my_shards)
+            self._perm = (_epoch_perm(self._st.key, epoch, n)
+                          if self.shuffle else np.arange(n))
+            self._perm_epoch = epoch
+        return self._perm
+
+    def _advance_epoch(self) -> None:
+        self._st.epoch += 1
+        self._st.shard_cursor = 0
+        self._st.offset = 0
+        if self.max_epochs is not None and self._st.epoch >= self.max_epochs:
+            raise StopIteration
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        st = self._st
+        if self.max_epochs is not None and st.epoch >= self.max_epochs:
+            raise StopIteration
+        parts = []
+        need = self.local_batch
+        while need > 0:
+            order = self._order(st.epoch)
+            if st.shard_cursor >= len(order):
+                # epoch exhausted mid-batch: drop the tail (drop_last)
+                # and start the batch over in the next epoch — batches
+                # never mix epochs, so shapes stay jit-stable
+                parts, need = [], self.local_batch
+                self._advance_epoch()
+                continue
+            local = int(order[st.shard_cursor])
+            length = self._my_lengths[local]
+            take = min(need, length - st.offset)
+            if take > 0:
+                part = self.source.read(self._my_shards[local],
+                                        st.offset, take)
+                parts.append(part)
+                st.offset += take
+                need -= take
+            if st.offset >= length:
+                st.shard_cursor += 1
+                st.offset = 0
+        if len(parts) == 1:
+            batch = {k: np.asarray(v) for k, v in parts[0].items()}
+        else:
+            batch = {k: np.concatenate([p[k] for p in parts])
+                     for k in parts[0]}
+        for k, v in batch.items():
+            if v.shape[0] != self.local_batch:
+                raise ValueError(f"source returned short read for {k!r}: "
+                                 f"{v.shape[0]} != {self.local_batch}")
+        return batch
+
+    # -- bookkeeping ----------------------------------------------------
+    def batches_per_epoch(self) -> int:
+        """Batches this process yields per epoch (drop_last floor).  In
+        a multi-process run every process must agree — i.e. shards
+        should balance across processes — or the collective would hang;
+        the launcher asserts this via ``min``/``max`` over processes at
+        startup on real multi-host runs."""
+        return sum(self._my_lengths) // self.local_batch
+
+    def close(self) -> None:
+        close = getattr(self.source, "close", None)
+        if close is not None:
+            close()

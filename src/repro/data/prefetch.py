@@ -1,0 +1,183 @@
+"""Background host→device prefetch.
+
+``PrefetchIterator`` wraps any host batch iterator (typically a
+``StreamingLoader``) with a worker thread that stays ``depth`` batches
+ahead: it pulls the next host batch, moves it to device
+(``jax.device_put`` — optionally through a caller-supplied ``place``
+function that applies mesh shardings), and parks it in a bounded queue.
+The consumer's ``next()`` then returns an ALREADY-RESIDENT batch, so a
+donated train step never waits on host I/O — the only time the step
+blocks is when the queue is empty, and that blocked time is measured
+and exported as the **input stall** counters the tracker/bench layer
+gates on (``benchmarks/bench_data_pipeline.py``: stall ≈ 0 with
+prefetch on).
+
+Checkpoint coupling: the worker snapshots ``loader.state`` immediately
+after pulling each batch, and the snapshot travels WITH the batch
+through the queue — so ``prefetch.state`` after training consumed batch
+``t`` is the cursor of batch ``t+1`` even though the loader itself has
+already run ahead.  Saving ``prefetch.state`` (not ``loader.state``!)
+is what keeps resume exact under prefetch; the launcher and
+``checkpoint/io.py`` do exactly that.
+
+Default ``depth=2`` is classic double buffering: one batch in flight to
+the device while the step consumes the previous one.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Dict, Iterator, Optional
+
+__all__ = ["PrefetchIterator", "device_put_batch"]
+
+
+def device_put_batch(batch, sharding=None):
+    """Default placement: ``jax.device_put`` every leaf (with a sharding
+    tree or single sharding when given).  On multi-process runs with a
+    sharding, the local rows are assembled into the global array via
+    ``make_array_from_process_local_data`` — the loader yields each
+    process's slice of the global batch."""
+    import jax
+    if sharding is None:
+        return jax.device_put(batch)
+    if jax.process_count() > 1:
+        return jax.tree.map(
+            lambda x: jax.make_array_from_process_local_data(sharding, x),
+            batch)
+    return jax.tree.map(lambda x: jax.device_put(x, sharding), batch)
+
+
+class _Stop:
+    """Queue sentinel: clean exhaustion of the upstream iterator."""
+
+
+class _Failure:
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+class PrefetchIterator:
+    """See module docstring.
+
+    Counters (host wall-clock, cumulative — use ``counters()`` or the
+    per-batch ``stall_log``):
+
+      * ``input_stall_s`` — total time ``next()`` spent blocked waiting
+        for the queue (the time a train step waited on input);
+      * ``prefetch_depth_sum`` — queue occupancy observed at each
+        ``next()``, for the average depth readout (a healthy pipeline
+        sits near ``depth``; ~0 means the source can't keep up).
+
+    ``place=None`` skips device placement (pure host-side prefetch);
+    ``place=device_put_batch`` (default) moves batches to device in the
+    worker thread.
+    """
+
+    def __init__(self, it: Iterator[Dict[str, Any]], depth: int = 2,
+                 place: Optional[Callable[[Any], Any]] = device_put_batch):
+        if depth < 1:
+            raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+        self._it = it
+        self.depth = depth
+        self._place = place
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        # state snapshot accompanying the last batch next() yielded: the
+        # cursor of the next UNCONSUMED batch (see module docstring)
+        self._state = getattr(it, "state", None)
+        self.input_stall_s = 0.0
+        self.prefetch_depth_sum = 0
+        self.n_batches = 0
+        self.stall_log: deque = deque()   # (stall_s, depth) per batch
+        self._exhausted = False
+        self._thread = threading.Thread(target=self._worker, daemon=True,
+                                        name="repro-prefetch")
+        self._thread.start()
+
+    # -- worker ---------------------------------------------------------
+    def _worker(self) -> None:
+        try:
+            while not self._stop.is_set():
+                try:
+                    batch = next(self._it)
+                except StopIteration:
+                    self._put(_Stop())
+                    return
+                state = getattr(self._it, "state", None)
+                if self._place is not None:
+                    batch = self._place(batch)
+                self._put((batch, state))
+        except BaseException as e:  # propagate to the consumer
+            self._put(_Failure(e))
+
+    def _put(self, item) -> None:
+        """Bounded put that aborts promptly when the consumer closes."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.1)
+                return
+            except queue.Full:
+                continue
+
+    # -- consumer -------------------------------------------------------
+    def __iter__(self) -> "PrefetchIterator":
+        return self
+
+    def __next__(self):
+        if self._exhausted:
+            raise StopIteration
+        depth_now = self._q.qsize()
+        t0 = time.perf_counter()
+        item = self._q.get()
+        stall = time.perf_counter() - t0
+        if isinstance(item, _Stop):
+            self._exhausted = True
+            raise StopIteration
+        if isinstance(item, _Failure):
+            self._exhausted = True
+            raise item.exc
+        batch, state = item
+        self._state = state
+        self.input_stall_s += stall
+        self.prefetch_depth_sum += depth_now
+        self.n_batches += 1
+        self.stall_log.append((stall, depth_now))
+        return batch
+
+    @property
+    def state(self):
+        """``LoaderState`` of the next unconsumed batch (exact under
+        prefetch run-ahead); None when the upstream iterator carries no
+        state."""
+        return self._state
+
+    def counters(self) -> Dict[str, float]:
+        n = max(self.n_batches, 1)
+        return {"input_stall_s": self.input_stall_s,
+                "input_stall_s_per_step": self.input_stall_s / n,
+                "prefetch_depth_avg": self.prefetch_depth_sum / n,
+                "prefetch_depth": self.depth,
+                "prefetch_batches": self.n_batches}
+
+    def close(self) -> None:
+        """Stop the worker and release the upstream iterator.  Safe to
+        call more than once; also runs on ``with`` exit."""
+        self._stop.set()
+        try:  # unblock a worker parked on a full queue
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=5.0)
+        close = getattr(self._it, "close", None)
+        if close is not None:
+            close()
+
+    def __enter__(self) -> "PrefetchIterator":
+        return self
+
+    def __exit__(self, *_) -> None:
+        self.close()

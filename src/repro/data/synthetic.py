@@ -7,22 +7,37 @@
 * ``synthetic_images`` — class-conditional Gaussian-blob images, the
   CIFAR10 stand-in for the paper's Table 2 reproduction.
 
-Both are stateless: batch ``i`` is a pure function of (seed, i), so any
-data-parallel worker can produce its own shard.
+Both are ``DataSource`` implementations (``data.source``): example ``j``
+is a pure function of (seed, j), so the ``StreamingLoader`` can shard,
+shuffle, and seek them exactly like an on-disk dataset — and any
+data-parallel worker can produce its own shard.  ``SyntheticLM`` also
+keeps its historical ``batch_at(i)`` batch-level stream (batch ``i`` is
+a pure function of (seed, i)); the two streams draw from independent
+fold-in domains, so loader-driven runs and ``batch_at`` runs are both
+deterministic but not example-for-example identical.
 """
 from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.data.source import MemorySource
+
 
 class SyntheticLM:
     """Bigram-chain language: next token ~ uniform over ``branching``
-    successors of the current token (successor table fixed by seed)."""
+    successors of the current token (successor table fixed by seed).
+
+    As a ``DataSource`` the nominal epoch is ``epoch_examples`` examples
+    in ``n_shards`` equal virtual shards (the chain itself is infinite;
+    the epoch size just gives the loader a shuffle/epoch structure)."""
 
     def __init__(self, vocab_size: int, seq_len: int, batch_size: int,
-                 seed: int = 0, branching: int = 4):
+                 seed: int = 0, branching: int = 4,
+                 epoch_examples: int = 65536, n_shards: int = 16):
         self.vocab = vocab_size
         self.seq = seq_len
         self.batch = batch_size
@@ -31,21 +46,57 @@ class SyntheticLM:
         self.table = jnp.asarray(
             rng.randint(0, vocab_size, size=(vocab_size, branching)), jnp.int32)
         self.seed = seed
+        if epoch_examples % n_shards:
+            raise ValueError(f"epoch_examples {epoch_examples} must divide "
+                             f"into {n_shards} shards")
+        self.epoch_examples = epoch_examples
+        self.n_shards = n_shards
+
+    def _walk(self, tok0, choices):
+        """(n,) start tokens + (n, S) branch choices -> (n, S) tokens."""
+        def step(tok, ch):
+            nxt = self.table[tok, ch]
+            return nxt, tok
+        _, toks = jax.lax.scan(step, tok0, jnp.moveaxis(choices, 0, 1))
+        return jnp.moveaxis(toks, 0, 1)                  # (n, S)
 
     def batch_at(self, i: int):
+        """Batch-level stream: batch ``i`` of ``batch_size`` examples."""
         key = jax.random.fold_in(jax.random.PRNGKey(self.seed), i)
         k0, k1 = jax.random.split(key)
         tok0 = jax.random.randint(k0, (self.batch,), 0, self.vocab, jnp.int32)
         choices = jax.random.randint(k1, (self.batch, self.seq), 0,
                                      self.branching, jnp.int32)
-
-        def step(tok, ch):
-            nxt = self.table[tok, ch]
-            return nxt, tok
-        _, toks = jax.lax.scan(step, tok0, choices.T)
-        tokens = jnp.moveaxis(toks, 0, 1)                    # (B,S)
+        tokens = self._walk(tok0, choices)
         return {"tokens": tokens,
                 "loss_mask": jnp.ones((self.batch, self.seq), jnp.float32)}
+
+    # -- DataSource protocol (example-level, host numpy) ----------------
+    def shard_lengths(self) -> Tuple[int, ...]:
+        per = self.epoch_examples // self.n_shards
+        return (per,) * self.n_shards
+
+    def read(self, shard: int, start: int, count: int) -> Dict[str, np.ndarray]:
+        from repro.data.source import check_read_range
+        check_read_range(self.shard_lengths(), shard, start, count)
+        per = self.epoch_examples // self.n_shards
+        first = shard * per + start
+        # per-EXAMPLE keys in a fold-in domain disjoint from batch_at's
+        # (batch_at folds batch indices into PRNGKey(seed); examples fold
+        # global example indices into PRNGKey(seed) ^ fold_in(..., -1))
+        base = jax.random.fold_in(jax.random.PRNGKey(self.seed), 2**31 - 1)
+        keys = jax.vmap(lambda j: jax.random.fold_in(base, j))(
+            jnp.arange(first, first + count))
+        k0 = jax.vmap(lambda k: jax.random.split(k)[0])(keys)
+        k1 = jax.vmap(lambda k: jax.random.split(k)[1])(keys)
+        tok0 = jax.vmap(
+            lambda k: jax.random.randint(k, (), 0, self.vocab, jnp.int32))(k0)
+        choices = jax.vmap(
+            lambda k: jax.random.randint(k, (self.seq,), 0,
+                                         self.branching, jnp.int32))(k1)
+        tokens = self._walk(tok0, choices)
+        return {"tokens": np.asarray(jax.device_get(tokens)),
+                "loss_mask": np.ones((count, self.seq), np.float32)}
 
     def optimal_loss(self) -> float:
         """Entropy of the chain = log(branching) nats (distinct successors
@@ -73,3 +124,13 @@ def synthetic_images(n: int, seed: int = 0, n_classes: int = 10,
     x = mus[y] + noise * rng.randn(n, image_size, image_size, 3).astype(np.float32)
     x = x / np.sqrt(1.0 + noise ** 2)          # unit-ish variance
     return jnp.asarray(x), jnp.asarray(y, jnp.int32)
+
+
+def synthetic_images_source(n: int, seed: int = 0,
+                            shard_size: Optional[int] = None,
+                            **kw) -> MemorySource:
+    """The Table-2 image proxy as a sharded ``DataSource`` (fields
+    ``x``/``y``), ready for the ``StreamingLoader`` or the data packer."""
+    x, y = synthetic_images(n, seed=seed, **kw)
+    return MemorySource({"x": np.asarray(x), "y": np.asarray(y)},
+                        shard_size=shard_size)

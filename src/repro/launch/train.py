@@ -24,6 +24,20 @@ optimizer state form — OptState pytree or flat-buffer-resident
 FlatOptState), rejects torn saves without the marker, and continues from
 the saved step, with ``--total-steps`` pinning the schedule horizon
 across the save/resume split (README: "Checkpoint format and resume").
+``--save-every K`` switches to periodic step-named saves under DIR
+(``step_00000010/`` + ``latest``/retention via ``--keep-last-n``), and
+``--async-save`` moves the commit I/O off the training thread
+(``AsyncCheckpointer``: the step pays only the device→host copy).
+``--resume`` accepts either layout — ``resolve_checkpoint`` follows
+``latest`` when DIR is the base of a step-named family.
+
+Data: the default input is the synthetic ``batch_at(t)`` stream.
+``--data-dir`` trains from an on-disk ``repro-data-pack`` dataset
+through the ``StreamingLoader`` (per-process sharded, seekable) with
+``--prefetch``-deep host→device prefetch; the loader cursor
+(``LoaderState``) rides every checkpoint, so ``--resume`` re-seeks the
+stream and batch ``t`` after resume is bitwise the batch ``t`` of an
+uninterrupted run (README: "Data pipeline & resumable input").
 """
 from __future__ import annotations
 
@@ -36,14 +50,17 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.checkpoint import check_loadable, load_checkpoint, save_checkpoint
+from repro.checkpoint import (AsyncCheckpointer, check_loadable,
+                              load_checkpoint, load_loader_state,
+                              resolve_checkpoint, save_checkpoint, step_dir)
 from repro.configs import ARCHS, get_config, smoke_variant
 from repro.core import make_optimizer
 from repro.core.optim import (FlatOptState, OptState, OptimizerSpec,
                               TrainState, builder_accepts, from_pytree,
                               optimizer_names, to_pytree)
 from repro.core.transform import ChainOptState, place_chain_state
-from repro.data import SyntheticLM
+from repro.data import (DiskShardedSource, LoaderState, PrefetchIterator,
+                        StreamingLoader, SyntheticLM, device_put_batch)
 from repro.launch.mesh import data_axes_of
 from repro.models import model_defs
 from repro.models.param import count, materialize
@@ -51,7 +68,7 @@ from repro.models.runtime import Runtime
 from repro.sharding import batch_spec, param_shardings, param_specs
 from repro.tracker import (CompositeTracker, JsonlTracker, MemoryTracker,
                            StdoutTracker)
-from repro.tracker.callbacks import StepTimer
+from repro.tracker.callbacks import PrefetchMonitor, StepTimer
 from repro.training import make_train_step, run_steps
 
 
@@ -131,6 +148,27 @@ def main(argv=None):
                     help="schedule horizon (0 = --steps); set this when a "
                          "run is split across save/resume segments so every "
                          "segment builds the same poly_power schedule")
+    ap.add_argument("--data-dir", default="",
+                    help="train from an on-disk repro-data-pack dataset "
+                         "(python -m repro.data.pack) via the sharded "
+                         "StreamingLoader; its LoaderState rides every "
+                         "checkpoint for exact-batch resume.  Default: the "
+                         "synthetic batch_at stream")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="host->device prefetch depth for --data-dir runs "
+                         "(0 = synchronous next(); 2 = double buffering)")
+    ap.add_argument("--save-every", type=int, default=0,
+                    help="checkpoint every K steps into step-named dirs "
+                         "under --ckpt (step_00000010/, latest symlink); "
+                         "0 = a single final save at --ckpt itself")
+    ap.add_argument("--keep-last-n", type=int, default=0,
+                    help="with --save-every: prune committed step_* dirs "
+                         "beyond the newest N (0 = keep all; symlink "
+                         "targets survive)")
+    ap.add_argument("--async-save", action="store_true",
+                    help="commit checkpoints on a background thread — the "
+                         "step only pays the device->host copy, never the "
+                         "commit I/O")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics-jsonl", default="",
                     help="append per-step metrics (loss, grad_norm, lr, "
@@ -164,7 +202,11 @@ def main(argv=None):
     fused = None if args.fused == "none" else args.fused
     horizon = args.total_steps or args.steps
     saved_meta = {}
+    resume_path = ""
     if args.resume and args.ckpt:
+        # --ckpt may be the checkpoint itself or the BASE of a
+        # --save-every step_* family; follow latest/newest committed
+        resume_path = resolve_checkpoint(args.ckpt)
         # the schedule horizon is part of the run's identity: adopt the
         # saved one when --total-steps is omitted, warn on a mismatch —
         # otherwise poly_power silently decays on a different horizon and
@@ -221,7 +263,7 @@ def main(argv=None):
     if args.resume:
         if not args.ckpt:
             raise SystemExit("--resume requires --ckpt")
-        restored, start = _restore(args.ckpt, params, state)
+        restored, start = _restore(resume_path, params, state)
         params, state = restored["params"], restored["opt"]
         if mesh is not None:
             # re-place onto the mesh: load_checkpoint materialized every
@@ -241,7 +283,7 @@ def main(argv=None):
                 # compositions): every sub-state tree mirroring the params
                 # (moments, EMA shadows) takes the param shardings
                 state = place_chain_state(state, psh)
-        print(f"[train] resumed {args.ckpt} at step {start}")
+        print(f"[train] resumed {resume_path} at step {start}")
     # unify into the donated TrainState: on the resident path the flat
     # buffers own the params (single copy on device) and the params
     # pytree reference is dropped here
@@ -252,14 +294,52 @@ def main(argv=None):
     step = jax.jit(make_train_step(cfg, rt, opt, n_micro=args.n_micro,
                                    grad_specs=gspecs),
                    donate_argnums=(0,))
-    data = SyntheticLM(cfg.vocab_size, args.seq, args.batch, branching=4)
+    loader = None
+    prefetcher = None
+    seq = args.seq
+    if args.data_dir:
+        source = DiskShardedSource(args.data_dir)
+        v = source.meta.get("vocab_size")
+        if v is not None and v != cfg.vocab_size:
+            raise SystemExit(f"--data-dir vocab_size {v} != model vocab "
+                             f"{cfg.vocab_size} ({cfg.name})")
+        if cfg.is_encoder_decoder and "encoder_embeds" not in source.fields:
+            raise SystemExit("--data-dir: encoder-decoder archs need an "
+                             "'encoder_embeds' field in the dataset")
+        seq = int(source.meta.get("seq_len", args.seq))
+        ls = load_loader_state(resume_path) if resume_path else None
+        if args.resume and ls is None:
+            print("[train] WARNING: checkpoint carries no loader_state; "
+                  "the data stream restarts from the beginning")
+        loader = StreamingLoader(
+            source, args.batch,
+            state=LoaderState.from_dict(ls) if ls else None)
+        batches = loader
+        if args.prefetch > 0:
+            bsh = (NamedSharding(mesh, batch_spec(mesh, 2))
+                   if mesh is not None else None)
+            prefetcher = PrefetchIterator(
+                loader, depth=args.prefetch,
+                place=lambda b: device_put_batch(b, bsh))
+            batches = prefetcher
+    else:
+        data = SyntheticLM(cfg.vocab_size, args.seq, args.batch, branching=4)
 
-    def batch_at(t):
-        batch = data.batch_at(t)
-        if cfg.is_encoder_decoder:
-            batch["encoder_embeds"] = jax.random.normal(
-                jax.random.PRNGKey(t), (args.batch, cfg.encoder_len, cfg.d_model))
-        return batch
+        def batch_at(t):
+            batch = data.batch_at(t)
+            if cfg.is_encoder_decoder:
+                batch["encoder_embeds"] = jax.random.normal(
+                    jax.random.PRNGKey(t),
+                    (args.batch, cfg.encoder_len, cfg.d_model))
+            return batch
+
+        batches = batch_at
+
+    def loader_state_now():
+        """Cursor of the next batch TRAINING will consume: the
+        prefetcher's snapshot under run-ahead, the loader's otherwise."""
+        it = prefetcher if prefetcher is not None else loader
+        return None if it is None else it.state
 
     # tracker stack: in-memory (the returned loss curve), rate-limited
     # stdout progress, and optionally a durable JSONL metrics file.  The
@@ -277,23 +357,81 @@ def main(argv=None):
     if args.metrics_jsonl:
         backends.append(JsonlTracker(args.metrics_jsonl))
     tracker = CompositeTracker(backends)
-    ts = run_steps(step, ts, batch_at, args.steps, start=start,
+    callbacks = [StepTimer(tokens_per_step=args.batch * seq)]
+    if prefetcher is not None:
+        callbacks.append(PrefetchMonitor(prefetcher))
+
+    def train_meta():
+        return {"total_steps": horizon, "optimizer": spec.name,
+                "lr": args.lr, "optimizer_spec": spec.to_json()}
+
+    # periodic (optionally async) checkpointing: the hook runs after each
+    # step with the NEW TrainState, and saves it together with the data
+    # cursor of the NEXT batch — the pair that makes resume exact
+    saver = AsyncCheckpointer() if (args.ckpt and args.async_save) else None
+
+    def save_step(step_no, state_ts):
+        tree = {"params": state_ts.params_view,
+                "opt": to_pytree(state_ts.opt_state)}
+        # keep_last_n=0 still maintains the latest/best symlinks (no
+        # pruning) — step-named families always carry their pointers
+        kw = dict(loader_state=loader_state_now(),
+                  keep_last_n=args.keep_last_n)
+        dest = step_dir(args.ckpt, step_no)
+        if saver is not None:
+            saver.save(dest, tree, step_no, **kw)
+        else:
+            save_checkpoint(dest, tree, step_no, **kw)
+
+    step_hook = None
+    if args.ckpt and args.save_every > 0:
+        # train_meta.json up front (base dir), so an interrupted run is
+        # already resumable from its newest periodic save
+        os.makedirs(args.ckpt, exist_ok=True)
+        with open(os.path.join(args.ckpt, "train_meta.json"), "w") as f:
+            json.dump(train_meta(), f)
+
+        def step_hook(t, state_ts):
+            if (t + 1) % args.save_every == 0:
+                save_step(t + 1, state_ts)
+
+    ts = run_steps(step, ts, batches, args.steps, start=start,
                    tracker=tracker, log_every=args.log_every,
-                   callbacks=[StepTimer(tokens_per_step=args.batch * args.seq)])
+                   callbacks=callbacks, step_hook=step_hook)
     losses = mem.series("loss")
     if args.ckpt:
         # checkpoint from the LIVE TrainState.  A FlatOptState holds the
         # params in its flat buffers (bit-equal to the view by the
         # padding invariant), so persist the pytree form — halves the
         # checkpoint; --resume rebuilds the resident buffers losslessly
-        save_state = to_pytree(ts.opt_state)
-        save_checkpoint(args.ckpt,
-                        {"params": ts.params_view, "opt": save_state},
-                        step=max(start, args.steps))
+        final_step = max(start, args.steps)
+        in_family = args.save_every > 0 or (
+            os.path.isdir(args.ckpt)
+            and resolve_checkpoint(args.ckpt) != args.ckpt)
+        if in_family:
+            # step-named family: periodic mode, or a resume whose --ckpt
+            # is the BASE of one (don't clobber the base — join it)
+            hook_saved = (args.save_every > 0 and final_step > start
+                          and final_step % args.save_every == 0)
+            if not hook_saved:
+                save_step(final_step, ts)
+        else:
+            save_checkpoint(args.ckpt,
+                            {"params": ts.params_view,
+                             "opt": to_pytree(ts.opt_state)},
+                            step=final_step, loader_state=loader_state_now())
         with open(os.path.join(args.ckpt, "train_meta.json"), "w") as f:
-            json.dump({"total_steps": horizon, "optimizer": spec.name,
-                       "lr": args.lr, "optimizer_spec": spec.to_json()}, f)
+            json.dump(train_meta(), f)
         print(f"[train] checkpoint -> {args.ckpt}")
+    if saver is not None:
+        saver.close()                  # drain pending commits, re-raise errors
+    if prefetcher is not None:
+        c = prefetcher.counters()
+        print(f"[train] input stall {c['input_stall_s_per_step']*1e3:.2f} "
+              f"ms/step, prefetch depth avg {c['prefetch_depth_avg']:.2f}")
+        prefetcher.close()             # also closes the loader + source
+    elif loader is not None:
+        loader.close()
     return losses
 
 

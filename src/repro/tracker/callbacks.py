@@ -32,7 +32,8 @@ import jax
 
 from repro.tracker import NullTracker, Tracker, scalarize
 
-__all__ = ["Callback", "StepTimer", "MetricsBuffer", "CallbackRunner"]
+__all__ = ["Callback", "StepTimer", "PrefetchMonitor", "MetricsBuffer",
+           "CallbackRunner"]
 
 
 class Callback:
@@ -92,6 +93,37 @@ class StepTimer(Callback):
             out["examples_per_s"] = (self.examples_per_step * self.n_steps
                                      / elapsed)
         return out
+
+
+class PrefetchMonitor(Callback):
+    """Input-pipeline health metrics from a ``repro.data.PrefetchIterator``
+    (or anything exposing its ``stall_log``/``counters()`` surface).
+
+    Per step: ``input_stall_s`` (time the step blocked waiting for a
+    batch) and ``prefetch_depth`` (queue occupancy when the batch was
+    taken).  The prefetcher appends one ``stall_log`` entry per consumed
+    batch in order, and the runner flushes records in step order, so
+    popping left keeps the pairing exact even though flushes are
+    deferred.  ``on_end``: run-level ``input_stall_s`` total /
+    ``input_stall_s_per_step`` / ``prefetch_depth_avg`` — the numbers
+    ``benchmarks/bench_data_pipeline.py`` stamps and CI gates (stall
+    ~ 0 with prefetch on)."""
+
+    def __init__(self, prefetcher) -> None:
+        self.prefetcher = prefetcher
+
+    def on_step(self, step, metrics):
+        log = getattr(self.prefetcher, "stall_log", None)
+        if not log:
+            return None
+        stall, depth = log.popleft()
+        return {"input_stall_s": stall, "prefetch_depth": depth}
+
+    def on_end(self):
+        c = self.prefetcher.counters()
+        return {"input_stall_s": c["input_stall_s"],
+                "input_stall_s_per_step": c["input_stall_s_per_step"],
+                "prefetch_depth_avg": c["prefetch_depth_avg"]}
 
 
 class MetricsBuffer:

@@ -153,9 +153,10 @@ def make_train_step(cfg: ModelConfig, rt: Runtime, opt: Optimizer,
     return train_step
 
 
-def run_steps(step_fn, state: TrainState, batch_at, n_steps: int, *,
+def run_steps(step_fn, state: TrainState, batches, n_steps: int, *,
               start: int = 0, tracker=None, callbacks=(), log_every: int = 1,
-              summary: Optional[Dict[str, Any]] = None) -> TrainState:
+              summary: Optional[Dict[str, Any]] = None,
+              step_hook=None) -> TrainState:
     """Host-side training loop around a (possibly jitted, possibly
     donated) ``train_step(state, batch) -> (state', stats)``: threads the
     state, buffers the per-step device stats, and drains them into the
@@ -163,11 +164,23 @@ def run_steps(step_fn, state: TrainState, batch_at, n_steps: int, *,
     drains, so logging never serializes dispatch — the same pending-drain
     discipline the launcher documents).
 
-    ``batch_at(t)`` produces the batch for step ``t``.  ``callbacks``
-    (``repro.tracker.callbacks.Callback``) run in registration order at
-    each drain and may add derived metrics (wall-clock, tokens/sec);
-    their ``on_end`` summaries merge with ``summary`` into one
-    ``tracker.log_summary`` record before the tracker is finished.
+    ``batches`` is either the historical ``batch_at(t)`` callable (the
+    batch for step ``t``) or any ITERATOR/ITERABLE of batches — e.g. a
+    ``repro.data.StreamingLoader`` or the ``PrefetchIterator`` wrapping
+    one.  An iterator that exhausts (``StopIteration``) ends the run
+    early and cleanly — with ``max_epochs`` set on the loader that is
+    the epoch bound; ``n_steps`` stays the step bound.
+
+    ``callbacks`` (``repro.tracker.callbacks.Callback``) run in
+    registration order at each drain and may add derived metrics
+    (wall-clock, tokens/sec); their ``on_end`` summaries merge with
+    ``summary`` into one ``tracker.log_summary`` record before the
+    tracker is finished.
+
+    ``step_hook(t, state)`` — when given — runs after every step with
+    the NEW state, outside the metrics pump: the launcher uses it for
+    periodic (async) checkpointing, which must see the post-step state
+    and the data iterator's post-step cursor together.
 
     This is the ONE loop the launcher, the benchmark harness, and the
     sweep share — so every run emits the same record stream regardless
@@ -175,8 +188,19 @@ def run_steps(step_fn, state: TrainState, batch_at, n_steps: int, *,
     """
     from repro.tracker.callbacks import CallbackRunner
     runner = CallbackRunner(tracker, callbacks, flush_every=log_every)
+    if callable(batches) and not hasattr(batches, "__next__"):
+        next_batch = batches                      # batch_at(t) form
+    else:
+        it = iter(batches)
+        next_batch = lambda t: next(it)           # noqa: E731
     for t in range(start, n_steps):
-        state, stats = step_fn(state, batch_at(t))
+        try:
+            batch = next_batch(t)
+        except StopIteration:
+            break
+        state, stats = step_fn(state, batch)
         runner.push(t, stats)
+        if step_hook is not None:
+            step_hook(t, state)
     runner.close(summary)
     return state

@@ -245,7 +245,7 @@ def test_meta_dtype_sidecar_written(tmp_path):
     tree = make_tree("mixed")
     save_checkpoint(str(tmp_path / "ck"), tree, step=0)
     meta = json.load(open(tmp_path / "ck" / "meta.json"))
-    assert meta["format"] == 2
+    assert meta["format"] == 3
     assert sorted(meta["dtypes"].values()) == sorted(
         jnp.dtype(d).name for d in DTYPE_SPECS["mixed"])
     # bf16 leaves must be stored as a uint16 view, not a void record

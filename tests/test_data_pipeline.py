@@ -1,0 +1,452 @@
+"""Streaming data pipeline (fast lane): pack format, sharded loader,
+prefetch, loader-state checkpointing, retention/symlinks, async saves.
+
+The headline guarantees under test:
+
+  * exact-batch deterministic resume — interrupt at step k, save the
+    ``LoaderState`` with the checkpoint, resume: batches and losses for
+    steps k..n are BITWISE identical to an uninterrupted run, with and
+    without prefetch, for fp32 and bf16 resident states;
+  * the prefetcher's ``state`` stays exact under run-ahead (it is the
+    cursor of the next batch the CONSUMER will see, not the loader's);
+  * async saves never block on commit I/O (verified with a delayed
+    commit thread) and re-raise background failures;
+  * retention prunes only committed ``step_*`` siblings and never a
+    symlink target.
+"""
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (AsyncCheckpointer, is_committed,
+                              load_checkpoint, load_loader_state,
+                              resolve_checkpoint, save_checkpoint, step_dir)
+from repro.data import (DataPackWriter, DiskShardedSource, LoaderState,
+                        MemorySource, PrefetchIterator, StreamingLoader,
+                        SyntheticLM, n_examples, pack_dataset)
+
+
+def _arrays(n, seq=8, seed=0):
+    rng = np.random.RandomState(seed)
+    return {"tokens": rng.randint(0, 100, size=(n, seq)).astype(np.int32),
+            "loss_mask": np.ones((n, seq), np.float32)}
+
+
+def _batches(loader, k):
+    return [next(loader) for _ in range(k)]
+
+
+def _assert_batch_equal(a, b):
+    assert sorted(a) == sorted(b)
+    for f in a:
+        np.testing.assert_array_equal(np.asarray(a[f]), np.asarray(b[f]))
+
+
+# ---------------------------------------------------------------- format
+
+def test_pack_roundtrip_including_extension_dtypes(tmp_path):
+    arrays = _arrays(40)
+    arrays["emb"] = np.asarray(
+        jnp.arange(40 * 3, dtype=jnp.bfloat16).reshape(40, 3))
+    path = str(tmp_path / "ds")
+    pack_dataset(path, arrays, shard_size=16, meta={"kind": "test"})
+    src = DiskShardedSource(path)
+    assert src.shard_lengths() == (16, 16, 8)
+    assert n_examples(src) == 40
+    assert src.meta["kind"] == "test"
+    assert set(src.fields) == {"tokens", "loss_mask", "emb"}
+    got = src.read(1, 4, 10)
+    assert got["emb"].dtype == jnp.bfloat16      # dtype sidecar view-back
+    for f in arrays:
+        np.testing.assert_array_equal(np.asarray(got[f]),
+                                      np.asarray(arrays[f][20:30]))
+    src.close()
+
+
+def test_index_is_the_commit_marker(tmp_path):
+    path = str(tmp_path / "ds")
+    pack_dataset(path, _arrays(8), shard_size=4)
+    os.remove(os.path.join(path, "dataset.json"))
+    with pytest.raises(FileNotFoundError, match="not a packed dataset"):
+        DiskShardedSource(path)
+
+
+def test_pack_refuses_existing_dataset(tmp_path):
+    path = str(tmp_path / "ds")
+    pack_dataset(path, _arrays(8), shard_size=4)
+    with pytest.raises(ValueError):
+        DataPackWriter(path, shard_size=4)
+
+
+# ---------------------------------------------------------------- loader
+
+def test_loader_deterministic_and_seed_sensitive(tmp_path):
+    src = MemorySource(_arrays(48), shard_size=8)
+    a = _batches(StreamingLoader(src, 8, seed=1), 10)
+    b = _batches(StreamingLoader(src, 8, seed=1), 10)
+    c = _batches(StreamingLoader(src, 8, seed=2), 10)
+    for x, y in zip(a, b):
+        _assert_batch_equal(x, y)
+    assert any(not np.array_equal(x["tokens"], y["tokens"])
+               for x, y in zip(a, c))
+
+
+def test_loader_seek_is_bitwise(tmp_path):
+    src = MemorySource(_arrays(48), shard_size=8)
+    loader = StreamingLoader(src, 8, seed=3)
+    states, batches = [], []
+    for _ in range(12):                     # crosses an epoch boundary
+        states.append(loader.state)
+        batches.append(next(loader))
+    for k in (0, 3, 7, 11):
+        replay = StreamingLoader(src, 8, seed=3, state=states[k])
+        for want in batches[k:]:
+            _assert_batch_equal(next(replay), want)
+
+
+def test_loader_state_serializes(tmp_path):
+    st = LoaderState(epoch=2, shard_cursor=5, offset=3, key=(7, 9))
+    rt = LoaderState.from_dict(json.loads(json.dumps(st.to_dict())))
+    assert rt == st
+    with pytest.raises(ValueError):
+        LoaderState.from_dict({"epoch": 0})
+
+
+def test_loader_drops_epoch_tail_and_bounds_epochs():
+    src = MemorySource(_arrays(10), shard_size=5)
+    loader = StreamingLoader(src, 4, shuffle=False, max_epochs=1)
+    assert loader.batches_per_epoch() == 2
+    got = _batches(loader, 2)
+    assert all(b["tokens"].shape == (4, 8) for b in got)
+    with pytest.raises(StopIteration):      # 2 full batches, tail dropped
+        next(loader)
+
+
+def test_loader_per_process_sharding_covers_globally():
+    arrays = _arrays(32)
+    src = MemorySource(arrays, shard_size=4)   # 8 shards, round-robin
+    parts = [StreamingLoader(src, 8, shuffle=False,
+                             process_index=p, process_count=2)
+             for p in (0, 1)]
+    assert all(lo.local_batch == 4 for lo in parts)
+    seen = []
+    for _ in range(4):                      # one epoch = 32/8 batches
+        for lo in parts:
+            seen.append(next(lo)["tokens"])
+    seen = np.concatenate(seen, axis=0)
+    # global coverage: every example exactly once per epoch
+    want = arrays["tokens"]
+    assert seen.shape == want.shape
+    seen_sorted = seen[np.lexsort(seen.T[::-1])]
+    want_sorted = want[np.lexsort(want.T[::-1])]
+    np.testing.assert_array_equal(seen_sorted, want_sorted)
+
+
+def test_loader_validates_shape_contract():
+    src = MemorySource(_arrays(16), shard_size=4)
+    with pytest.raises(ValueError):         # global batch % P != 0
+        StreamingLoader(src, 5, process_index=0, process_count=2)
+    with pytest.raises(ValueError):         # epoch smaller than local batch
+        StreamingLoader(MemorySource(_arrays(4), shard_size=4), 8)
+
+
+# -------------------------------------------------------------- prefetch
+
+def test_prefetch_bitwise_and_state_exact():
+    src = MemorySource(_arrays(48), shard_size=8)
+    sync = StreamingLoader(src, 8, seed=5)
+    sync_batches, sync_states = [], []
+    for _ in range(9):
+        sync_batches.append(next(sync))
+        sync_states.append(sync.state)      # cursor AFTER consuming t
+    with PrefetchIterator(StreamingLoader(src, 8, seed=5),
+                          depth=3, place=None) as pf:
+        for t in range(9):
+            _assert_batch_equal(next(pf), sync_batches[t])
+            # run-ahead must not leak into the exposed cursor
+            assert pf.state == sync_states[t]
+        c = pf.counters()
+    assert c["prefetch_batches"] == 9
+    assert c["prefetch_depth"] == 3
+
+
+def test_prefetch_propagates_source_errors():
+    class Exploding:
+        def shard_lengths(self):
+            return (16,)
+
+        def read(self, shard, start, count):
+            if start >= 8:
+                raise RuntimeError("disk on fire")
+            return _arrays(count)
+
+    pf = PrefetchIterator(StreamingLoader(Exploding(), 4, shuffle=False),
+                          depth=2, place=None)
+    got = _batches(pf, 2)
+    assert len(got) == 2
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        for _ in range(4):
+            next(pf)
+    pf.close()
+
+
+# ------------------------------------------- loader state in checkpoints
+
+def test_checkpoint_carries_loader_state(tmp_path):
+    tree = {"w": jnp.arange(4, dtype=jnp.float32)}
+    st = LoaderState(epoch=1, shard_cursor=2, offset=7, key=(3, 4))
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, tree, step=9, loader_state=st)
+    meta = json.load(open(os.path.join(path, "meta.json")))
+    assert meta["format"] == 3
+    assert LoaderState.from_dict(load_loader_state(path)) == st
+
+
+def test_checkpoint_without_loader_state_reports_none(tmp_path):
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, {"w": jnp.zeros(2)}, step=1)
+    assert load_loader_state(path) is None  # format-2-era behavior
+
+
+# -------------------------------------------- retention/symlinks/resolve
+
+def test_retention_prunes_only_committed_step_dirs(tmp_path):
+    base = str(tmp_path)
+    tree = {"w": jnp.arange(3, dtype=jnp.float32)}
+    os.makedirs(tmp_path / "not_a_ckpt")    # innocent sibling
+    (tmp_path / "not_a_ckpt" / "data.txt").write_text("keep me")
+    for s in (1, 2, 3, 4):
+        save_checkpoint(step_dir(base, s), tree, s, keep_last_n=2)
+    names = sorted(os.listdir(base))
+    assert "not_a_ckpt" in names
+    steps = [n for n in names if n.startswith("step_")]
+    assert steps == ["step_00000003", "step_00000004"]
+    assert os.readlink(os.path.join(base, "latest")) == "step_00000004"
+
+
+def test_best_symlink_tracks_lowest_metric_and_survives_pruning(tmp_path):
+    base = str(tmp_path)
+    tree = {"w": jnp.arange(3, dtype=jnp.float32)}
+    for s, m in [(1, 3.0), (2, 1.5), (3, 2.0), (4, 1.9), (5, 1.8)]:
+        save_checkpoint(step_dir(base, s), tree, s, keep_last_n=2, metric=m)
+    assert os.readlink(os.path.join(base, "best")) == "step_00000002"
+    steps = sorted(n for n in os.listdir(base) if n.startswith("step_"))
+    # newest two plus the (older) best target survive
+    assert steps == ["step_00000002", "step_00000004", "step_00000005"]
+    assert json.load(open(os.path.join(
+        base, "step_00000002", "meta.json")))["metric"] == 1.5
+
+
+def test_resolve_checkpoint_layouts(tmp_path):
+    tree = {"w": jnp.zeros(2)}
+    direct = str(tmp_path / "direct")
+    save_checkpoint(direct, tree)
+    assert resolve_checkpoint(direct) == direct
+    base = str(tmp_path / "family")
+    save_checkpoint(step_dir(base, 3), tree, 3, keep_last_n=0)
+    save_checkpoint(step_dir(base, 7), tree, 7, keep_last_n=0)
+    assert resolve_checkpoint(base) == os.path.join(base, "step_00000007")
+    os.remove(os.path.join(base, "latest"))  # no symlink: newest committed
+    assert resolve_checkpoint(base) == os.path.join(base, "step_00000007")
+    missing = str(tmp_path / "nope")
+    assert resolve_checkpoint(missing) == missing
+
+
+# ------------------------------------------------------------ async save
+
+def test_async_save_never_blocks_on_commit(tmp_path):
+    """The commit thread is artificially delayed; save() must still
+    return in device->host-copy time, and the checkpoint must not be
+    committed until the background thread finishes."""
+    tree = {"w": jnp.arange(1024, dtype=jnp.float32)}
+    path = str(tmp_path / "ck")
+    with AsyncCheckpointer(commit_delay_s=0.4) as ac:
+        t0 = time.perf_counter()
+        ac.save(path, tree, step=5)
+        assert time.perf_counter() - t0 < 0.2   # not the 0.4s commit
+        assert not is_committed(path)
+        ac.wait()
+        assert is_committed(path)
+    restored, step = load_checkpoint(path, tree)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_async_save_reraises_background_failure(tmp_path):
+    bad = tmp_path / "not_ckpt"
+    bad.mkdir()
+    (bad / "something.txt").write_text("user data")
+    ac = AsyncCheckpointer()
+    ac.save(str(bad), {"w": jnp.zeros(2)})      # will refuse to clobber
+    with pytest.raises(ValueError, match="refusing to overwrite"):
+        ac.wait()
+    ac.close()
+    assert (bad / "something.txt").read_text() == "user data"
+
+
+def test_async_saves_commit_in_order(tmp_path):
+    base = str(tmp_path)
+    with AsyncCheckpointer() as ac:
+        for s in (1, 2, 3):
+            ac.save(step_dir(base, s), {"w": jnp.full((2,), float(s))},
+                    step=s, keep_last_n=0)
+    assert os.readlink(os.path.join(base, "latest")) == "step_00000003"
+
+
+# ------------------------------------------------------- run_steps shape
+
+def test_run_steps_accepts_iterator_and_step_hook():
+    from repro.training import run_steps
+
+    def step_fn(state, batch):
+        return state + batch, {"loss": float(batch)}
+
+    hooks = []
+    out = run_steps(step_fn, 0, iter([1, 2, 3, 4]), 10,
+                    step_hook=lambda t, s: hooks.append((t, s)))
+    assert out == 10                # stopped at exhaustion, not n_steps
+    assert hooks == [(0, 1), (1, 3), (2, 6), (3, 10)]
+
+    out = run_steps(step_fn, 0, lambda t: t, 4)   # batch_at form unchanged
+    assert out == 6
+
+
+# -------------------------------- exact-batch bitwise resume (tentpole)
+
+def _toy_setup(dtype):
+    """A tiny embedding model on the resident fused path: enough to make
+    'bitwise resume' a statement about the REAL TrainState machinery."""
+    from repro.core import sngm
+    from repro.core.schedules import poly_power
+
+    opt = sngm(poly_power(0.5, 16, 1.1), beta=0.9, weight_decay=1e-4,
+               fused="multi_tensor")
+    params = {"emb": (jax.random.normal(jax.random.PRNGKey(0), (100, 8))
+                      .astype(dtype))}
+
+    def loss_fn(p, batch):
+        h = p["emb"][batch["tokens"]].astype(jnp.float32)
+        return jnp.mean(h * batch["loss_mask"][..., None])
+
+    grad = jax.value_and_grad(loss_fn)
+
+    def step(ts, batch):
+        l, g = grad(ts.params_view, batch)
+        ts, stats = opt.step_state(g, ts)
+        return ts, {**stats, "loss": l}
+
+    return opt, params, jax.jit(step, donate_argnums=(0,))
+
+
+def _toy_batches(prefetch):
+    loader = StreamingLoader(MemorySource(_arrays(64), shard_size=8),
+                             8, seed=11)
+    if prefetch:
+        return PrefetchIterator(loader, depth=prefetch, place=None)
+    return loader
+
+
+@pytest.mark.parametrize("prefetch", [0, 2], ids=["sync", "prefetch"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["fp32", "bf16"])
+def test_exact_batch_resume_is_bitwise(tmp_path, prefetch, dtype):
+    """Interrupt at step 4 of 8, checkpoint {state, loader cursor},
+    resume: losses 4..8 and the final params must be BITWISE equal to an
+    uninterrupted run — resident fused state, fp32 and bf16."""
+    from repro.core import TrainState, from_pytree, to_pytree
+
+    opt, params, step = _toy_setup(dtype)
+    n, k = 8, 4
+    path = str(tmp_path / "ck")
+
+    def fresh_ts():
+        # the launcher idiom: opt.init + TrainState.wrap (resident flats
+        # take ownership of the params on the fused path)
+        p = jax.tree.map(jnp.copy, params)
+        return TrainState.wrap(p, opt.init(p))
+
+    # uninterrupted reference
+    it = _toy_batches(prefetch)
+    ts = fresh_ts()
+    ref_losses = []
+    for _ in range(n):
+        ts, stats = step(ts, next(it))
+        ref_losses.append(float(stats["loss"]))
+    ref_emb = np.asarray(jax.device_get(ts.params_view["emb"]))
+
+    # interrupted at k: save state + the iterator's post-step cursor
+    it = _toy_batches(prefetch)
+    ts = fresh_ts()
+    for _ in range(k):
+        ts, stats = step(ts, next(it))
+    save_checkpoint(path, {"params": ts.params_view,
+                           "opt": to_pytree(ts.opt_state)},
+                    step=k, loader_state=it.state)
+    if prefetch:
+        it.close()
+
+    # resume: restore both, re-seek, run k..n
+    p0 = jax.tree.map(jnp.copy, params)
+    like = {"params": p0, "opt": to_pytree(opt.init(p0))}
+    restored, got_k = load_checkpoint(path, like)
+    assert got_k == k
+    ls = LoaderState.from_dict(load_loader_state(path))
+    loader = StreamingLoader(MemorySource(_arrays(64), shard_size=8),
+                             8, seed=11, state=ls)
+    it = (PrefetchIterator(loader, depth=prefetch, place=None)
+          if prefetch else loader)
+    ts = TrainState.wrap(restored["params"],
+                         from_pytree(restored["opt"], restored["params"]))
+    res_losses = []
+    for _ in range(k, n):
+        ts, stats = step(ts, next(it))
+        res_losses.append(float(stats["loss"]))
+    if prefetch:
+        it.close()
+    assert res_losses == ref_losses[k:]     # bitwise, not approx
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(ts.params_view["emb"])), ref_emb)
+
+
+def test_launcher_disk_resume_bitwise_with_async_family(tmp_path):
+    """End-to-end --data-dir + --prefetch + --save-every + --async-save
+    + --keep-last-n: the resumed segment's losses equal the
+    uninterrupted run's BITWISE, resume resolves the step family via
+    `latest`, and retention holds."""
+    from repro.configs import get_config, smoke_variant
+    from repro.launch.train import main as train_main
+
+    cfg = smoke_variant(get_config("gemma-2b"))
+    src = SyntheticLM(cfg.vocab_size, 16, 1, epoch_examples=256, n_shards=4)
+    ds = str(tmp_path / "ds")
+    with DataPackWriter(ds, shard_size=64,
+                        meta={"vocab_size": cfg.vocab_size,
+                              "seq_len": 16}) as w:
+        for s in range(4):
+            w.add(src.read(s, 0, 64))
+
+    def run(extra):
+        return train_main(
+            ["--arch", "gemma-2b", "--reduced", "--batch", "4", "--seq",
+             "16", "--n-micro", "1", "--optimizer", "sngm", "--fused",
+             "multi_tensor", "--lr", "0.5", "--total-steps", "8",
+             "--log-every", "100", "--data-dir", ds, "--prefetch", "2"]
+            + extra)
+
+    full = run(["--steps", "8"])
+    base = str(tmp_path / "ck")
+    part1 = run(["--steps", "4", "--ckpt", base, "--save-every", "2",
+                 "--keep-last-n", "2", "--async-save"])
+    assert part1 == full[:4]                     # bitwise
+    assert os.readlink(os.path.join(base, "latest")) == "step_00000004"
+
+    resumed = run(["--steps", "8", "--ckpt", base, "--resume"])
+    assert resumed == full[4:]                   # bitwise across the seam
+    steps = sorted(n for n in os.listdir(base) if n.startswith("step_"))
+    assert steps[-1] == "step_00000008"          # joined the family
