@@ -36,9 +36,11 @@ directory that LOOKS like a checkpoint.  ``check_loadable`` (used by
 save, recovers a crash-interrupted swap from its surviving committed
 staging/backup dir, and still accepts markerless LEGACY checkpoints
 when demonstrably complete (meta ``n_leaves`` matches the archive).
-Multi-host runs fall back to in-place shard writes with the marker
-written LAST by process 0 (cross-host atomic commit is the orbax-style
-coordination on the ROADMAP).
+Multi-host runs take the coordinated shared-filesystem barrier
+(``_multihost_save``): every rank stages its shard plus a per-rank done
+marker, and process 0 writes ``COMMIT`` and swaps the staged dir into
+place only after ALL ranks report done — so the marker can never bless
+a shard set another host was still writing.
 
 Loader state (meta format 3): ``save_checkpoint(..., loader_state=)``
 persists the data pipeline's serialized cursor (``repro.data.loader
@@ -167,7 +169,13 @@ def _dtype_by_name(name: str) -> np.dtype:
 
 def _write_shard_and_meta(outdir: str, tree: Any, step: int,
                           loader_state: Optional[Dict[str, Any]] = None,
-                          metric: Optional[float] = None) -> None:
+                          metric: Optional[float] = None, *,
+                          process_index: Optional[int] = None,
+                          write_meta: bool = True) -> None:
+    """Write this process's shard archive (and, when ``write_meta``, the
+    meta.json sidecar — exactly ONE writer per save under the multi-host
+    barrier, so the sidecar can never tear from concurrent writes)."""
+    rank = jax.process_index() if process_index is None else process_index
     flat = _flatten(tree)
     arrays, dtypes = {}, {}
     for k, v in flat.items():
@@ -176,8 +184,9 @@ def _write_shard_and_meta(outdir: str, tree: Any, step: int,
         if not _np_savable(a.dtype):
             a = a.view(f"uint{8 * a.dtype.itemsize}")
         arrays[k] = a
-    np.savez(os.path.join(outdir, f"shard_{jax.process_index():05d}.npz"),
-             **arrays)
+    np.savez(os.path.join(outdir, f"shard_{rank:05d}.npz"), **arrays)
+    if not write_meta:
+        return
     meta: Dict[str, Any] = {"step": step, "n_leaves": len(arrays),
                             "format": 3, "dtypes": dtypes}
     if loader_state is not None:
@@ -186,6 +195,120 @@ def _write_shard_and_meta(outdir: str, tree: Any, step: int,
         meta["metric"] = float(metric)
     with open(os.path.join(outdir, "meta.json"), "w") as f:
         json.dump(meta, f)
+
+
+# ---------------------------------------------------------------------------
+# multi-host coordinated commit (shared-filesystem marker barrier)
+# ---------------------------------------------------------------------------
+
+def _wait_for(predicate, timeout_s: float, poll_s: float, desc: str) -> None:
+    """Poll ``predicate`` until true; TimeoutError naming ``desc``
+    otherwise.  Plain filesystem polling — the barrier must work with
+    nothing but the shared checkpoint directory (no collective runtime),
+    so it also coordinates processes that are mid-teardown."""
+    deadline = time.monotonic() + timeout_s
+    while not predicate():
+        if time.monotonic() >= deadline:
+            raise TimeoutError(
+                f"multi-host checkpoint barrier timed out after "
+                f"{timeout_s:.0f}s waiting for {desc}")
+        time.sleep(poll_s)
+
+
+def _ready_marker(staging: str, step: int) -> str:
+    return os.path.join(staging, f".ready.{step}")
+
+
+def _done_marker(staging: str, step: int, rank: int) -> str:
+    return os.path.join(staging, f".done.{step}.{rank:05d}")
+
+
+def _multihost_save(path: str, tree: Any, step: int,
+                    loader_state: Optional[Dict[str, Any]],
+                    metric: Optional[float],
+                    keep_last_n: Optional[int], *,
+                    process_index: Optional[int] = None,
+                    process_count: Optional[int] = None,
+                    timeout_s: float = 300.0,
+                    poll_s: float = 0.05) -> None:
+    """Coordinated atomic commit over a SHARED filesystem.
+
+    The old multi-host path wrote shards straight into the live dir with
+    process 0 dropping the marker after its own (local) write — a commit
+    race: a fast process 0 could bless a shard set other hosts were
+    still writing, and a crashed peer left a torn-but-committed dir.
+    This barrier stages everything and commits only after every rank
+    reports done:
+
+      rank 0   prepares ``<path>.tmp-staging`` and drops ``.ready.<step>``
+      ranks    wait for ready, write ``shard_<rank>.npz``, then drop
+               ``.done.<step>.<rank>``   (meta.json: rank 0 only — one
+               sidecar writer, no tearing)
+      rank 0   waits for ALL done markers, removes the barrier markers,
+               writes COMMIT, and swaps the staged dir into place
+               (rename-aside + replace, same crash story as single-host)
+      ranks    wait until ``path`` is committed at this step
+
+    A crash before COMMIT leaves an uncommitted staging dir that
+    ``check_loadable`` rejects and the next save clears; a crash during
+    the swap is recovered by ``_recover_interrupted_swap``.  Saves are
+    collective and in program order on every rank (the launcher's hooks
+    guarantee this).  ``process_index``/``process_count`` default to the
+    jax runtime but stay injectable so thread-based tests can exercise
+    the barrier without a multi-process jax client."""
+    rank = jax.process_index() if process_index is None else process_index
+    world = jax.process_count() if process_count is None else process_count
+    staging = f"{path}.tmp-staging"
+    backup = f"{path}.tmp-old"
+    ready = _ready_marker(staging, step)
+    if rank == 0:
+        _recover_interrupted_swap(path)
+        if os.path.exists(path) and not _looks_like_checkpoint(path):
+            raise ValueError(
+                f"refusing to overwrite {path!r}: it exists but does not "
+                f"look like a checkpoint directory (no meta.json/"
+                f"{COMMIT_MARKER}); choose an empty or fresh --ckpt path")
+        for leftover in (staging, backup):
+            if os.path.exists(leftover):
+                shutil.rmtree(leftover)
+        os.makedirs(staging)
+        with open(ready, "w") as f:
+            f.write("ready\n")
+    else:
+        _wait_for(lambda: os.path.exists(ready), timeout_s, poll_s,
+                  f"rank 0 to stage {staging!r} for step {step}")
+    _write_shard_and_meta(staging, tree, step, loader_state, metric,
+                          process_index=rank, write_meta=(rank == 0))
+    with open(_done_marker(staging, step, rank), "w") as f:
+        f.write("done\n")
+    if rank == 0:
+        def all_done():
+            return all(os.path.exists(_done_marker(staging, step, r))
+                       for r in range(world))
+        _wait_for(all_done, timeout_s, poll_s,
+                  f"all {world} ranks to write their step-{step} shards")
+        os.remove(ready)
+        for r in range(world):
+            os.remove(_done_marker(staging, step, r))
+        with open(os.path.join(staging, COMMIT_MARKER), "w") as f:
+            f.write("committed\n")
+        if os.path.exists(path):
+            os.rename(path, backup)
+        os.replace(staging, path)              # atomic on POSIX
+        shutil.rmtree(backup, ignore_errors=True)
+        if keep_last_n is not None or metric is not None:
+            _apply_retention(path, keep_last_n, metric)
+    else:
+        def committed_here():
+            if not is_committed(path):
+                return False
+            try:
+                with open(os.path.join(path, "meta.json")) as f:
+                    return json.load(f).get("step") == step
+            except Exception:
+                return False
+        _wait_for(committed_here, timeout_s, poll_s,
+                  f"rank 0 to commit {path!r} at step {step}")
 
 
 def _looks_like_checkpoint(path: str) -> bool:
@@ -336,23 +459,12 @@ def save_checkpoint(path: str, tree: Any, step: int = 0, *,
         loader_state = loader_state.to_dict()
     path = path.rstrip(os.sep)
     if jax.process_count() > 1:
-        # multi-host: every process writes its own shard into the live
-        # dir; process 0 INVALIDATES any stale marker first (an
-        # interrupted overwrite must not leave an old COMMIT blessing a
-        # mixed-step shard set) and drops a fresh marker after its
-        # (local) writes.  Not torn-proof across hosts — the coordinated
-        # commit is a ROADMAP follow-up — but single-host (the
-        # container, tests) takes the atomic staging path below.
-        os.makedirs(path, exist_ok=True)
-        marker = os.path.join(path, COMMIT_MARKER)
-        if jax.process_index() == 0 and os.path.exists(marker):
-            os.remove(marker)
-        _write_shard_and_meta(path, tree, step, loader_state, metric)
-        if jax.process_index() == 0:
-            with open(marker, "w") as f:
-                f.write("committed\n")
-            if keep_last_n is not None or metric is not None:
-                _apply_retention(path, keep_last_n, metric)
+        # multi-host: the shared-filesystem marker barrier — every rank
+        # stages its shard, and process 0 commits + swaps only after ALL
+        # ranks report done (see _multihost_save; fixes the old commit
+        # race where rank 0 could bless a shard set peers were still
+        # writing)
+        _multihost_save(path, tree, step, loader_state, metric, keep_last_n)
         return
     # a previous save may have crashed mid-swap: restore its surviving
     # committed dir to `path` BEFORE the leftover cleanup below, so the

@@ -10,10 +10,12 @@ from repro.core.optim import (
     from_pytree,
 )
 from repro.core.multi_tensor import (
-    FlatOptState, TreeLayout, build_layout, count_packed_bytes, flatten,
-    unflatten, init_flat_adam_state, init_flat_state, leaf_sumsq,
+    FlatGrads, FlatOptState, TreeLayout, build_layout, count_packed_bytes,
+    flatten, unflatten, flat_global_norm, flat_squared_norm,
+    init_flat_adam_state, init_flat_state, leaf_sumsq, mesh_shards,
     multi_tensor_lamb_step, multi_tensor_lamb_step_flat, multi_tensor_step,
-    multi_tensor_step_flat, resident_lamb_step, resident_step,
+    multi_tensor_step_flat, place_flat_state, resident_lamb_step,
+    resident_step,
 )
 from repro.core import transform
 from repro.core.transform import (
@@ -28,9 +30,11 @@ __all__ = ["Optimizer", "OptState", "OptimizerSpec", "TrainState", "sngm",
            "make_optimizer", "optimizer_names",
            "register_optimizer", "global_norm", "tree_squared_norm",
            "schedules", "make_schedule", "to_pytree", "from_pytree",
-           "FlatOptState", "TreeLayout", "build_layout", "count_packed_bytes",
-           "flatten", "unflatten", "init_flat_adam_state", "init_flat_state",
-           "leaf_sumsq", "multi_tensor_lamb_step",
+           "FlatGrads", "FlatOptState", "TreeLayout", "build_layout",
+           "count_packed_bytes", "flatten", "unflatten", "flat_global_norm",
+           "flat_squared_norm", "init_flat_adam_state", "init_flat_state",
+           "leaf_sumsq", "mesh_shards", "place_flat_state",
+           "multi_tensor_lamb_step",
            "multi_tensor_lamb_step_flat", "multi_tensor_step",
            "multi_tensor_step_flat", "resident_lamb_step", "resident_step",
            "transform", "ChainOptState", "GradientTransform", "PlanNode",

@@ -21,11 +21,17 @@ over partials) is used by ``tree_squared_norm``/the per-leaf jnp norms,
 and every segment starts on a CHUNK boundary in the flat buffer, so the
 kernel's row partials are the same numbers in the same order.
 
-Sharding: buffers are built with plain jnp ops (pad/concatenate), so
-under pjit the engine is SPMD-correct — each shard builds its local
-buffer view and the norm finishes with the scalar all-reduce XLA inserts,
-which is exactly the one-collective-per-step property that makes SNGM
-cheap to distribute (paper §5).
+Sharding: flat buffers block 1-D over EVERY axis of a device mesh
+(ZeRO-style — optimizer state has no tensor structure left, so the full
+device count divides it).  ``build_layout(..., shards=S)`` pads buckets
+so each local block is a whole number of kernel tiles, and the kernel
+passes run shard-wise under ``shard_map`` with two-level norms:
+per-shard Pallas chunk partials, then an ``all_gather`` of the partial
+vectors so every shard folds the SAME canonical pairwise reduction —
+sharded==unsharded stays bitwise in fp32 (see the mesh section below).
+That one small collective per norm pass is exactly the
+one-collective-per-step property that makes SNGM cheap to distribute
+(paper §5).
 
 Flat-buffer residency: ``multi_tensor_step`` rebuilds all three buffer
 sets (params/grads/momentum) from the leaf pytrees every step.
@@ -170,13 +176,23 @@ class TreeLayout:
     treedef: Any
     n_leaves: int
     buckets: Tuple[Bucket, ...]
+    # bucket lengths are padded to shards*TILE multiples, so every mesh
+    # shard of a flat buffer is a whole number of kernel tiles; 1 = the
+    # single-device layout.  Tail padding is numerically invisible (all
+    # canonical folds are per-segment), so layouts built for different
+    # shard counts produce bitwise-identical steps.
+    shards: int = 1
 
 
-def build_layout(tree: PyTree) -> TreeLayout:
+def build_layout(tree: PyTree, shards: int = 1) -> TreeLayout:
     """Static (shape/dtype-only) bucketing of a pytree.  Leaves keep their
     original relative order within a bucket; buckets are ordered by dtype
-    name for determinism."""
+    name for determinism.  ``shards`` pads every bucket to a
+    ``shards*TILE`` multiple so the buffers divide evenly over a mesh of
+    that many devices (each local block a whole number of kernel
+    tiles)."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
+    align = int(shards) * TILE
     by_dtype = {}
     for i, leaf in enumerate(leaves):
         by_dtype.setdefault(jnp.dtype(leaf.dtype).name, []).append(i)
@@ -193,11 +209,11 @@ def build_layout(tree: PyTree) -> TreeLayout:
                                 chunk_lo=off // CHUNK,
                                 chunk_hi=off // CHUNK + n_chunks))
             off += n_chunks * CHUNK
-        n_elems = -(-off // TILE) * TILE
+        n_elems = -(-off // align) * align
         buckets.append(Bucket(dtype=jnp.dtype(dname), segments=tuple(segs),
                               n_elems=n_elems, n_chunks=n_elems // CHUNK))
     return TreeLayout(treedef=treedef, n_leaves=len(leaves),
-                      buckets=tuple(buckets))
+                      buckets=tuple(buckets), shards=int(shards))
 
 
 def flatten(tree: PyTree, layout: TreeLayout,
@@ -254,6 +270,149 @@ def _per_chunk(bucket: Bucket, seg_vals: Sequence[jnp.ndarray],
     if bucket.n_chunks > used:
         pieces.append(jnp.full((bucket.n_chunks - used,), fill, jnp.float32))
     return jnp.concatenate(pieces) if len(pieces) > 1 else pieces[0]
+
+
+# ---------------------------------------------------------------------------
+# mesh sharding: flat buffers blocked over ALL mesh axes, two-level norms
+# ---------------------------------------------------------------------------
+#
+# A flat buffer has no tensor structure left, so it shards 1-D over the
+# whole device set (data AND model axes — ZeRO-style optimizer-state
+# partitioning).  Each kernel pass then runs on the LOCAL block inside
+# ``shard_map``, and the norm passes become two-level: per-shard Pallas
+# chunk partials, then an ``all_gather`` of the (tiny) partial vectors so
+# every shard folds the SAME canonical pairwise reduction over the same
+# numbers in the same order.  Gathering partials instead of psum-ing
+# per-shard folded scalars is what keeps sharded==unsharded bitwise in
+# fp32: a psum of partial sums would re-associate the fold.  The gather
+# moves n_chunks f32 scalars (4 bytes per 1024 parameter elements) — the
+# one small collective per norm pass the paper's SNGM cost model prices
+# in (§5).
+
+def mesh_shards(mesh) -> int:
+    """Total device count of a mesh (1 for None) — the shard count flat
+    buffers divide into."""
+    return 1 if mesh is None else int(mesh.size)
+
+
+def flat_sharding(mesh):
+    """NamedSharding blocking a 1-D flat buffer over every mesh axis."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    return NamedSharding(mesh, PartitionSpec(tuple(mesh.axis_names)))
+
+
+def _engine_mesh(layout: TreeLayout, mesh):
+    """The mesh the engine may actually run sharded on, or None.
+
+    Sharded dispatch requires the layout to have been built for exactly
+    this mesh's device count — only then is every local block a whole
+    number of kernel tiles.  A resident state built (or restored) for a
+    different shard count silently falls back to the unsharded ops,
+    which compute the same values (XLA then inserts the collectives it
+    needs); re-place the state via ``optim.from_pytree(..., mesh=...)``
+    to get the sharded fast path."""
+    if mesh is None:
+        return None
+    s = mesh_shards(mesh)
+    return mesh if (s > 1 and layout.shards == s) else None
+
+
+def _shmap(mesh, f, in_specs, out_specs):
+    from jax.experimental.shard_map import shard_map
+    # check_rep=False: outputs include all_gather-ed partial vectors that
+    # ARE replicated, but 0.4.x's replication inference cannot prove it.
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
+def _chunk_sumsq(x, p=None, *, wd: float = 0.0, backend: str = "pallas",
+                 mesh=None) -> jnp.ndarray:
+    """Per-chunk squared-norm partials of a flat buffer; with a mesh, each
+    shard reduces its local tiles and the full (n_chunks,) partial vector
+    is gathered back, bitwise equal to the unsharded launch (the gather
+    is pure concatenation in shard order)."""
+    if mesh is None or backend == "ref":
+        if p is None:
+            return _ops.chunk_sumsq(x, wd=wd, backend=backend)
+        return _ops.chunk_sumsq(x, p, wd=wd, backend=backend)
+    from jax.sharding import PartitionSpec as P
+    ax = tuple(mesh.axis_names)
+    spec = P(ax)
+
+    if p is None:
+        def local(xs):
+            return jax.lax.all_gather(
+                _ops.chunk_sumsq(xs, wd=wd, backend=backend), ax, tiled=True)
+        return _shmap(mesh, local, (spec,), P())(x)
+
+    def local(xs, ps):
+        return jax.lax.all_gather(
+            _ops.chunk_sumsq(xs, ps, wd=wd, backend=backend), ax, tiled=True)
+    return _shmap(mesh, local, (spec, spec), P())(x, p)
+
+
+def _fused_update(pf, gf, uf, ac, c, *, beta: float, wd: float,
+                  cast_g_first: bool, nesterov: bool, apply: bool,
+                  backend: str = "pallas", mesh=None):
+    """Momentum+apply pass; with a mesh, p/g/u and the per-chunk
+    coefficient array are consumed blockwise (the replicated (n_chunks,)
+    coefficients auto-slice under ``in_specs``) and the update-norm
+    partials come back gathered."""
+    if mesh is None or backend == "ref":
+        return _ops.fused_update(pf, gf, uf, ac, c, beta=beta, wd=wd,
+                                 cast_g_first=cast_g_first,
+                                 nesterov=nesterov, apply=apply,
+                                 backend=backend)
+    from jax.sharding import PartitionSpec as P
+    ax = tuple(mesh.axis_names)
+    spec = P(ax)
+
+    def local(pf, gf, uf, ac, c):
+        po, uo, usq = _ops.fused_update(pf, gf, uf, ac, c, beta=beta, wd=wd,
+                                        cast_g_first=cast_g_first,
+                                        nesterov=nesterov, apply=apply,
+                                        backend=backend)
+        return po, uo, jax.lax.all_gather(usq, ax, tiled=True)
+    return _shmap(mesh, local, (spec, spec, spec, spec, P()),
+                  (spec, spec, P()))(pf, gf, uf, ac, c)
+
+
+def _scale_apply(pf, ud, ac, c, *, backend: str = "pallas", mesh=None):
+    """Coefficient-scaled apply pass, blockwise under a mesh (see
+    ``_fused_update``)."""
+    if mesh is None or backend == "ref":
+        return _ops.scale_apply(pf, ud, ac, c, backend=backend)
+    from jax.sharding import PartitionSpec as P
+    ax = tuple(mesh.axis_names)
+    spec = P(ax)
+
+    def local(pf, ud, ac, c):
+        po, ssq = _ops.scale_apply(pf, ud, ac, c, backend=backend)
+        return po, jax.lax.all_gather(ssq, ax, tiled=True)
+    return _shmap(mesh, local, (spec, spec, spec, P()), (spec, P()))(
+        pf, ud, ac, c)
+
+
+def _adam_update(pf, gf, mf, vf, bc1, bc2, *, b1: float, b2: float,
+                 eps: float, wd: float = 0.0, backend: str = "pallas",
+                 mesh=None):
+    """Fused Adam-moment pass, blockwise under a mesh; the three partial
+    vectors (direction/param/grad sumsq) come back gathered."""
+    if mesh is None or backend == "ref":
+        return _ops.adam_update(pf, gf, mf, vf, bc1, bc2, b1=b1, b2=b2,
+                                eps=eps, wd=wd, backend=backend)
+    from jax.sharding import PartitionSpec as P
+    ax = tuple(mesh.axis_names)
+    spec = P(ax)
+
+    def local(pf, gf, mf, vf, bc1, bc2):
+        mo, vo, ud, usq, psq, gsq = _ops.adam_update(
+            pf, gf, mf, vf, bc1, bc2, b1=b1, b2=b2, eps=eps, wd=wd,
+            backend=backend)
+        gather = lambda t: jax.lax.all_gather(t, ax, tiled=True)
+        return mo, vo, ud, gather(usq), gather(psq), gather(gsq)
+    return _shmap(mesh, local, (spec,) * 4 + (P(), P()),
+                  (spec, spec, spec, P(), P(), P()))(pf, gf, mf, vf, bc1, bc2)
 
 
 # ---------------------------------------------------------------------------
@@ -335,26 +494,49 @@ class FlatOptState:
                      for e in self.e_flats)
 
 
-def init_flat_state(params: PyTree) -> FlatOptState:
-    """Build the resident state: params packed once, momentum zeros (f32)."""
-    layout = build_layout(params)
-    return FlatOptState(
+def place_flat_state(state: FlatOptState, mesh) -> FlatOptState:
+    """Commit every flat buffer of a resident state to the mesh's 1-D
+    block sharding (all axes) and replicate the step scalar.  No-op for
+    ``mesh=None``.  Pure placement — values are untouched, so a placed
+    state steps bitwise-identically to the single-device one."""
+    if mesh is None:
+        return state
+    from jax.sharding import NamedSharding, PartitionSpec
+    fs = flat_sharding(mesh)
+    rep = NamedSharding(mesh, PartitionSpec())
+
+    def put(flats):
+        return tuple(jax.device_put(f, fs) for f in flats)
+    return dataclasses.replace(
+        state, step=jax.device_put(state.step, rep),
+        p_flats=put(state.p_flats), u_flats=put(state.u_flats),
+        m_flats=put(state.m_flats), v_flats=put(state.v_flats),
+        e_flats=tuple(put(e) for e in state.e_flats))
+
+
+def init_flat_state(params: PyTree, mesh=None) -> FlatOptState:
+    """Build the resident state: params packed once, momentum zeros (f32).
+    With a mesh, buckets are padded so they divide over all its devices
+    and every buffer is committed to the 1-D block sharding."""
+    layout = build_layout(params, shards=mesh_shards(mesh))
+    state = FlatOptState(
         step=jnp.zeros((), jnp.int32),
         p_flats=tuple(flatten(params, layout)),
         u_flats=tuple(jnp.zeros((b.n_elems,), jnp.float32)
                       for b in layout.buckets),
         layout=layout)
+    return place_flat_state(state, mesh)
 
 
-def init_flat_adam_state(params: PyTree,
-                         form: Any = ("lamb", 0, 2)) -> FlatOptState:
+def init_flat_adam_state(params: PyTree, form: Any = ("lamb", 0, 2),
+                         mesh=None) -> FlatOptState:
     """Resident state for the Adam family: params packed once, both
     moments zeros (f32), no momentum slot.  ``form`` encodes the compiled
     chain's shape — ("lamb", n stateless transforms before scale_by_adam,
     n stateless transforms between it and scale_by_schedule) — which is
     exactly what ``optim.to_pytree`` needs to rebuild the interpreter's
     ``ChainOptState`` layout."""
-    layout = build_layout(params)
+    layout = build_layout(params, shards=mesh_shards(mesh))
 
     def zeros():
         # m and v must be DISTINCT buffers: sharing one zeros array
@@ -363,21 +545,26 @@ def init_flat_adam_state(params: PyTree,
         return tuple(jnp.zeros((b.n_elems,), jnp.float32)
                      for b in layout.buckets)
 
-    return FlatOptState(
+    state = FlatOptState(
         step=jnp.zeros((), jnp.int32),
         p_flats=tuple(flatten(params, layout)),
         u_flats=(), layout=layout,
         m_flats=zeros(), v_flats=zeros(), form=form)
+    return place_flat_state(state, mesh)
 
 
-def init_ema_flats(params: PyTree, layout: TreeLayout
+def init_ema_flats(params: PyTree, layout: TreeLayout, mesh=None
                    ) -> Tuple[jnp.ndarray, ...]:
     """Resident shadow-parameter buffers for ONE ``ema_params`` stage:
     the params packed to f32, copied so the EMA slot never aliases
     ``p_flats`` (double donation).  Matches the interpreter's
     ``jnp.array(p, dtype=f32, copy=True)`` init leaf-for-leaf."""
-    return tuple(jnp.array(f, copy=True)
-                 for f in flatten(params, layout, cast_to=jnp.float32))
+    flats = tuple(jnp.array(f, copy=True)
+                  for f in flatten(params, layout, cast_to=jnp.float32))
+    if mesh is not None:
+        fs = flat_sharding(mesh)
+        flats = tuple(jax.device_put(f, fs) for f in flats)
+    return flats
 
 
 def ema_flats_update(e_flats: Sequence[jnp.ndarray],
@@ -392,11 +579,86 @@ def ema_flats_update(e_flats: Sequence[jnp.ndarray],
                  for e, pf in zip(e_flats, p_flats))
 
 
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass(frozen=True)
+class FlatGrads:
+    """Gradients already packed into the engine's per-bucket flat buffers
+    (the layout rides along as static aux data).
+
+    ``training/step.py`` accumulates micro-batch gradients directly in
+    this form when the optimizer state is resident: each micro-batch
+    flattens and adds into the per-bucket buffers inside the backward
+    ``lax.scan``, so the data-parallel gradient reduction happens as one
+    bucketed collective per micro-batch (overlapped with the next
+    backward) instead of one monolithic tree reduce at the end.  The
+    resident steps consume the buffers as-is — no re-flatten — and the
+    values are bitwise what flattening the accumulated tree would give
+    (same per-leaf casts and adds, zero pads stay zero)."""
+    flats: Tuple[jnp.ndarray, ...]
+    layout: TreeLayout
+
+    def tree_flatten_with_keys(self):
+        G = jax.tree_util.GetAttrKey
+        return (((G("flats"), tuple(self.flats)),), (self.layout,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        (flats,) = children
+        return cls(flats=tuple(flats), layout=aux[0])
+
+    @property
+    def tree(self) -> PyTree:
+        """Leaf-pytree view (sliced out of the buffers) for non-engine
+        consumers."""
+        return unflatten(self.flats, self.layout)
+
+
+def _require_matching_layout(grads: FlatGrads, layout: TreeLayout) -> None:
+    if grads.layout != layout:
+        raise ValueError(
+            "FlatGrads were packed with a different TreeLayout than the "
+            "resident optimizer state carries (shard padding or bucketing "
+            "mismatch); pack gradients with state.layout.")
+
+
+def flat_squared_norm(flats: Sequence[jnp.ndarray],
+                      layout: TreeLayout) -> jnp.ndarray:
+    """Canonical squared norm straight off flat buffers, zero launches:
+    CHUNK-row partials per bucket, per-segment pairwise folds, summed in
+    ORIGINAL leaf order — bitwise equal to
+    ``tree_squared_norm(unflatten(flats, layout))``.  (Folding a whole
+    bucket at once would associate differently; per-segment is the
+    canonical order.)"""
+    parts = [jnp.sum(jnp.square(f.astype(jnp.float32).reshape(-1, CHUNK)),
+                     axis=1) for f in flats]
+    return sum(_leaf_values(parts, layout))
+
+
+def flat_global_norm(flats: Sequence[jnp.ndarray],
+                     layout: TreeLayout) -> jnp.ndarray:
+    return jnp.sqrt(flat_squared_norm(flats, layout))
+
+
+def _clip_flats_round(g_flats, layout: TreeLayout, clip: float,
+                      backend: str, mesh=None):
+    """``_clip_tree_round`` for gradients already in flat-buffer form:
+    same raw-norm launch per bucket, same leafwise clip expression applied
+    elementwise on the buffers (bitwise: the scale is one broadcast
+    scalar, and zero pads map to zero).  Returns (clipped_flats,
+    raw_gnorm)."""
+    parts = [_chunk_sumsq(gf, backend=backend, mesh=mesh) for gf in g_flats]
+    gnorm = jnp.sqrt(sum(_leaf_values(parts, layout)))
+    scale = clip / jnp.maximum(gnorm, clip)
+    clipped = [(gf.astype(jnp.float32) * scale).astype(gf.dtype)
+               for gf in g_flats]
+    return clipped, gnorm
+
+
 def resident_step(kind: str, grads: PyTree, state: FlatOptState, *, lr,
                   beta: float, weight_decay: float = 0.0, eps: float = 1e-12,
                   trust: float = 0.001, clip: Optional[float] = None,
                   nesterov: bool = False,
-                  materialize_view: bool = True
+                  materialize_view: bool = True, mesh=None
                   ) -> Tuple[Optional[PyTree], FlatOptState, dict]:
     """The resident fast path: flatten ONLY the gradients; params and
     momentum stay in the buffers carried by ``state``.  Returns
@@ -406,18 +668,28 @@ def resident_step(kind: str, grads: PyTree, state: FlatOptState, *, lr,
     ``None`` instead of the view — the donation-safe ``TrainState`` path
     uses this so the step's OUTPUTS hold the parameters exactly once
     (in ``new_state.p_flats``), letting jit donation alias the update
-    fully in place."""
+    fully in place.  ``mesh``: run the kernel passes shard-wise over the
+    mesh the state was placed on (see ``_engine_mesh`` for the
+    fallback)."""
     layout = state.layout
-    check_grad_dtypes(grads, layout)
+    mesh = _engine_mesh(layout, mesh)
     stat_gnorm = None
-    if clip is not None:
-        grads, stat_gnorm = _clip_tree_round(grads, layout, float(clip),
-                                             "pallas")
-    g_flats = flatten(grads, layout)
+    if isinstance(grads, FlatGrads):
+        _require_matching_layout(grads, layout)
+        g_flats = list(grads.flats)
+        if clip is not None:
+            g_flats, stat_gnorm = _clip_flats_round(
+                g_flats, layout, float(clip), "pallas", mesh=mesh)
+    else:
+        check_grad_dtypes(grads, layout)
+        if clip is not None:
+            grads, stat_gnorm = _clip_tree_round(grads, layout, float(clip),
+                                                 "pallas", mesh=mesh)
+        g_flats = flatten(grads, layout)
     po, uo, stats = multi_tensor_step_flat(
         kind, layout, state.p_flats, g_flats, state.u_flats, lr=lr,
         beta=beta, weight_decay=weight_decay, eps=eps, trust=trust,
-        nesterov=nesterov, stat_gnorm=stat_gnorm)
+        nesterov=nesterov, stat_gnorm=stat_gnorm, mesh=mesh)
     new_state = FlatOptState(step=state.step + 1, p_flats=tuple(po),
                              u_flats=tuple(uo), layout=layout,
                              form=state.form)
@@ -428,24 +700,32 @@ def resident_step(kind: str, grads: PyTree, state: FlatOptState, *, lr,
 def resident_lamb_step(grads: PyTree, state: FlatOptState, *, lr, b1: float,
                        b2: float, eps: float, weight_decay: float = 0.0,
                        trust_eps: float = 0.0, clip: Optional[float] = None,
-                       materialize_view: bool = True
+                       materialize_view: bool = True, mesh=None
                        ) -> Tuple[Optional[PyTree], FlatOptState, dict]:
     """Resident fast path for the Adam family: flatten ONLY the gradients;
     params and both moments stay in the buffers carried by ``state``.
     ``materialize_view=False`` skips the pytree params view (see
     ``resident_step``) for the donation-safe ``TrainState`` path."""
     layout = state.layout
-    check_grad_dtypes(grads, layout)
+    mesh = _engine_mesh(layout, mesh)
     stat_gnorm = None
-    if clip is not None:
-        grads, stat_gnorm = _clip_tree_round(grads, layout, float(clip),
-                                             "pallas")
-    g_flats = flatten(grads, layout)
+    if isinstance(grads, FlatGrads):
+        _require_matching_layout(grads, layout)
+        g_flats = list(grads.flats)
+        if clip is not None:
+            g_flats, stat_gnorm = _clip_flats_round(
+                g_flats, layout, float(clip), "pallas", mesh=mesh)
+    else:
+        check_grad_dtypes(grads, layout)
+        if clip is not None:
+            grads, stat_gnorm = _clip_tree_round(grads, layout, float(clip),
+                                                 "pallas", mesh=mesh)
+        g_flats = flatten(grads, layout)
     po, mo, vo, stats = multi_tensor_lamb_step_flat(
         layout, state.p_flats, g_flats, state.m_flats, state.v_flats,
         count=state.step, lr=lr, b1=b1, b2=b2, eps=eps,
         weight_decay=weight_decay, trust_eps=trust_eps,
-        stat_gnorm=stat_gnorm)
+        stat_gnorm=stat_gnorm, mesh=mesh)
     new_state = FlatOptState(step=state.step + 1, p_flats=tuple(po),
                              u_flats=(), layout=layout, m_flats=tuple(mo),
                              v_flats=tuple(vo), form=state.form)
@@ -489,7 +769,7 @@ def _leaf_values(parts_per_bucket, layout: TreeLayout) -> List[jnp.ndarray]:
 
 
 def _clip_tree_round(grads: PyTree, layout: TreeLayout, clip: float,
-                     backend: str, cast_to: Optional[Any] = None):
+                     backend: str, cast_to: Optional[Any] = None, mesh=None):
     """Round 0 of a clip-prefixed chain: pack the raw gradients and reduce
     their global norm in one ``chunk_sumsq`` launch per bucket, then apply
     the interpreter's exact ``clip_by_global_norm`` expression LEAF-WISE on
@@ -503,7 +783,7 @@ def _clip_tree_round(grads: PyTree, layout: TreeLayout, clip: float,
     segment planner passes f32 when the clip sits MID-chain on updates an
     earlier stage already promoted (packing them at the bucket dtype
     would silently round).  Returns (clipped_grads, raw_gnorm)."""
-    parts = [_ops.chunk_sumsq(gf, backend=backend)
+    parts = [_chunk_sumsq(gf, backend=backend, mesh=mesh)
              for gf in flatten(grads, layout, cast_to=cast_to)]
     gnorm = jnp.sqrt(sum(_leaf_values(parts, layout)))
     scale = clip / jnp.maximum(gnorm, clip)
@@ -554,7 +834,7 @@ def multi_tensor_step_flat(kind: str, layout: TreeLayout,
                            trust: float = 0.001, nesterov: bool = False,
                            suffix_clip: Optional[float] = None,
                            stat_gnorm: Optional[jnp.ndarray] = None,
-                           backend: str = "pallas"
+                           backend: str = "pallas", mesh=None
                            ) -> Tuple[List[jnp.ndarray], List[jnp.ndarray],
                                       dict]:
     """The engine core: flat-in/flat-out, one (p, g, u) buffer triple per
@@ -599,11 +879,11 @@ def multi_tensor_step_flat(kind: str, layout: TreeLayout,
                                 or suffix_clip is not None)):
         for b, pf, gf in zip(layout.buckets, p_flats, g_flats):
             if kind == "lars":
-                g_parts.append(_ops.chunk_sumsq(gf, backend=backend))
-                w_parts.append(_ops.chunk_sumsq(pf, backend=backend))
+                g_parts.append(_chunk_sumsq(gf, backend=backend, mesh=mesh))
+                w_parts.append(_chunk_sumsq(pf, backend=backend, mesh=mesh))
             else:
-                g_parts.append(_ops.chunk_sumsq(gf, pf, wd=wd,
-                                                backend=backend))
+                g_parts.append(_chunk_sumsq(gf, pf, wd=wd, backend=backend,
+                                            mesh=mesh))
 
     # per-segment and global sums, in ORIGINAL leaf order so the sequential
     # accumulation matches tree_squared_norm exactly
@@ -648,10 +928,10 @@ def multi_tensor_step_flat(kind: str, layout: TreeLayout,
     apply_now = suffix_clip is None
     for b, pf, gf, uf, ac in zip(layout.buckets, p_flats, g_flats, u_flats,
                                  a_chunks):
-        po, uo, usq = _ops.fused_update(pf, gf, uf, ac, c, beta=beta, wd=wd,
-                                        cast_g_first=cast_g_first,
-                                        nesterov=nesterov, apply=apply_now,
-                                        backend=backend)
+        po, uo, usq = _fused_update(pf, gf, uf, ac, c, beta=beta, wd=wd,
+                                    cast_g_first=cast_g_first,
+                                    nesterov=nesterov, apply=apply_now,
+                                    backend=backend, mesh=mesh)
         po_flats.append(po)
         uo_flats.append(uo)
         usq_parts.append(usq)
@@ -672,7 +952,7 @@ def multi_tensor_step_flat(kind: str, layout: TreeLayout,
     out_flats, ssq_parts = [], []
     for b, pf, eff in zip(layout.buckets, p_flats, po_flats):
         ac = jnp.full((b.n_chunks,), cscale, jnp.float32)
-        po, ssq = _ops.scale_apply(pf, eff, ac, lr, backend=backend)
+        po, ssq = _scale_apply(pf, eff, ac, lr, backend=backend, mesh=mesh)
         out_flats.append(po)
         ssq_parts.append(ssq)
     del ssq_parts   # the chain's update_norm stat is sched's (pre-clip)
@@ -725,7 +1005,7 @@ def multi_tensor_lamb_step_flat(layout: TreeLayout,
                                 weight_decay: float = 0.0,
                                 trust_eps: float = 0.0,
                                 stat_gnorm: Optional[jnp.ndarray] = None,
-                                backend: str = "pallas"
+                                backend: str = "pallas", mesh=None
                                 ) -> Tuple[List[jnp.ndarray],
                                            List[jnp.ndarray],
                                            List[jnp.ndarray], dict]:
@@ -755,9 +1035,9 @@ def multi_tensor_lamb_step_flat(layout: TreeLayout,
     mo_flats, vo_flats, u_flats = [], [], []
     usq_parts, psq_parts, gsq_parts = [], [], []
     for pf, gf, mf, vf in zip(p_flats, g_flats, m_flats, v_flats):
-        mo, vo, ud, usq, psq, gsq = _ops.adam_update(
+        mo, vo, ud, usq, psq, gsq = _adam_update(
             pf, gf, mf, vf, bc1, bc2, b1=b1, b2=b2, eps=eps,
-            wd=wd, backend=backend)
+            wd=wd, backend=backend, mesh=mesh)
         mo_flats.append(mo)
         vo_flats.append(vo)
         u_flats.append(ud)
@@ -789,7 +1069,7 @@ def multi_tensor_lamb_step_flat(layout: TreeLayout,
     lr = jnp.asarray(lr, jnp.float32)
     po_flats, ssq_parts = [], []
     for pf, ud, ac in zip(p_flats, u_flats, a_chunks):
-        po, ssq = _ops.scale_apply(pf, ud, ac, lr, backend=backend)
+        po, ssq = _scale_apply(pf, ud, ac, lr, backend=backend, mesh=mesh)
         po_flats.append(po)
         ssq_parts.append(ssq)
 

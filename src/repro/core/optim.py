@@ -83,11 +83,13 @@ import jax.numpy as jnp
 
 from repro.core import transform as T
 from repro.core.multi_tensor import (
-    FlatOptState, _clip_tree_round, build_layout, ema_flats_update, flatten,
-    global_norm, init_ema_flats, init_flat_adam_state, init_flat_state,
-    leaf_sumsq, multi_tensor_lamb_step_flat, multi_tensor_step,
-    multi_tensor_step_flat, resident_lamb_step, resident_step,
-    tree_squared_norm, unflatten)
+    FlatGrads, FlatOptState, _clip_flats_round, _clip_tree_round,
+    _engine_mesh, _require_matching_layout, build_layout, ema_flats_update,
+    flat_global_norm, flatten, global_norm, init_ema_flats,
+    init_flat_adam_state, init_flat_state, leaf_sumsq, mesh_shards,
+    multi_tensor_lamb_step_flat, multi_tensor_step, multi_tensor_step_flat,
+    place_flat_state, resident_lamb_step, resident_step, tree_squared_norm,
+    unflatten)
 from repro.core.schedules import Schedule, make_schedule
 
 PyTree = Any
@@ -335,7 +337,7 @@ def _flat_of_chain_state(state: T.ChainOptState, params: PyTree,
         form=("chain", tuple(slots)))
 
 
-def from_pytree(state, params: PyTree) -> FlatOptState:
+def from_pytree(state, params: PyTree, mesh=None) -> FlatOptState:
     """pytree form -> FlatOptState (flat-buffer-resident), lossless;
     FlatOptState passes through.  ``params`` supplies the layout and the
     resident parameter buffers.  A ChainOptState with the canonical
@@ -343,10 +345,17 @@ def from_pytree(state, params: PyTree) -> FlatOptState:
     stages stateless) keeps the ``("lamb", ...)`` form; any other
     canonical-stage chain state (momentum / EMA / mixed) lands in the
     segment planner's ``("chain", slots)`` form.  Per-stage counters are
-    assumed equal to the step, which the chain update guarantees."""
+    assumed equal to the step, which the chain update guarantees.
+    ``mesh``: build the layout for (and commit the buffers to) the
+    mesh's shard count — the launcher's resume path uses this to re-place
+    a restored state on the sharded engine."""
     if isinstance(state, FlatOptState):
-        return state
-    layout = build_layout(params)
+        if mesh is not None and state.layout.shards != mesh_shards(mesh):
+            # bucket padding differs per shard count: round-trip through
+            # the pytree form to re-pack for this mesh (lossless)
+            return from_pytree(to_pytree(state), params, mesh=mesh)
+        return place_flat_state(state, mesh)
+    layout = build_layout(params, shards=mesh_shards(mesh))
     if isinstance(state, T.ChainOptState):
         adam_i = [i for i, s in enumerate(state.inner)
                   if isinstance(s, T.ScaleByAdamState)]
@@ -357,20 +366,21 @@ def from_pytree(state, params: PyTree) -> FlatOptState:
                 and isinstance(state.inner[-1], T.ScaleByScheduleState)):
             adam = state.inner[adam_i[0]]
             n_mid = len(state.inner) - adam_i[0] - 2
-            return FlatOptState(
+            return place_flat_state(FlatOptState(
                 step=state.step,
                 p_flats=tuple(flatten(params, layout)),
                 u_flats=(), layout=layout,
                 m_flats=tuple(flatten(adam.m, layout, cast_to=jnp.float32)),
                 v_flats=tuple(flatten(adam.v, layout, cast_to=jnp.float32)),
-                form=("lamb", adam_i[0], n_mid))
-        return _flat_of_chain_state(state, params, layout)
-    return FlatOptState(
+                form=("lamb", adam_i[0], n_mid)), mesh)
+        return place_flat_state(_flat_of_chain_state(state, params, layout),
+                                mesh)
+    return place_flat_state(FlatOptState(
         step=state.step,
         p_flats=tuple(flatten(params, layout)),
         u_flats=tuple(flatten(state.momentum, layout,
                               cast_to=jnp.float32)),
-        layout=layout)
+        layout=layout), mesh)
 
 
 def _decayed(grads: PyTree, params: PyTree, weight_decay: float) -> PyTree:
@@ -505,7 +515,7 @@ def _kind_optimizer(kind: str, schedule: Schedule, *, beta: float,
                     trust: float = 0.001, clip: Optional[float] = None,
                     nesterov: bool = False,
                     fused_mode: Optional[str] = None,
-                    name: Optional[str] = None) -> Optimizer:
+                    name: Optional[str] = None, mesh=None) -> Optimizer:
     """Build the Optimizer for one fused-engine kind in the requested
     execution mode.  This is ``compile_chain``'s target for matched
     chains; all chains matching the same kind share this one
@@ -531,13 +541,16 @@ def _kind_optimizer(kind: str, schedule: Schedule, *, beta: float,
 
     def step_fn(grads, state, params):
         lr = schedule(state.step)
+        if fused_mode == "multi_tensor" and isinstance(state, FlatOptState):
+            # params=None (the TrainState resident path) skips the
+            # output pytree view so donation can alias fully in place
+            return resident_step(kind, grads, state, lr=lr,
+                                 materialize_view=params is not None,
+                                 mesh=mesh, **kw)
+        if isinstance(grads, FlatGrads):
+            # only the resident engine consumes packed gradients directly
+            grads = grads.tree
         if fused_mode == "multi_tensor":
-            if isinstance(state, FlatOptState):
-                # params=None (the TrainState resident path) skips the
-                # output pytree view so donation can alias fully in place
-                return resident_step(kind, grads, state, lr=lr,
-                                     materialize_view=params is not None,
-                                     **kw)
             new_p, new_u, stats = multi_tensor_step(
                 kind, params, grads, state.momentum, lr=lr, **kw)
             return new_p, OptState(state.step + 1, new_u), stats
@@ -556,7 +569,11 @@ def _kind_optimizer(kind: str, schedule: Schedule, *, beta: float,
                                              params, lr=lr, **kw)
         return new_p, OptState(state.step + 1, new_u), stats
 
-    init = init_flat_state if fused_mode == "multi_tensor" else _init
+    if fused_mode == "multi_tensor":
+        def init(params):
+            return init_flat_state(params, mesh=mesh)
+    else:
+        init = _init
     return Optimizer(name or kind, init, step_fn, kind=kind)
 
 
@@ -568,7 +585,7 @@ def _lamb_optimizer(schedule: Schedule, *, b1: float, b2: float, eps: float,
                     weight_decay: float = 0.0, trust_eps: float = 0.0,
                     clip: Optional[float] = None,
                     fused_mode: Optional[str] = None,
-                    name: Optional[str] = None) -> Optimizer:
+                    name: Optional[str] = None, mesh=None) -> Optimizer:
     """``compile_chain``'s target for the canonical LAMB chain
     ``(clip ->) scale_by_adam -> add_decayed_weights ->
     scale_by_trust_ratio -> scale_by_schedule``.
@@ -610,7 +627,9 @@ def _lamb_optimizer(schedule: Schedule, *, b1: float, b2: float, eps: float,
             lr = schedule(state.step)
             return resident_lamb_step(grads, state, lr=lr,
                                       materialize_view=params is not None,
-                                      **kw)
+                                      mesh=mesh, **kw)
+        if isinstance(grads, FlatGrads):
+            grads = grads.tree
         # every other (mode, state-form) pairing runs the interpreter:
         # the engine form for lamb is the resident FlatOptState, and a
         # ChainOptState fed to the fused optimizer takes the bit-exact
@@ -628,7 +647,7 @@ def _lamb_optimizer(schedule: Schedule, *, b1: float, b2: float, eps: float,
 
     def init(params):
         if fused_mode == "multi_tensor":
-            return init_flat_adam_state(params, form=form)
+            return init_flat_adam_state(params, form=form, mesh=mesh)
         return T.ChainOptState(step=jnp.zeros((), jnp.int32),
                                inner=tx.init(params))
 
@@ -658,7 +677,7 @@ def _packing_cast(updates: PyTree, layout) -> Optional[Any]:
 
 
 def _plan_optimizer(tx: "T.GradientTransform", plan: "T.SegmentPlan", *,
-                    name: Optional[str] = None) -> Optimizer:
+                    name: Optional[str] = None, mesh=None) -> Optimizer:
     """``compile_chain``'s target for segment plans (fused tail + jnp
     prefix + EMA slots) under ``fused="multi_tensor"``.
 
@@ -686,53 +705,74 @@ def _plan_optimizer(tx: "T.GradientTransform", plan: "T.SegmentPlan", *,
 
     def init(params):
         if kind == "lamb":
-            st = init_flat_adam_state(params, form=form)
+            st = init_flat_adam_state(params, form=form, mesh=mesh)
         else:
-            st = dataclasses.replace(init_flat_state(params), form=form)
+            st = dataclasses.replace(init_flat_state(params, mesh=mesh),
+                                     form=form)
         if ema_nodes:
             st = dataclasses.replace(st, e_flats=tuple(
-                init_ema_flats(params, st.layout) for _ in ema_nodes))
+                init_ema_flats(params, st.layout, mesh=mesh)
+                for _ in ema_nodes))
+            st = place_flat_state(st, mesh)
         return st
 
     def flat_step(grads, state, params):
         layout = state.layout
+        emesh = _engine_mesh(layout, mesh)
         lr = schedule(state.step)
         # the prefix stages' params argument; under donation XLA schedules
         # these reads (and the EMA reads below) before the aliased write
         pview = params if params is not None else unflatten(state.p_flats,
                                                             layout)
-        updates, stats = grads, {}
+        flat_in = isinstance(grads, FlatGrads)
+        if flat_in:
+            _require_matching_layout(grads, layout)
+        raw_gnorm = (lambda: flat_global_norm(grads.flats, layout)) \
+            if flat_in else (lambda: global_norm(grads))
+        updates = grads.tree if (flat_in and jnp_nodes) else grads
+        stats = {}
         for node in jnp_nodes:
             updates, _, st = node.transform.update(updates, T.EmptyState(),
                                                    pview)
             stats.update(st)
-        cast = _packing_cast(updates, layout)
         stat_gnorm = None
-        if kp.get("clip") is not None:
-            updates, stat_gnorm = _clip_tree_round(
-                updates, layout, float(kp["clip"]), "pallas", cast_to=cast)
-        g_flats = flatten(updates, layout, cast_to=cast)
+        if isinstance(updates, FlatGrads):
+            # no jnp prefix: the packed gradients feed the tail directly
+            g_flats = list(updates.flats)
+            if kp.get("clip") is not None:
+                g_flats, stat_gnorm = _clip_flats_round(
+                    g_flats, layout, float(kp["clip"]), "pallas",
+                    mesh=emesh)
+        else:
+            cast = _packing_cast(updates, layout)
+            if kp.get("clip") is not None:
+                updates, stat_gnorm = _clip_tree_round(
+                    updates, layout, float(kp["clip"]), "pallas",
+                    cast_to=cast, mesh=emesh)
+            g_flats = flatten(updates, layout, cast_to=cast)
         if kind == "lamb":
             if stat_gnorm is None:
                 # the tail has no norm-emitting stage: keep the prefix's
                 # grad_norm report, or the interpreter's raw fallback
-                stat_gnorm = stats.get("grad_norm", global_norm(grads))
+                stat_gnorm = stats.get("grad_norm", raw_gnorm())
             po, mo, vo, tstats = multi_tensor_lamb_step_flat(
                 layout, state.p_flats, g_flats, state.m_flats,
                 state.v_flats, count=state.step, lr=lr, b1=kp["b1"],
                 b2=kp["b2"], eps=kp["eps"],
                 weight_decay=kp["weight_decay"],
-                trust_eps=kp["trust_eps"], stat_gnorm=stat_gnorm)
+                trust_eps=kp["trust_eps"], stat_gnorm=stat_gnorm,
+                mesh=emesh)
             uo, mo, vo = (), tuple(mo), tuple(vo)
         else:
             if kind == "msgd" and stat_gnorm is None:
-                stat_gnorm = stats.get("grad_norm", global_norm(grads))
+                stat_gnorm = stats.get("grad_norm", raw_gnorm())
             po, uo, tstats = multi_tensor_step_flat(
                 kind, layout, state.p_flats, g_flats, state.u_flats,
                 lr=lr, beta=kp["beta"], weight_decay=kp["weight_decay"],
                 eps=kp["eps"], trust=kp["trust"],
                 nesterov=kp.get("nesterov", False),
-                suffix_clip=kp.get("suffix_clip"), stat_gnorm=stat_gnorm)
+                suffix_clip=kp.get("suffix_clip"), stat_gnorm=stat_gnorm,
+                mesh=emesh)
             uo, mo, vo = tuple(uo), (), ()
         stats.update(tstats)
         new_e = tuple(ema_flats_update(e, state.p_flats, n.arg("decay"))
@@ -756,6 +796,8 @@ def _plan_optimizer(tx: "T.GradientTransform", plan: "T.SegmentPlan", *,
             raise TypeError(
                 f"segment-plan optimizer expects a FlatOptState or "
                 f"ChainOptState, got {type(state).__name__}")
+        if isinstance(grads, FlatGrads):
+            grads = grads.tree
         return T.interpreter_step(tx, grads, state, params)
 
     return Optimizer(name or f"chain[{kind}]", init, step_fn, kind=kind,
@@ -774,7 +816,7 @@ def sngm(schedule: Schedule,
          nesterov: bool = False,
          ema_decay: Optional[float] = None,
          use_pallas: bool = False,
-         fused: Optional[str] = None) -> Optimizer:
+         fused: Optional[str] = None, mesh=None) -> Optimizer:
     """Stochastic Normalized Gradient descent with Momentum (Algorithm 1).
 
         u_{t+1} = beta * u_t + g_t / ||g_t||
@@ -809,7 +851,8 @@ def sngm(schedule: Schedule,
     if ema_decay is not None:
         stages.append(T.ema_params(ema_decay))
     tx = T.chain(*stages)
-    return T.compile_chain(tx, fused=fused_mode, name=f"sngm[{norm_mode}]")
+    return T.compile_chain(tx, fused=fused_mode, name=f"sngm[{norm_mode}]",
+                           mesh=mesh)
 
 
 def sngd(schedule: Schedule,
@@ -817,11 +860,12 @@ def sngd(schedule: Schedule,
          eps: float = 1e-12,
          norm_mode: str = "global",
          use_pallas: bool = False,
-         fused: Optional[str] = None) -> Optimizer:
+         fused: Optional[str] = None, mesh=None) -> Optimizer:
     """Stochastic normalized gradient descent (Hazan et al. 2015) =
     SNGM with beta = 0 (the paper's degenerate case)."""
     opt = sngm(schedule, beta=0.0, weight_decay=weight_decay, eps=eps,
-               norm_mode=norm_mode, use_pallas=use_pallas, fused=fused)
+               norm_mode=norm_mode, use_pallas=use_pallas, fused=fused,
+               mesh=mesh)
     return dataclasses.replace(opt, name="sngd")
 
 
@@ -834,7 +878,7 @@ def msgd(schedule: Schedule,
          weight_decay: float = 0.0,
          nesterov: bool = False,
          use_pallas: bool = False,
-         fused: Optional[str] = None) -> Optimizer:
+         fused: Optional[str] = None, mesh=None) -> Optimizer:
     """Momentum SGD:  v_{t+1} = beta v_t + g_t ;  w_{t+1} = w_t - eta v_{t+1}.
     ``nesterov=True`` applies the look-ahead update w -= eta (beta v_{t+1}
     + g_t); the engine fuses it into the same update pass."""
@@ -842,7 +886,7 @@ def msgd(schedule: Schedule,
     tx = T.chain(T.add_decayed_weights(weight_decay),
                  T.trace(beta, nesterov=nesterov),
                  T.scale_by_schedule(schedule))
-    return T.compile_chain(tx, fused=fused_mode, name="msgd")
+    return T.compile_chain(tx, fused=fused_mode, name="msgd", mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -855,7 +899,7 @@ def lars(schedule: Schedule,
          trust: float = 0.001,
          eps: float = 1e-12,
          use_pallas: bool = False,
-         fused: Optional[str] = None) -> Optimizer:
+         fused: Optional[str] = None, mesh=None) -> Optimizer:
     """Layer-wise Adaptive Rate Scaling, matching the pytorch-lars
     implementation the paper used (github.com/noahgolmant/pytorch-lars):
 
@@ -871,7 +915,7 @@ def lars(schedule: Schedule,
     tx = T.chain(T.trust_ratio(trust, weight_decay, eps),
                  T.scale_by_schedule(schedule),
                  T.trace(beta))
-    return T.compile_chain(tx, fused=fused_mode, name="lars")
+    return T.compile_chain(tx, fused=fused_mode, name="lars", mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -881,7 +925,7 @@ def lars(schedule: Schedule,
 def lamb(schedule: Schedule,
          b1: float = 0.9, b2: float = 0.999,
          weight_decay: float = 0.0, eps: float = 1e-6,
-         fused: Optional[str] = None) -> Optimizer:
+         fused: Optional[str] = None, mesh=None) -> Optimizer:
     """LAMB (You et al. 2020): bias-corrected Adam direction, decoupled
     weight decay, per-tensor trust-ratio rescale, schedule last.
 
@@ -901,7 +945,7 @@ def lamb(schedule: Schedule,
                  T.add_decayed_weights(weight_decay),
                  T.scale_by_trust_ratio(),
                  T.scale_by_schedule(schedule))
-    return T.compile_chain(tx, fused=fused, name="lamb")
+    return T.compile_chain(tx, fused=fused, name="lamb", mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -959,9 +1003,11 @@ class OptimizerSpec:
     def from_json(cls, d: Mapping[str, Any]) -> "OptimizerSpec":
         return cls(name=d["name"], kwargs=dict(d["kwargs"]))
 
-    def build(self) -> Optimizer:
+    def build(self, mesh=None) -> Optimizer:
         kwargs = dict(self.kwargs)
         schedule = make_schedule(kwargs.pop("schedule"))
+        if mesh is not None and builder_accepts(self.name, "mesh"):
+            kwargs["mesh"] = mesh
         return OPTIMIZERS[self.name](schedule, **kwargs)
 
 
@@ -975,10 +1021,12 @@ def make_optimizer(name: Union[str, OptimizerSpec],
         (schedule built from its declarative spec; no extra kwargs).
     """
     if isinstance(name, OptimizerSpec):
+        mesh = kw.pop("mesh", None)
         if schedule is not None or kw:
-            raise TypeError("make_optimizer(spec) takes no extra arguments; "
-                            "the spec already carries schedule and kwargs")
-        return name.build()
+            raise TypeError("make_optimizer(spec) takes no extra arguments "
+                            "(besides mesh); the spec already carries "
+                            "schedule and kwargs")
+        return name.build(mesh=mesh)
     if name not in OPTIMIZERS:
         raise KeyError(f"unknown optimizer {name!r}; "
                        f"available {optimizer_names()}")

@@ -693,7 +693,8 @@ def interpreter_step(tx: GradientTransform, grads, state: ChainOptState,
 
 
 def compile_chain(tx: GradientTransform, *, fused: Optional[str] = None,
-                  name: Optional[str] = None, interpret: bool = False):
+                  name: Optional[str] = None, interpret: bool = False,
+                  mesh=None):
     """Compile a chain into an ``Optimizer``.
 
     Whole-chain shapes (``match_chain``) compile onto the kind-level
@@ -722,18 +723,19 @@ def compile_chain(tx: GradientTransform, *, fused: Optional[str] = None,
             opt = optim._lamb_optimizer(
                 kp["schedule"], b1=kp["b1"], b2=kp["b2"], eps=kp["eps"],
                 weight_decay=kp["weight_decay"], trust_eps=kp["trust_eps"],
-                clip=kp["clip"], fused_mode=fused, name=name or kind)
+                clip=kp["clip"], fused_mode=fused, name=name or kind,
+                mesh=mesh)
         else:
             opt = optim._kind_optimizer(
                 kind, kp["schedule"], beta=kp["beta"],
                 nesterov=kp["nesterov"], weight_decay=kp["weight_decay"],
                 eps=kp["eps"], trust=kp["trust"], clip=kp["clip"],
-                fused_mode=fused, name=name or kind)
+                fused_mode=fused, name=name or kind, mesh=mesh)
         return dataclasses.replace(opt, plan=plan)
     if plan is not None and plan.kind is not None:
         if fused == "multi_tensor":
             return optim._plan_optimizer(
-                tx, plan, name=name or f"chain[{plan.kind}]")
+                tx, plan, name=name or f"chain[{plan.kind}]", mesh=mesh)
         if fused is not None:
             warnings.warn(
                 f"chain {tuple(p.name for p in (tx.parts or (tx,)))} "

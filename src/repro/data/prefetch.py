@@ -93,6 +93,10 @@ class PrefetchIterator:
         self.n_batches = 0
         self.stall_log: deque = deque()   # (stall_s, depth) per batch
         self._exhausted = False
+        self._closed = False
+        # a worker _Failure that close() drained before next() saw it:
+        # held so the error surfaces exactly once instead of vanishing
+        self._pending_error: Optional[BaseException] = None
         self._thread = threading.Thread(target=self._worker, daemon=True,
                                         name="repro-prefetch")
         self._thread.start()
@@ -131,7 +135,24 @@ class PrefetchIterator:
             raise StopIteration
         depth_now = self._q.qsize()
         t0 = time.perf_counter()
-        item = self._q.get()
+        # poll rather than block indefinitely: a worker that died WITHOUT
+        # parking a sentinel (crashed hard, or aborted its bounded put
+        # when close() raced this next()) would otherwise hang the
+        # consumer forever on an empty queue
+        while True:
+            try:
+                item = self._q.get(timeout=0.05)
+                break
+            except queue.Empty:
+                if self._stop.is_set():
+                    self._exhausted = True
+                    raise StopIteration from None
+                if not self._thread.is_alive():
+                    self._exhausted = True
+                    if self._pending_error is not None:
+                        err, self._pending_error = self._pending_error, None
+                        raise err
+                    raise StopIteration from None
         stall = time.perf_counter() - t0
         if isinstance(item, _Stop):
             self._exhausted = True
@@ -163,18 +184,37 @@ class PrefetchIterator:
                 "prefetch_batches": self.n_batches}
 
     def close(self) -> None:
-        """Stop the worker and release the upstream iterator.  Safe to
-        call more than once; also runs on ``with`` exit."""
+        """Stop the worker, release the upstream iterator, and surface an
+        undelivered worker failure exactly once.  Idempotent — a second
+        ``close()`` (or one after a failed worker) is a no-op; also runs
+        on ``with`` exit."""
+        if self._closed:
+            return
+        self._closed = True
+        self._exhausted = True
         self._stop.set()
-        try:  # unblock a worker parked on a full queue
-            while True:
-                self._q.get_nowait()
-        except queue.Empty:
-            pass
+
+        def drain():
+            # discard buffered batches but KEEP an undelivered _Failure —
+            # draining used to throw the worker's error away with them
+            try:
+                while True:
+                    item = self._q.get_nowait()
+                    if isinstance(item, _Failure) \
+                            and self._pending_error is None:
+                        self._pending_error = item.exc
+            except queue.Empty:
+                pass
+
+        drain()                      # unblock a worker parked on a full queue
         self._thread.join(timeout=5.0)
+        drain()                      # the worker may have parked one more
         close = getattr(self._it, "close", None)
         if close is not None:
             close()
+        if self._pending_error is not None:
+            err, self._pending_error = self._pending_error, None
+            raise err
 
     def __enter__(self) -> "PrefetchIterator":
         return self

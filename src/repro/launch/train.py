@@ -61,7 +61,9 @@ from repro.core.optim import (FlatOptState, OptState, OptimizerSpec,
 from repro.core.transform import ChainOptState, place_chain_state
 from repro.data import (DiskShardedSource, LoaderState, PrefetchIterator,
                         StreamingLoader, SyntheticLM, device_put_batch)
-from repro.launch.mesh import data_axes_of
+from repro.launch.mesh import (data_axes_of, init_distributed,
+                               is_main_process, make_train_mesh,
+                               process_count)
 from repro.models import model_defs
 from repro.models.param import count, materialize
 from repro.models.runtime import Runtime
@@ -139,6 +141,19 @@ def main(argv=None):
     ap.add_argument("--data-axis", type=int, default=0,
                     help="data-mesh size (0 = all devices)")
     ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--pod-axis", type=int, default=1,
+                    help="outer pure-DP pod axis size (1 = no pod axis); "
+                         ">1 builds the (pod, data, model) production mesh")
+    ap.add_argument("--coordinator", default="",
+                    help="multi-process JAX coordinator address host:port "
+                         "(jax.distributed.initialize); also picked up from "
+                         "JAX_COORDINATOR_ADDRESS / COORDINATOR_ADDRESS")
+    ap.add_argument("--num-processes", type=int, default=0,
+                    help="multi-process world size (0 = single process "
+                         "unless the environment configures one)")
+    ap.add_argument("--process-id", type=int, default=-1,
+                    help="this process's rank for --coordinator runs "
+                         "(-1 = from the environment)")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--resume", action="store_true",
                     help="restore {params, opt} from --ckpt (either state "
@@ -180,18 +195,27 @@ def main(argv=None):
     if args.reduced:
         cfg = smoke_variant(cfg)
 
+    # multi-process init FIRST — jax.devices() below must see the global
+    # device set; a guarded no-op for single-process runs
+    init_distributed(
+        coordinator_address=args.coordinator or None,
+        num_processes=args.num_processes or None,
+        process_id=args.process_id if args.process_id >= 0 else None)
+    main_proc = is_main_process()
+
     n_dev = len(jax.devices())
-    n_data = args.data_axis or max(1, n_dev // args.model_axis)
-    mesh = None
-    if n_data * args.model_axis > 1:
-        mesh = jax.make_mesh((n_data, args.model_axis), ("data", "model"))
-    rt = Runtime(mesh=mesh, data_axes=("data",) if mesh else ("data",),
+    mesh = make_train_mesh(args.data_axis, args.model_axis, args.pod_axis)
+    rt = Runtime(mesh=mesh,
+                 data_axes=data_axes_of(mesh) if mesh is not None
+                 else ("data",),
                  remat=not args.reduced)
 
     defs = model_defs(cfg)
     params = materialize(defs, jax.random.PRNGKey(0))
-    print(f"[train] {cfg.name}: {count(defs):,} params on {n_dev} device(s)"
-          f"{f' mesh={dict(mesh.shape)}' if mesh else ''}")
+    if main_proc:
+        print(f"[train] {cfg.name}: {count(defs):,} params on {n_dev} "
+              f"device(s) across {process_count()} process(es)"
+              f"{f' mesh={dict(mesh.shape)}' if mesh else ''}")
 
     gspecs = None
     if mesh is not None:
@@ -257,7 +281,10 @@ def main(argv=None):
             if builder_accepts(args.optimizer, k):
                 kwargs[k] = v
         spec = OptimizerSpec(args.optimizer, kwargs)
-    opt = make_optimizer(spec)
+    # the spec stays mesh-free (it is the run's serializable identity);
+    # the mesh is a per-run hardware choice injected at build time, so the
+    # resident flat buffers come up sharded across the whole device set
+    opt = make_optimizer(spec, mesh=mesh)
     state = opt.init(params)
     start = 0
     if args.resume:
@@ -273,8 +300,10 @@ def main(argv=None):
             params = jax.device_put(params, psh)
             if isinstance(state, FlatOptState):
                 # round-trip through the pytree form (momentum or lamb's
-                # Adam-moment chain state — to_pytree picks the right one)
-                state = from_pytree(to_pytree(state), params)
+                # Adam-moment chain state — to_pytree picks the right one);
+                # mesh= re-packs the layout at the mesh's shard count and
+                # places the buffers, same as an unresumed opt.init
+                state = from_pytree(to_pytree(state), params, mesh=mesh)
             elif isinstance(state, OptState):
                 state = OptState(state.step,
                                  jax.device_put(state.momentum, psh))
@@ -283,7 +312,8 @@ def main(argv=None):
                 # compositions): every sub-state tree mirroring the params
                 # (moments, EMA shadows) takes the param shardings
                 state = place_chain_state(state, psh)
-        print(f"[train] resumed {resume_path} at step {start}")
+        if main_proc:
+            print(f"[train] resumed {resume_path} at step {start}")
     # unify into the donated TrainState: on the resident path the flat
     # buffers own the params (single copy on device) and the params
     # pytree reference is dropped here
@@ -353,9 +383,14 @@ def main(argv=None):
                 f"({m.get('it_per_s', 0.0):.2f} it/s)")
 
     mem = MemoryTracker()
-    backends = [mem, StdoutTracker(every=args.log_every, fmt=fmt)]
-    if args.metrics_jsonl:
-        backends.append(JsonlTracker(args.metrics_jsonl))
+    backends = [mem]
+    # per-host guards: stdout progress and the metrics file come from
+    # process 0 only; every process keeps the in-memory curve (the
+    # return value) since stats are replicated scalars
+    if main_proc:
+        backends.append(StdoutTracker(every=args.log_every, fmt=fmt))
+        if args.metrics_jsonl:
+            backends.append(JsonlTracker(args.metrics_jsonl))
     tracker = CompositeTracker(backends)
     callbacks = [StepTimer(tokens_per_step=args.batch * seq)]
     if prefetcher is not None:
@@ -386,10 +421,12 @@ def main(argv=None):
     step_hook = None
     if args.ckpt and args.save_every > 0:
         # train_meta.json up front (base dir), so an interrupted run is
-        # already resumable from its newest periodic save
+        # already resumable from its newest periodic save; one writer
+        # (process 0) on a shared filesystem
         os.makedirs(args.ckpt, exist_ok=True)
-        with open(os.path.join(args.ckpt, "train_meta.json"), "w") as f:
-            json.dump(train_meta(), f)
+        if main_proc:
+            with open(os.path.join(args.ckpt, "train_meta.json"), "w") as f:
+                json.dump(train_meta(), f)
 
         def step_hook(t, state_ts):
             if (t + 1) % args.save_every == 0:
@@ -420,15 +457,18 @@ def main(argv=None):
                             {"params": ts.params_view,
                              "opt": to_pytree(ts.opt_state)},
                             step=final_step, loader_state=loader_state_now())
-        with open(os.path.join(args.ckpt, "train_meta.json"), "w") as f:
-            json.dump(train_meta(), f)
-        print(f"[train] checkpoint -> {args.ckpt}")
+        if main_proc:
+            with open(os.path.join(args.ckpt, "train_meta.json"), "w") as f:
+                json.dump(train_meta(), f)
+            print(f"[train] checkpoint -> {args.ckpt}")
     if saver is not None:
         saver.close()                  # drain pending commits, re-raise errors
     if prefetcher is not None:
         c = prefetcher.counters()
-        print(f"[train] input stall {c['input_stall_s_per_step']*1e3:.2f} "
-              f"ms/step, prefetch depth avg {c['prefetch_depth_avg']:.2f}")
+        if main_proc:
+            print(f"[train] input stall "
+                  f"{c['input_stall_s_per_step']*1e3:.2f} ms/step, "
+                  f"prefetch depth avg {c['prefetch_depth_avg']:.2f}")
         prefetcher.close()             # also closes the loader + source
     elif loader is not None:
         loader.close()

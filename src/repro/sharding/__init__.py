@@ -1,7 +1,8 @@
 from repro.sharding.rules import (
     DEFAULT_RULES, spec_for, param_specs, param_shardings, batch_spec,
-    cache_specs,
+    cache_specs, flat_axes, flat_spec, flat_sharding,
 )
 
 __all__ = ["DEFAULT_RULES", "spec_for", "param_specs", "param_shardings",
-           "batch_spec", "cache_specs"]
+           "batch_spec", "cache_specs", "flat_axes", "flat_spec",
+           "flat_sharding"]

@@ -77,6 +77,24 @@ def batch_spec(mesh: Mesh, ndim: int) -> P:
     return P(axes, *([None] * (ndim - 1)))
 
 
+def flat_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Every mesh axis, in mesh order: the 1-D layout the optimizer
+    engine shards its flat buffers over.  Optimizer state has no tensor
+    structure left after flattening, so data AND model axes both divide
+    the buffers (ZeRO-style) and the shard count is the full device
+    count."""
+    return tuple(mesh.axis_names)
+
+
+def flat_spec(mesh: Mesh) -> P:
+    """PartitionSpec for a 1-D flat buffer blocked over the whole mesh."""
+    return P(flat_axes(mesh))
+
+
+def flat_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, flat_spec(mesh))
+
+
 # decode-cache leaf layouts, dims indexed FROM THE END (leaves may carry a
 # leading stacked layer-period dim): name -> (batch_from_end, seq_from_end)
 _CACHE_DIMS = {

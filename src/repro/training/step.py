@@ -30,6 +30,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.multi_tensor import (FlatGrads, FlatOptState, flatten,
+                                     mesh_shards)
+from repro.core.multi_tensor import flat_sharding as _flat_sharding
 from repro.core.optim import Optimizer, TrainState
 from repro.core.transform import as_optimizer
 from repro.models.runtime import Runtime
@@ -107,6 +110,28 @@ def make_train_step(cfg: ModelConfig, rt: Runtime, opt: Optimizer,
         B = batch["tokens"].shape[0]
         assert B % n_micro == 0, (B, n_micro)
 
+        # flat accumulation: with a resident FlatOptState whose layout
+        # matches the runtime mesh's shard count, accumulate straight into
+        # the dtype-bucketed flat buffers.  Each micro-batch packs its
+        # gradient and adds per bucket under the flat sharding constraint,
+        # so SPMD overlaps the bucketed gradient reduce with the NEXT
+        # micro-batch's backward inside the scan — and the optimizer gets
+        # pre-packed ``FlatGrads``, skipping the re-flatten.  Packing is a
+        # pure reshape/pad/concat at the bucket (= parameter storage)
+        # dtype, so the summed buckets are bitwise the packed tree sum.
+        flat_layout = None
+        if n_micro > 1 and isinstance(state.opt_state, FlatOptState):
+            lo = state.opt_state.layout
+            if rt.mesh is None or lo.shards in (1, mesh_shards(rt.mesh)):
+                flat_layout = lo
+
+        def constrain_flats(flats):
+            if rt.mesh is None or flat_layout.shards == 1:
+                return flats
+            fs = _flat_sharding(rt.mesh)
+            return tuple(jax.lax.with_sharding_constraint(f, fs)
+                         for f in flats)
+
         if n_micro == 1:
             (loss, metrics), grads = grad_fn(params, batch)
             grads = constrain_g(grads)
@@ -115,20 +140,40 @@ def make_train_step(cfg: ModelConfig, rt: Runtime, opt: Optimizer,
                 lambda x: x.reshape(n_micro, B // n_micro, *x.shape[1:]),
                 batch)
 
-            def body(acc, mb):
-                g_acc, l_acc = acc
-                (l, m), g = grad_fn(params, mb)
-                g = constrain_g(g)
-                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
-                return (constrain_g(g_acc), l_acc + l), m
+            if flat_layout is not None:
+                def body(acc, mb):
+                    g_acc, l_acc = acc
+                    (l, m), g = grad_fn(params, mb)
+                    gf = flatten(constrain_g(g), flat_layout)
+                    g_acc = constrain_flats(tuple(
+                        a + b for a, b in zip(g_acc, gf)))
+                    return (g_acc, l_acc + l), m
 
-            # accumulator in the parameter storage dtype: fp32 models get
-            # exact accumulation; bf16-param models (jamba-398B) trade ~0.5%
-            # gradient noise for fitting the accumulator in HBM
-            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+                g0 = tuple(jnp.zeros((b.n_elems,), b.dtype)
+                           for b in flat_layout.buckets)
+                g0 = constrain_flats(g0)
+            else:
+                def body(acc, mb):
+                    g_acc, l_acc = acc
+                    (l, m), g = grad_fn(params, mb)
+                    g = constrain_g(g)
+                    g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                         g_acc, g)
+                    return (constrain_g(g_acc), l_acc + l), m
+
+                # accumulator in the parameter storage dtype: fp32 models
+                # get exact accumulation; bf16-param models (jamba-398B)
+                # trade ~0.5% gradient noise for fitting the accumulator
+                # in HBM
+                g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
+                                  params)
             (g_sum, l_sum), m_stack = jax.lax.scan(
                 body, (g0, jnp.zeros((), jnp.float32)), micro)
-            grads = jax.tree.map(lambda g: g / n_micro, g_sum)
+            if flat_layout is not None:
+                grads = FlatGrads(tuple(f / n_micro for f in g_sum),
+                                  flat_layout)
+            else:
+                grads = jax.tree.map(lambda g: g / n_micro, g_sum)
             loss = l_sum / n_micro
             # every aux metric (scalar or not) keeps its global-batch
             # semantics regardless of n_micro — so `metrics` has the same

@@ -367,3 +367,94 @@ def test_save_refuses_to_clobber_non_checkpoint_dir(tmp_path):
     with pytest.raises(ValueError, match="look like a checkpoint"):
         save_checkpoint(str(path), make_tree("fp32"), step=0)
     assert (path / "notes.txt").exists()          # untouched
+
+
+# ------------------------------------------ multi-host commit barrier
+
+def test_multihost_barrier_commits_only_after_all_ranks(tmp_path):
+    """The shared-FS marker barrier: a fast rank 0 must NOT bless the
+    save while a peer is still writing — COMMIT appears only after every
+    rank's done marker, and the committed dir round-trips bit-exactly.
+    Threads stand in for processes via the injectable rank/world."""
+    import threading
+    import time
+
+    from repro.checkpoint import is_committed
+    from repro.checkpoint.io import _multihost_save
+
+    path = str(tmp_path / "ck")
+    tree = make_tree("mixed")
+    world = 3
+    release = threading.Event()
+    errs = []
+
+    def run(rank):
+        try:
+            if rank == world - 1:        # the straggler
+                release.wait(timeout=30)
+            _multihost_save(path, tree, 5, None, None, None,
+                            process_index=rank, process_count=world,
+                            timeout_s=60.0, poll_s=0.01)
+        except Exception as e:           # pragma: no cover - surfaced below
+            errs.append((rank, e))
+
+    threads = [threading.Thread(target=run, args=(r,)) for r in range(world)]
+    for t in threads:
+        t.start()
+    # rank 0 and rank 1 are done writing, rank 2 is held back: the save
+    # must stay uncommitted and invisible at the destination
+    deadline = time.monotonic() + 10
+    staging = path + ".tmp-staging"
+    while not os.path.exists(staging) and time.monotonic() < deadline:
+        time.sleep(0.01)
+    time.sleep(0.3)
+    assert not is_committed(path)
+    assert not os.path.exists(path)
+    release.set()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errs, errs
+    assert is_committed(path)
+    assert not os.path.exists(staging)   # barrier markers cleaned up
+    # every rank's shard landed in the committed dir
+    for r in range(world):
+        assert os.path.exists(os.path.join(path, f"shard_{r:05d}.npz"))
+    restored, step = load_checkpoint(path, tree)
+    assert step == 5
+    assert_tree_bit_equal(tree, restored)
+
+
+def test_multihost_barrier_times_out_on_missing_rank(tmp_path):
+    """A dead peer must surface as a TimeoutError on rank 0, leaving an
+    UNCOMMITTED staging dir behind (never a blessed torn save)."""
+    from repro.checkpoint import is_committed
+    from repro.checkpoint.io import _multihost_save
+
+    path = str(tmp_path / "ck")
+    tree = make_tree("fp32")
+    with pytest.raises(TimeoutError, match="barrier timed out"):
+        _multihost_save(path, tree, 3, None, None, None,
+                        process_index=0, process_count=2,
+                        timeout_s=0.4, poll_s=0.01)
+    assert not os.path.exists(path)
+    assert not is_committed(path)
+    # nothing was blessed: the staging leftovers carry no COMMIT marker
+    assert not is_committed(path + ".tmp-staging")
+    # and the next healthy save clears them and commits
+    _multihost_save(path, tree, 4, None, None, None,
+                    process_index=0, process_count=1,
+                    timeout_s=10.0, poll_s=0.01)
+    assert is_committed(path)
+    _, step = load_checkpoint(path, tree)
+    assert step == 4
+
+
+def test_multihost_peer_times_out_without_rank0(tmp_path):
+    """A peer whose rank 0 never stages must fail loudly, not hang."""
+    from repro.checkpoint.io import _multihost_save
+
+    with pytest.raises(TimeoutError, match="rank 0 to stage"):
+        _multihost_save(str(tmp_path / "ck"), make_tree("fp32"), 1,
+                        None, None, None,
+                        process_index=1, process_count=2,
+                        timeout_s=0.4, poll_s=0.01)

@@ -195,6 +195,61 @@ def test_prefetch_propagates_source_errors():
     pf.close()
 
 
+class _ExplodeNow:
+    """Source whose very first read raises — the worker dies before
+    delivering a single batch."""
+
+    def shard_lengths(self):
+        return (16,)
+
+    def read(self, shard, start, count):
+        raise RuntimeError("disk on fire")
+
+
+def test_prefetch_close_surfaces_undelivered_failure_exactly_once():
+    """close() before the consumer saw the worker's error: the drain used
+    to throw the _Failure away with the buffered batches.  It must now
+    re-raise it exactly once; a second close() is a no-op and next()
+    terminates instead of hanging."""
+    pf = PrefetchIterator(StreamingLoader(_ExplodeNow(), 4, shuffle=False),
+                          depth=2, place=None)
+    pf._thread.join(timeout=10)          # worker parks the failure and dies
+    assert not pf._thread.is_alive()
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        pf.close()
+    pf.close()                           # idempotent: no second raise
+    with pytest.raises(StopIteration):   # and no hang on the dead queue
+        next(pf)
+
+
+def test_prefetch_next_never_hangs_after_close():
+    """A consumer that keeps iterating after close() must get a clean
+    StopIteration promptly (the old blocking get() hung forever once the
+    worker was gone and the queue empty)."""
+    src = MemorySource(_arrays(32), shard_size=8)
+    pf = PrefetchIterator(StreamingLoader(src, 8, seed=5), depth=2,
+                          place=None)
+    next(pf)
+    pf.close()
+    t0 = time.perf_counter()
+    with pytest.raises(StopIteration):
+        next(pf)
+    assert time.perf_counter() - t0 < 5.0
+    pf.close()                           # still idempotent
+
+
+def test_prefetch_error_raised_via_next_not_raised_again_by_close():
+    """When next() already delivered the worker's error, close() must not
+    raise it a second time."""
+    pf = PrefetchIterator(StreamingLoader(_ExplodeNow(), 4, shuffle=False),
+                          depth=2, place=None)
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        _batches(pf, 4)
+    pf.close()                           # error already surfaced: no raise
+    with pytest.raises(StopIteration):
+        next(pf)
+
+
 # ------------------------------------------- loader state in checkpoints
 
 def test_checkpoint_carries_loader_state(tmp_path):

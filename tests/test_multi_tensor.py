@@ -497,3 +497,90 @@ def test_engine_launches_O1_per_leaf_launches_On():
     gbig = {k: 2.0 * v for k, v in big.items()}
     assert _launches_per_step(OPTIMIZERS["sngm"](fused="multi_tensor"),
                               big, gbig) == 2
+
+
+# ---------------------------------------------------------------------------
+# shard-padded layouts + FlatGrads (fast lane for the distributed engine)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_shard_padded_layout_roundtrip_and_norm(dtype):
+    """A layout built for 4 shards (padding every bucket to a multiple of
+    4 tiles) must round-trip and fold norms bitwise like the shards=1
+    layout — shard padding is zeros and the canonical per-segment fold
+    never sees it."""
+    from repro.core.multi_tensor import flat_squared_norm, tree_squared_norm
+    tree = make_tree(0, dtype)
+    lo1 = build_layout(tree, shards=1)
+    lo4 = build_layout(tree, shards=4)
+    for b in lo4.buckets:
+        assert b.n_elems % 4 == 0
+    f1, f4 = flatten(tree, lo1), flatten(tree, lo4)
+    assert tree_bitwise_equal(unflatten(f4, lo4), tree)
+    n_ref = tree_squared_norm(tree)
+    assert bool(jnp.array_equal(flat_squared_norm(f1, lo1), n_ref))
+    assert bool(jnp.array_equal(flat_squared_norm(f4, lo4), n_ref))
+
+
+@pytest.mark.parametrize("name", ["sngm_global", "msgd"])
+def test_shard_padded_resident_state_bit_identical(name):
+    """An optimizer stepping a shards=4 FlatOptState WITHOUT a mesh (the
+    restored-on-fewer-devices fallback) is bitwise the shards=1 run."""
+    import dataclasses
+
+    from repro.core.multi_tensor import init_flat_state, resident_step
+
+    params = make_tree(1)
+    grads = [make_tree(10 + t, scale=3.0) for t in range(2)]
+    kw = dict(lr=0.3, beta=0.9, weight_decay=1e-4)
+
+    st1 = init_flat_state(params)
+    st4 = init_flat_state(params)
+    lo4 = build_layout(params, shards=4)
+    st4 = FlatOptState(step=st4.step, p_flats=tuple(flatten(params, lo4)),
+                       u_flats=tuple(jnp.zeros((b.n_elems,), jnp.float32)
+                                     for b in lo4.buckets), layout=lo4)
+    for g in grads:
+        p1, st1, s1 = resident_step(name, g, st1, **kw)
+        p4, st4, s4 = resident_step(name, g, st4, **kw)
+        assert tree_bitwise_equal(p1, p4)
+        for key in ("grad_norm", "update_norm"):
+            if key in s1:
+                assert bool(jnp.array_equal(s1[key], s4[key])), key
+
+
+@pytest.mark.parametrize("name", ["sngm_global", "msgd"])
+def test_flat_grads_input_bit_identical_to_tree(name):
+    """Pre-packed FlatGrads (what the flat-accumulating train step hands
+    the engine) must step bitwise like the same gradients as a pytree."""
+    from repro.core.multi_tensor import FlatGrads, init_flat_state, \
+        resident_step
+
+    params = make_tree(2)
+    kw = dict(lr=0.3, beta=0.9, weight_decay=1e-4)
+    st_t = init_flat_state(params)
+    st_f = init_flat_state(params)
+    for t in range(2):
+        g = make_tree(20 + t, scale=3.0)
+        gf = FlatGrads(tuple(flatten(g, st_f.layout)), st_f.layout)
+        p_t, st_t, s_t = resident_step(name, g, st_t, **kw)
+        p_f, st_f, s_f = resident_step(name, gf, st_f, **kw)
+        assert tree_bitwise_equal(p_t, p_f)
+        for key in ("grad_norm", "update_norm"):
+            if key in s_t:
+                assert bool(jnp.array_equal(s_t[key], s_f[key])), key
+
+
+def test_flat_grads_layout_mismatch_rejected():
+    """FlatGrads packed against a different layout (wrong shard padding)
+    must be rejected loudly, not silently mis-sliced."""
+    from repro.core.multi_tensor import FlatGrads, init_flat_state, \
+        resident_step
+
+    params = make_tree(3)
+    st = init_flat_state(params)                 # shards=1 layout
+    lo4 = build_layout(params, shards=4)
+    g = make_tree(30, scale=3.0)
+    gf = FlatGrads(tuple(flatten(g, lo4)), lo4)
+    with pytest.raises(ValueError, match="different TreeLayout"):
+        resident_step("sngm_global", gf, st, lr=0.3, beta=0.9)

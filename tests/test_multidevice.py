@@ -229,6 +229,212 @@ RESIDENT_BF16_SHARDED_SCRIPT = textwrap.dedent("""
 """)
 
 
+TWO_LEVEL_NORM_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+
+    from repro.core.multi_tensor import (_chunk_sumsq, _engine_mesh,
+                                         _leaf_values, build_layout, flatten,
+                                         flat_squared_norm, mesh_shards,
+                                         place_flat_state, tree_squared_norm,
+                                         init_flat_state)
+
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    S = mesh_shards(mesh)
+    k = jax.random.PRNGKey(0)
+
+    # both dtype buckets: 2D f32 leaves + bf16 leaves + a ragged 1D leaf
+    tree = {
+        "a": jax.random.normal(jax.random.fold_in(k, 0), (300, 170)),
+        "b": jax.random.normal(jax.random.fold_in(k, 1), (999,)),
+        "c": (7.0 * jax.random.normal(jax.random.fold_in(k, 2), (128, 256))
+              ).astype(jnp.bfloat16),
+        "d": jax.random.normal(jax.random.fold_in(k, 3), (64, 64)
+              ).astype(jnp.bfloat16),
+    }
+    layout = build_layout(tree, shards=S)
+    assert layout.shards == S and _engine_mesh(layout, mesh) is mesh
+    flats = flatten(tree, layout)
+    st = place_flat_state(init_flat_state(tree, mesh=mesh), mesh)
+    flats_sh = st.p_flats  # placed flat buffers (values untouched)
+
+    # (a) two-level norm, level 1: per-shard Pallas partials + tiled
+    # gather must reproduce the unsharded partial vector BITWISE, per
+    # bucket — fp32 and bf16 buckets alike
+    parts_un, parts_sh = [], []
+    for i, (f_un, f_sh) in enumerate(zip(flats, flats_sh)):
+        pu = _chunk_sumsq(f_un, backend="pallas", mesh=None)
+        ps = jax.jit(
+            lambda f: _chunk_sumsq(f, backend="pallas", mesh=mesh))(f_sh)
+        assert bool(jnp.array_equal(pu, ps)), f"bucket {i} partials"
+        parts_un.append(pu)
+        parts_sh.append(ps)
+    print("TWO-LEVEL-PARTIALS-OK")
+
+    # level 2: the canonical per-segment fold of the gathered partials ==
+    # the fold of the unsharded partials == the tree reduction, bitwise
+    n_tree = tree_squared_norm(tree)
+    for parts in (parts_un, parts_sh):
+        n = sum(_leaf_values(parts, layout))
+        assert bool(jnp.array_equal(n, n_tree)), (n, n_tree)
+
+    # and the zero-launch jnp flat norm agrees on unsharded AND sharded
+    # (placed) buffers — the global-norm numerics contract end to end
+    n_flat = flat_squared_norm(flats, layout)
+    assert bool(jnp.array_equal(n_flat, n_tree)), (n_flat, n_tree)
+    n_flat_sh = jax.jit(lambda fs: flat_squared_norm(fs, layout))(flats_sh)
+    assert bool(jnp.array_equal(n_flat_sh, n_tree)), (n_flat_sh, n_tree)
+    print("TWO-LEVEL-NORM-OK")
+""")
+
+
+SHARDED_RESIDENT_PARITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+
+    from repro.core import lamb, msgd, sngm
+    from repro.core.multi_tensor import FlatOptState, mesh_shards, unflatten
+    from repro.core.schedules import constant
+    from repro.tracker.counters import (capture_donation_warnings,
+                                        launches_per_step)
+
+    def state_trees(st):
+        # unflatten against the state's OWN layout: shard padding differs
+        # between shards=1 and shards=4 buffers, but the segment contents
+        # (params + every slot) must be bitwise identical
+        lo = st.layout
+        slots = [st.p_flats, st.u_flats, st.m_flats, st.v_flats]
+        return [unflatten(f, lo, keep_dtype=True) for f in slots if f]
+
+    def assert_bitwise(st_a, st_b, tag):
+        for ta, tb in zip(state_trees(st_a), state_trees(st_b)):
+            for a, b in zip(jax.tree.leaves(ta), jax.tree.leaves(tb)):
+                assert bool(jnp.array_equal(a, b)), tag
+
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    k = jax.random.PRNGKey(0)
+    shapes = {"wq": (256, 128), "wk": (256, 128), "scale": (256,),
+              "emb": (1000, 64), "bias": (7,)}
+    params = {n: jax.random.normal(jax.random.fold_in(k, i), s)
+              for i, (n, s) in enumerate(sorted(shapes.items()))}
+    grads3 = [{n: 3.0 * jax.random.normal(jax.random.fold_in(k, 100 + 10*t + i), s)
+               for i, (n, s) in enumerate(sorted(shapes.items()))}
+              for t in range(3)]
+
+    BUILDERS = {
+        "sngm": lambda **kw: sngm(constant(0.3), beta=0.9,
+                                  weight_decay=1e-4,
+                                  fused="multi_tensor", **kw),
+        "msgd": lambda **kw: msgd(constant(0.1), beta=0.9,
+                                  fused="multi_tensor", **kw),
+        "lamb": lambda **kw: lamb(constant(0.05), weight_decay=1e-4,
+                                  fused="multi_tensor", **kw),
+    }
+    EXPECT_LAUNCHES = {"sngm": 2, "msgd": 2, "lamb": 2}
+
+    for name, mk in BUILDERS.items():
+        # single-device reference: UNDONATED steps — the canonical
+        # numerics.  (Donation on the unsharded path can shift msgd by
+        # one ulp via XLA fusion re-association; the sharded shard_map
+        # path below is donation-stable and must match the canonical.)
+        opt_1 = mk()
+        st_1 = opt_1.init(params)
+        step_1 = jax.jit(opt_1.step)
+        for g in grads3:
+            _, st_1, stats_1 = step_1(g, st_1, None)
+
+        # sharded resident: same optimizer built WITH the mesh
+        opt_s = mk(mesh=mesh)
+        st_s = opt_s.init(params)
+        assert isinstance(st_s, FlatOptState)
+        assert st_s.layout.shards == mesh_shards(mesh) == 4
+        # every flat slot actually sharded over all mesh axes
+        for f in st_s.p_flats:
+            spec = f.sharding.spec
+            assert tuple(spec) == (("data", "model"),), spec
+        step_s = jax.jit(opt_s.step, donate_argnums=(1,))
+        # zero donation warnings under sharding
+        (_, st_s, stats_s), msgs = capture_donation_warnings(
+            step_s, grads3[0], st_s, None)
+        assert not msgs, msgs
+        for g in grads3[1:]:
+            _, st_s, stats_s = step_s(g, st_s, None)
+
+        # bitwise fp32 parity: params AND every slot AND stats
+        assert_bitwise(st_1, st_s, name)
+        for key in ("grad_norm", "update_norm"):
+            if key in stats_1:
+                assert bool(jnp.array_equal(stats_1[key], stats_s[key])), \
+                    (name, key)
+
+        # launch counts unchanged under sharding
+        n1 = launches_per_step(opt_1, grads3[0], opt_1.init(params), None)
+        ns = launches_per_step(opt_s, grads3[0], opt_s.init(params), None)
+        assert n1 == ns == EXPECT_LAUNCHES[name], (name, n1, ns)
+        print(name, "OK launches", ns)
+
+    # clip_sngm: the 3-launch clip-prefixed chain, sharded vs single
+    from repro.core import transform as T
+    def mk_clip(mesh=None):
+        tx = T.chain(T.clip_by_global_norm(1.0),
+                     T.add_decayed_weights(1e-4),
+                     T.normalize_by_global_norm(),
+                     T.trace(0.9),
+                     T.scale_by_schedule(constant(0.3)))
+        return T.compile_chain(tx, fused="multi_tensor", mesh=mesh)
+    opt_1, opt_s = mk_clip(), mk_clip(mesh)
+    st_1, st_s = opt_1.init(params), opt_s.init(params)
+    s1 = jax.jit(opt_1.step)                       # canonical reference
+    ss = jax.jit(opt_s.step, donate_argnums=(1,))
+    for g in grads3:
+        _, st_1, stats_1 = s1(g, st_1, None)
+        _, st_s, stats_s = ss(g, st_s, None)
+    assert_bitwise(st_1, st_s, "clip_sngm")
+    n1 = launches_per_step(opt_1, grads3[0], opt_1.init(params), None)
+    ns = launches_per_step(opt_s, grads3[0], opt_s.init(params), None)
+    assert n1 == ns == 3, (n1, ns)
+    print("clip_sngm OK launches", ns)
+    print("SHARDED-RESIDENT-PARITY-OK")
+""")
+
+
+LAUNCHER_MESH_RESUME_SCRIPT = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    from repro.launch.train import main as train_main
+
+    tmp = tempfile.mkdtemp()
+
+    def run(extra):
+        # the CI multi-process smoke lane: the launcher end to end on a
+        # 2x2 data x model mesh (host devices), multi-process flags routed
+        # through init_distributed (single-process no-op here)
+        return train_main(
+            ["--arch", "gemma-2b", "--reduced", "--batch", "4",
+             "--seq", "16", "--n-micro", "2", "--optimizer", "sngm",
+             "--fused", "multi_tensor", "--lr", "0.5",
+             "--data-axis", "2", "--model-axis", "2",
+             "--num-processes", "0", "--process-id", "-1",
+             "--total-steps", "8", "--log-every", "100"] + extra)
+
+    full = run(["--steps", "8"])
+    part = run(["--steps", "4", "--ckpt", os.path.join(tmp, "ck")])
+    np.testing.assert_allclose(part, full[:4], rtol=1e-6)
+    print("LAUNCHER-MESH-OK")
+
+    # --resume re-packs the resident FlatOptState at the mesh's shard
+    # count and continues bitwise-continuously with the full run
+    resumed = run(["--steps", "8", "--ckpt", os.path.join(tmp, "ck"),
+                   "--resume"])
+    assert len(resumed) == 4, len(resumed)
+    np.testing.assert_allclose(resumed, full[4:], rtol=1e-5, atol=1e-6)
+    print("LAUNCHER-MESH-RESUME-OK")
+""")
+
+
 def _run(script):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -258,4 +464,26 @@ def test_resident_state_bitwise_and_checkpoint_on_sharded_bf16():
     assert "RESIDENT-SHARDED-BF16-OK" in r.stdout, \
         r.stdout[-2000:] + r.stderr[-3000:]
     assert "SHARDED-CKPT-OK" in r.stdout, \
+        r.stdout[-2000:] + r.stderr[-3000:]
+
+
+def test_two_level_norm_sharded_matches_canonical_fold_bitwise():
+    r = _run(TWO_LEVEL_NORM_SCRIPT)
+    assert "TWO-LEVEL-PARTIALS-OK" in r.stdout, \
+        r.stdout[-2000:] + r.stderr[-3000:]
+    assert "TWO-LEVEL-NORM-OK" in r.stdout, \
+        r.stdout[-2000:] + r.stderr[-3000:]
+
+
+def test_sharded_resident_steps_bitwise_with_launch_counts():
+    r = _run(SHARDED_RESIDENT_PARITY_SCRIPT)
+    assert "SHARDED-RESIDENT-PARITY-OK" in r.stdout, \
+        r.stdout[-2000:] + r.stderr[-3000:]
+
+
+def test_launcher_mesh_e2e_and_resume():
+    r = _run(LAUNCHER_MESH_RESUME_SCRIPT)
+    assert "LAUNCHER-MESH-OK" in r.stdout, \
+        r.stdout[-2000:] + r.stderr[-3000:]
+    assert "LAUNCHER-MESH-RESUME-OK" in r.stdout, \
         r.stdout[-2000:] + r.stderr[-3000:]

@@ -104,6 +104,37 @@ def test_grad_accumulation_equals_full_batch(tiny_cfg):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
 
 
+def test_flat_accumulation_bitwise_and_donation_stable(tiny_cfg):
+    """The flat gradient accumulator (resident FlatOptState + n_micro>1:
+    each micro-gradient packs into the dtype-bucketed buffers inside the
+    scan, and the optimizer gets pre-packed FlatGrads) must be BITWISE
+    the tree-accumulating jnp path — packing is a pure reshape/pad/concat
+    at the bucket dtype — and bitwise stable under state donation (the
+    launcher's production configuration)."""
+    params = materialize(model_defs(tiny_cfg), jax.random.PRNGKey(0))
+    data = SyntheticLM(tiny_cfg.vocab_size, 32, 8, branching=4)
+
+    def run(fused, donate, steps=3, n_micro=4):
+        opt = sngm(poly_power(0.5, 10, 1.1), beta=0.9, fused=fused)
+        state = opt.init_state(params)
+        step = make_train_step(tiny_cfg, CPU_RUNTIME, opt, n_micro=n_micro)
+        step = (jax.jit(step, donate_argnums=(0,)) if donate
+                else jax.jit(step))
+        stats = None
+        for t in range(steps):
+            state, stats = step(state, data.batch_at(t))
+        return state.params_view, stats
+
+    p_tree, s_tree = run(fused=None, donate=False)
+    p_flat, s_flat = run(fused="multi_tensor", donate=False)
+    p_flat_d, s_flat_d = run(fused="multi_tensor", donate=True)
+    for ref, got in ((p_tree, p_flat), (p_flat, p_flat_d)):
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+            assert bool(jnp.array_equal(a, b))
+    assert float(s_tree["grad_norm"]) == float(s_flat["grad_norm"]) \
+        == float(s_flat_d["grad_norm"])
+
+
 # ---------------------------------------------------------------------------
 # data pipeline
 # ---------------------------------------------------------------------------
