@@ -1,0 +1,291 @@
+"""Serving benchmark: paged engine vs dense baseline under open-loop
+traffic, plus the paged-attention kernel's differential error and the
+paged-vs-dense bitwise parity bit.
+
+One deterministic workload (fixed seed, varied prompt lengths, requests
+arriving on a fixed schedule regardless of completion — open loop) is
+served twice at EQUAL slot count:
+
+  * ``dense`` — ``launch.serve.ContinuousBatcher``: per-length prefill
+    compiles, one host sync per token, O(n_slots x ctx) cache;
+  * ``paged`` — ``serving.scheduler.PagedScheduler``: bucket-padded
+    batched prefill (compiles bounded by bucket count), chunked
+    on-device decode, block-pool memory = O(used blocks).
+
+Gated claims (``bench_thresholds.json`` "serving", enforced by
+``check_bench.py`` in CI):
+
+  * paged throughput >= dense at equal slots (the compile-count and
+    host-sync savings must show up end to end, cold start included);
+  * paged prefill compiles strictly below dense's and bounded by the
+    bucket count; decode compiles to ONE shape;
+  * paged peak KV bytes (pool bytes/block x peak used blocks) at most
+    the dense engine's O(n_slots x ctx) allocation;
+  * kernel-vs-ref max abs err within the documented tolerance policy
+    (fp32 few-ulp online-vs-two-pass softmax, bf16 input rounding);
+  * paged decode logits BITWISE equal to the dense engine at matched
+    geometry.
+
+CLI:  python -m benchmarks.bench_serving [--quick] [--json OUT]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.artifact import make_envelope, validate_envelope
+
+ARCH = "deepseek-7b"
+BLOCK_SIZE = 4
+DECODE_CHUNK = 4
+
+
+def _setup():
+    import jax
+
+    from repro.configs import ARCHS, smoke_variant
+    from repro.models import model_defs
+    from repro.models.param import materialize
+    cfg = dataclasses.replace(smoke_variant(ARCHS[ARCH]),
+                              compute_dtype="float32")
+    params = materialize(model_defs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _workload(cfg, n_req: int, max_new: int, ctx_max: int):
+    """Deterministic open-loop workload: varied prompt lengths (so the
+    dense baseline pays one prefill compile per distinct length) and an
+    arrival schedule of two requests per scheduler round."""
+    rng = np.random.RandomState(0)
+    lengths = [int(rng.randint(5, ctx_max - max_new)) for _ in range(n_req)]
+    prompts = [rng.randint(0, cfg.vocab_size, (L,)).astype(np.int32)
+               for L in lengths]
+    arrivals = [i // 2 for i in range(n_req)]       # round at which i arrives
+    return prompts, arrivals
+
+
+def _bench_paged(cfg, params, prompts, arrivals, n_slots, max_new, ctx_max,
+                 n_blocks) -> Dict:
+    from repro.models.runtime import CPU_RUNTIME
+    from repro.serving.paged_cache import paged_kv_bytes_per_block
+    from repro.serving.scheduler import PagedScheduler, ServeRequest
+
+    sched = PagedScheduler(cfg, params, CPU_RUNTIME, n_slots=n_slots,
+                           block_size=BLOCK_SIZE, n_blocks=n_blocks,
+                           ctx_max=ctx_max, decode_chunk=DECODE_CHUNK)
+    t0 = time.monotonic()
+    rnd, i = 0, 0
+    while i < len(prompts) or not sched.idle:
+        while i < len(prompts) and arrivals[i] <= rnd:
+            sched.submit(ServeRequest(rid=i, prompt=prompts[i],
+                                      max_new=max_new))
+            i += 1
+        sched.step()
+        rnd += 1
+    wall = time.monotonic() - t0
+
+    fin = sched.finished
+    total = sum(len(r.out) for r in fin)
+    tok_lat = [t - r.t_submit for r in fin for t in r.token_times]
+    return {
+        "wall_s": wall,
+        "tokens": total,
+        "tok_s": total / wall,
+        "token_latency_p50_s": float(np.percentile(tok_lat, 50)),
+        "token_latency_p99_s": float(np.percentile(tok_lat, 99)),
+        "decode_steps": sched.stats["decode_steps"],
+        "prefill_compiles": sched.compile_counts()["prefill"],
+        "decode_compiles": sched.compile_counts()["decode"],
+        "peak_used_blocks": sched.stats["peak_used_blocks"],
+        "pool_blocks": n_blocks - 1,
+        "pool_utilization": sched.stats["peak_used_blocks"] / (n_blocks - 1),
+        "preemptions": sched.stats["preemptions"],
+        "kv_bytes_peak": (paged_kv_bytes_per_block(sched.paged)
+                          * sched.stats["peak_used_blocks"]),
+        "leaked_blocks": sched.alloc.used_blocks,
+    }
+
+
+def _bench_dense(cfg, params, prompts, arrivals, n_slots, max_new,
+                 ctx_max) -> Dict:
+    import jax.numpy as jnp
+
+    from repro.launch.serve import ContinuousBatcher, Request
+    from repro.serving.engine import cache_abstract
+    from repro.serving.paged_cache import dense_kv_bytes
+
+    b = ContinuousBatcher(cfg, params, n_slots, ctx_max)
+    queue: List[Request] = []
+    finished: List[Request] = []
+    tok_lat: List[float] = []
+    t0 = time.monotonic()
+    rnd, i, steps = 0, 0, 0
+    while i < len(prompts) or queue or any(s is not None for s in b.slots):
+        while i < len(prompts) and arrivals[i] <= rnd:
+            queue.append(Request(i, jnp.asarray(prompts[i])[None], max_new,
+                                 t_submit=time.monotonic()))
+            i += 1
+        for s in b.free_slots():
+            if queue:
+                b._admit(queue.pop(0), s)
+        if any(s is not None for s in b.slots):
+            active = [r for r in b.slots if r is not None]
+            finished += b.decode_step()
+            steps += 1
+            now = time.monotonic()
+            tok_lat += [now - r.t_submit for r in active]
+        rnd += 1
+    wall = time.monotonic() - t0
+
+    total = sum(len(r.out) for r in finished)
+    return {
+        "wall_s": wall,
+        "tokens": total,
+        "tok_s": total / wall,
+        "token_latency_p50_s": float(np.percentile(tok_lat, 50)),
+        "token_latency_p99_s": float(np.percentile(tok_lat, 99)),
+        "decode_steps": steps,
+        "prefill_compiles": len(b.prefill_shapes),
+        "kv_bytes": dense_kv_bytes(cache_abstract(cfg, n_slots, ctx_max)),
+    }
+
+
+def _bench_kernel() -> Dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.paged_attention.kernel import paged_decode_attention
+    from repro.kernels.paged_attention.ref import paged_attention_ref
+
+    key = jax.random.PRNGKey(0)
+    B, H, K, hd, bs, nb, nbt = 3, 8, 2, 64, 8, 17, 4
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, H, hd))
+    kp = jax.random.normal(jax.random.fold_in(key, 2), (nb, bs, K, hd))
+    vp = jax.random.normal(jax.random.fold_in(key, 3), (nb, bs, K, hd))
+    ids = np.random.RandomState(0).permutation(
+        np.arange(1, nb))[:B * nbt].reshape(B, nbt).astype(np.int32)
+    bt = jnp.asarray(ids)
+    pos = jnp.asarray([5, 17, 31], jnp.int32)
+
+    def err(qq, kk, vv):
+        o = paged_decode_attention(qq, kk, vv, bt, pos, interpret=True)
+        r = paged_attention_ref(qq, kk, vv, bt, pos)
+        return float(jnp.max(jnp.abs(o.astype(jnp.float32)
+                                     - r.astype(jnp.float32))))
+
+    return {"max_abs_err_fp32": err(q, kp, vp),
+            "max_abs_err_bf16": err(q.astype(jnp.bfloat16),
+                                    kp.astype(jnp.bfloat16),
+                                    vp.astype(jnp.bfloat16))}
+
+
+def _bench_parity(cfg, params) -> Dict:
+    """Matched-geometry bitwise parity: paged decode logits vs dense."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.runtime import CPU_RUNTIME
+    from repro.serving import paged_cache as pc
+    from repro.serving.engine import (make_prefill_step, make_serve_step,
+                                      pad_cache)
+
+    prefill = make_prefill_step(cfg, CPU_RUNTIME)
+    step = make_serve_step(cfg, CPU_RUNTIME)
+    rng = np.random.RandomState(0)
+    B, S0, steps, bs = 2, 9, 5, BLOCK_SIZE
+    prompt = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S0)), jnp.int32)
+    nbmax = pc.n_blocks_for(S0 + steps, bs)
+    T = nbmax * bs
+
+    logits, dense = prefill(params, prompt)
+    dense = pad_cache(dense, T - S0)
+    paged = pc.paged_cache_init(cfg, B, bs, n_blocks=32, nbmax=nbmax)
+    alloc = pc.BlockAllocator(32, bs)
+    _, dense2 = prefill(params, prompt)
+    for row in range(B):
+        ids = [alloc.alloc() for _ in range(nbmax)]
+        paged = pc.set_block_table(paged, row, ids)
+        paged = pc.splice_prefill(paged, dense2, row, row, ids)
+
+    tok_d = tok_p = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    pos = jnp.full((B,), S0, jnp.int32)
+    bitwise = True
+    for _ in range(steps):
+        tok_d, lg_d, dense = step(params, dense, tok_d[:, None], pos)
+        tok_p, lg_p, paged = step(params, paged, tok_p[:, None], pos)
+        bitwise &= bool(jax.numpy.all(lg_d == lg_p))
+        pos = pos + 1
+    return {"bitwise": bitwise, "steps": steps}
+
+
+def run(quick: bool = False, json_path: str | None = None):
+    from repro.serving.paged_cache import n_blocks_for
+
+    n_req = 6 if quick else 12
+    max_new = 8 if quick else 16
+    n_slots = 3 if quick else 4
+    ctx_max = 32 if quick else 48
+
+    cfg, params = _setup()
+    prompts, arrivals = _workload(cfg, n_req, max_new, ctx_max)
+    n_blocks = 1 + n_slots * n_blocks_for(ctx_max, BLOCK_SIZE)
+    print(f"  {n_req} requests, {n_slots} slots, max_new {max_new}, "
+          f"ctx {ctx_max}, {len(set(len(p) for p in prompts))} distinct "
+          f"prompt lengths, pool {n_blocks - 1} blocks")
+
+    dense = _bench_dense(cfg, params, prompts, arrivals, n_slots, max_new,
+                         ctx_max)
+    print(f"  dense  {dense['tok_s']:7.1f} tok/s  "
+          f"{dense['prefill_compiles']} prefill compiles  "
+          f"p99 {dense['token_latency_p99_s']:.2f}s")
+    paged = _bench_paged(cfg, params, prompts, arrivals, n_slots, max_new,
+                         ctx_max, n_blocks)
+    print(f"  paged  {paged['tok_s']:7.1f} tok/s  "
+          f"{paged['prefill_compiles']} prefill compiles  "
+          f"p99 {paged['token_latency_p99_s']:.2f}s  "
+          f"pool {paged['peak_used_blocks']}/{paged['pool_blocks']} blocks")
+    kernel = _bench_kernel()
+    print(f"  kernel err fp32 {kernel['max_abs_err_fp32']:.2e} "
+          f"bf16 {kernel['max_abs_err_bf16']:.2e}")
+    parity = _bench_parity(cfg, params)
+    print(f"  paged-vs-dense bitwise over {parity['steps']} steps: "
+          f"{parity['bitwise']}")
+
+    out = {
+        "workload": {"requests": n_req, "slots": n_slots, "max_new": max_new,
+                     "ctx_max": ctx_max, "block_size": BLOCK_SIZE,
+                     "decode_chunk": DECODE_CHUNK},
+        "dense": dense,
+        "paged": paged,
+        "memory": {"paged_over_dense_kv":
+                   paged["kv_bytes_peak"] / dense["kv_bytes"]},
+        "kernel": kernel,
+        "parity": parity,
+    }
+    if json_path:
+        import json
+        import os
+        envelope = make_envelope("serving", out, quick=quick)
+        assert not validate_envelope(envelope)
+        d = os.path.dirname(json_path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump(envelope, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"  wrote {json_path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workload (CI smoke lane)")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write the canonical BENCH artifact to this path")
+    args = ap.parse_args()
+    run(quick=args.quick, json_path=args.json)

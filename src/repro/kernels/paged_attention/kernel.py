@@ -1,0 +1,141 @@
+"""Paged decode attention — Pallas TPU kernel.
+
+Decode-time attention for one new token per sequence against a paged
+KV cache: K/V live in a global pool of fixed-size blocks and each
+sequence names its blocks through an int32 block-table row
+(serving/paged_cache.py).  The kernel never touches a dense
+(B, ctx, ...) cache — the block table and per-sequence positions are
+scalar-prefetched (``PrefetchScalarGridSpec``), so the K/V BlockSpec
+index maps chase the table and fetch exactly the blocks each sequence
+owns.
+
+Blocking: grid = (batch * kv_heads, n_table_cols) with the block
+column innermost.  The q-head group of one kv head (GQA folded like
+flash_attention) rides in a single (G, hd) block padded to the fp32
+min tile; running max / denominator / accumulator live in VMEM scratch
+across the column loop; blocks entirely beyond the sequence frontier
+(t0 > pos) or entirely outside the sliding window are skipped with
+``pl.when``; the output is finalized when the last column retires.
+
+Tolerance policy (same as flash_attention): the kernel's online
+softmax reassociates the reduction, so it is NOT bitwise against the
+two-pass ref — fp32 agrees to ~1e-6 atol (few-ulp), bf16 inputs to
+~3e-2.  The model's jnp gather path (layers.py) is the bitwise-parity
+reference against the dense engine; this kernel is the TPU fast path,
+gated differentially in tests/test_kernels.py and BENCH_serving.json.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *,
+            scale, window, softcap, bs, n_bt, n_kv_heads):
+    g = pl.program_id(0)                     # fused (batch, kv-head)
+    j = pl.program_id(1)                     # block-table column
+    pos = pos_ref[g // n_kv_heads]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    t0 = j * bs
+    # column-level skip: block fully beyond the frontier or out-of-window
+    run = t0 <= pos
+    if window > 0:
+        run &= t0 + bs - 1 > pos - window
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)          # (Gp, hdp)
+        k = k_ref[0, 0].astype(jnp.float32)       # (bs, hdp)
+        s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())))
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        t = t0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = t <= pos
+        if window > 0:
+            mask &= t > pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)                    # (Gp, bs)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_scr[...] = alpha * acc_scr[...] + jax.lax.dot(p, v)
+        m_scr[...] = m_new
+
+    @pl.when(j == n_bt - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap",
+                                             "interpret"))
+def paged_decode_attention(q, kp, vp, bt, pos, *, window: int = 0,
+                           softcap: float = 0.0, interpret: bool = False):
+    """q: (B, H, hd) — one query token per sequence.
+    kp/vp: (n_blocks, bs, K, hd) block pools, H % K == 0.
+    bt: (B, nbmax) int32 block table; pos: (B,) int32 position of the
+    entry just written (reads are masked to t <= pos).
+    Returns (B, H, hd) in q.dtype."""
+    B, H, hd = q.shape
+    _, bs, K, _ = kp.shape
+    G = H // K
+    n_bt = bt.shape[1]
+    g_pad = -G % 8                 # fp32 min sublane tile
+    hd_pad = -hd % 128
+    Gp, hdp = G + g_pad, hd + hd_pad
+
+    qt = q.reshape(B * K, G, hd)
+    if g_pad or hd_pad:
+        qt = jnp.pad(qt, ((0, 0), (0, g_pad), (0, hd_pad)))
+    # pool laid out (nb, K, bs, hd) kernel-side so one (bs, hdp) block
+    # per kv head is a contiguous min-tile-aligned window
+    kt = jnp.moveaxis(kp, 2, 1)
+    vt = jnp.moveaxis(vp, 2, 1)
+    if hd_pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, 0), (0, hd_pad)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, 0), (0, hd_pad)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B * K, n_bt),
+        in_specs=[
+            pl.BlockSpec((1, Gp, hdp), lambda g, j, bt_, pos_: (g, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hdp),
+                         lambda g, j, bt_, pos_, K=K: (bt_[g // K, j],
+                                                       g % K, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hdp),
+                         lambda g, j, bt_, pos_, K=K: (bt_[g // K, j],
+                                                       g % K, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Gp, hdp),
+                               lambda g, j, bt_, pos_: (g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Gp, 1), jnp.float32),
+            pltpu.VMEM((Gp, 1), jnp.float32),
+            pltpu.VMEM((Gp, hdp), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=hd ** -0.5, window=window,
+                          softcap=softcap, bs=bs, n_bt=n_bt, n_kv_heads=K),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * K, Gp, hdp), q.dtype),
+        interpret=interpret,
+    )(bt.astype(jnp.int32), pos.astype(jnp.int32), qt, kt, vt)
+    return out[:, :G, :hd].reshape(B, H, hd)

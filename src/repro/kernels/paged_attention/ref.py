@@ -1,0 +1,38 @@
+"""Pure-jnp oracle: paged decode attention via dense gather.
+
+Gathers each sequence's K/V blocks through its block table into a
+dense (B, T, K, hd) view, masks everything past the sequence frontier
+(t > pos) or outside the sliding window, and runs two-pass softmax in
+fp32 — numerically the same computation as the model's jnp paged
+decode path (layers._sdpa over the gathered view), which is itself
+bitwise against the dense decode engine.
+"""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def paged_attention_ref(q, kp, vp, bt, pos, *, window: int = 0,
+                        softcap: float = 0.0):
+    """q (B, H, hd); kp/vp (n_blocks, bs, K, hd); bt (B, nbmax) int32;
+    pos (B,) int32 absolute position of the entry just written.
+    Returns (B, H, hd) in q.dtype."""
+    B, H, hd = q.shape
+    _, bs, K, _ = kp.shape
+    G = H // K
+    T = bt.shape[1] * bs
+    kd = kp[bt].reshape(B, T, K, hd).astype(jnp.float32)
+    vd = vp[bt].reshape(B, T, K, hd).astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(B, K, G, hd)
+    s = jnp.einsum("bkgh,btkh->bkgt", qf * hd ** -0.5, kd)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    t_ids = jnp.arange(T, dtype=jnp.int32)[None, :]
+    valid = t_ids <= pos[:, None]
+    if window > 0:
+        valid &= t_ids > pos[:, None] - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkh->bkgh", p, vd)
+    return o.reshape(B, H, hd).astype(q.dtype)

@@ -216,6 +216,52 @@ def _sdpa(q, k, v, mask, cap, scale, bf16_mm: bool = False):
     return o
 
 
+# Route paged decode attention through the Pallas paged-attention
+# kernel: None = auto (TPU only), True/False = force.  The jnp
+# gather path below is the bitwise reference against the dense decode
+# engine; the kernel is the TPU fast path (agrees to ~1e-6 atol in
+# fp32 — online vs two-pass softmax reassociates the reduction).
+PAGED_DECODE_KERNEL: Optional[bool] = None
+
+
+def _use_paged_kernel() -> bool:
+    if PAGED_DECODE_KERNEL is None:
+        return jax.default_backend() == "tpu"
+    return PAGED_DECODE_KERNEL
+
+
+def _paged_write(pool, new, bt, pos):
+    """Write this step's entry into the block pool through the table:
+    pool (nb, bs, *tail) <- new (B, 1, *tail) at absolute position
+    pos (B,).  Active slots always target a private (refcount-1) block;
+    inactive slots target the reserved scratch block 0."""
+    bs = pool.shape[1]
+    B = bt.shape[0]
+    bid = bt[jnp.arange(B), (pos // bs).astype(jnp.int32)]
+    off = (pos % bs).astype(jnp.int32)
+    return pool.at[bid, off].set(new[:, 0].astype(pool.dtype))
+
+
+def _paged_gather(pool, bt):
+    """Dense (B, nbmax*bs, *tail) view of a slot's entries gathered
+    through its block table.  Positions t <= pos hold real entries in
+    position order (identical to the unrotated dense cache layout);
+    everything else is garbage that the caller masks with NEG_INF."""
+    B, nbmax = bt.shape
+    bs = pool.shape[1]
+    return pool[bt].reshape((B, nbmax * bs) + pool.shape[2:])
+
+
+def _paged_valid(pos, T: int, window: int):
+    """(B, T) validity mask for gathered entries: written and causal
+    (t <= pos), inside the sliding window when one applies."""
+    t_ids = jnp.arange(T, dtype=jnp.int32)[None, :]
+    valid = t_ids <= pos[:, None]
+    if window > 0:
+        valid &= t_ids > pos[:, None] - window
+    return valid
+
+
 Q_CHUNK = 1024
 
 
@@ -287,6 +333,25 @@ def gqa_attention(p, x, cfg: ModelConfig, *, local: bool, pos, cache=None,
         return jnp.einsum("bshd,hdo->bso", o, p["wo"].astype(cdt)), new_cache
 
     # ---- decode (x is (B,1,d)) ----
+    if "kp" in cache:  # paged: write/read through the block table
+        kp = _paged_write(cache["kp"], k, cache["bt"], pos)
+        vp = _paged_write(cache["vp"], v, cache["bt"], pos)
+        new_cache = {"kp": kp, "vp": vp, "bt": cache["bt"]}
+        if _use_paged_kernel():
+            from repro.kernels.paged_attention.ops import paged_attention
+            o = paged_attention(q[:, 0], kp, vp, cache["bt"], pos,
+                                window=window,
+                                softcap=cfg.attn_softcap)[:, None]
+        else:
+            kd = _paged_gather(kp, cache["bt"])
+            vd = _paged_gather(vp, cache["bt"])
+            valid = _paged_valid(pos, kd.shape[1], window)
+            mask = jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
+            o = _sdpa(q, kd.astype(cdt), vd.astype(cdt), mask,
+                      cfg.attn_softcap, scale, cfg.sdpa_bf16)
+        out = jnp.einsum("bshd,hdo->bso", o.astype(cdt), p["wo"].astype(cdt))
+        return out, new_cache
+
     Sc = cache["k"].shape[1]
     slot = (pos % Sc).astype(jnp.int32)                      # ring-buffer slot
     upd = jax.vmap(lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(c, n, s, 0))
@@ -354,6 +419,27 @@ def mla_attention(p, x, cfg: ModelConfig, *, local: bool, pos, cache=None):
         return out, new_cache
 
     # ---- absorbed decode ----
+    if "ckvp" in cache:  # paged: latent pools through the block table
+        ckvp = _paged_write(cache["ckvp"], ckv, cache["bt"], pos)
+        kropep = _paged_write(cache["kropep"], k_rope, cache["bt"], pos)
+        ckv_d = _paged_gather(ckvp, cache["bt"])           # (B, T, r)
+        kr_d = _paged_gather(kropep, cache["bt"])          # (B, T, rr)
+        q_lat = jnp.einsum("bskh,rkh->bskr", q_nope, p["wk_b"].astype(cdt))
+        s = jnp.einsum("bskr,btr->bkst", q_lat.astype(jnp.float32),
+                       ckv_d.astype(jnp.float32))
+        s = s + jnp.einsum("bskh,bth->bkst", q_rope.astype(jnp.float32),
+                           kr_d.astype(jnp.float32))
+        s = s * scale
+        valid = _paged_valid(pos, ckv_d.shape[1], window)
+        s = softcap(s, cfg.attn_softcap) + \
+            jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
+        prob = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bkst,btr->bskr", prob.astype(cdt),
+                         ckv_d.astype(cdt))
+        o = jnp.einsum("bskr,rkh->bskh", ctx, p["wv_b"].astype(cdt))
+        out = jnp.einsum("bshd,hdo->bso", o, p["wo"].astype(cdt))
+        return out, {"ckvp": ckvp, "kropep": kropep, "bt": cache["bt"]}
+
     Sc = cache["ckv"].shape[1]
     slot = (pos % Sc).astype(jnp.int32)
     upd2 = jax.vmap(lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(c, n, s, 0))

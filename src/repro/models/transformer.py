@@ -202,12 +202,21 @@ def encode(params, cfg: ModelConfig, rt: Runtime, encoder_embeds):
 # ---------------------------------------------------------------------------
 
 def forward(params, cfg: ModelConfig, rt: Runtime, tokens, *,
-            mode: str = "train", cache=None, pos=None, encoder_embeds=None):
+            mode: str = "train", cache=None, pos=None, encoder_embeds=None,
+            last_pos=None):
     """mode: "train" | "prefill" | "decode".
 
     train:   tokens (B,S)             -> (logits, None, aux)
     prefill: tokens (B,S)             -> (logits, cache, aux)
     decode:  tokens (B,1), pos (B,)   -> (logits, cache', aux)
+
+    ``last_pos`` (B,), prefill only: per-row position whose logits to
+    return instead of the last one — bucket-padded batched prefill
+    right-pads each prompt to a shared length, and causal masking keeps
+    every position <= last_pos bitwise independent of the padding.
+    (SSM layers scan left-to-right through the padding, so bucketed
+    prefill is only valid for attention-only stacks; the scheduler
+    falls back to exact lengths when ``cfg.has_ssm_layers``.)
     """
     prefix, period, n_periods = layer_pattern(cfg)
     build_cache = mode != "train"
@@ -309,7 +318,10 @@ def forward(params, cfg: ModelConfig, rt: Runtime, tokens, *,
         return h, None, aux_total
 
     if mode == "prefill":
-        h = h[:, -1:, :]   # serving only needs the last position's logits
+        # serving only needs one position's logits per row: the last, or
+        # the per-row prompt end under bucket-padded batched prefill
+        h = (h[:, -1:, :] if last_pos is None
+             else h[jnp.arange(B), last_pos.astype(jnp.int32)][:, None])
     logits = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
                         unembed_matrix(params).astype(jnp.float32))
     logits = layers.softcap(logits, cfg.final_softcap)

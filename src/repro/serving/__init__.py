@@ -1,6 +1,15 @@
 from repro.serving.engine import (
-    cache_abstract, make_prefill_step, make_serve_step, greedy_generate,
+    cache_abstract, cache_batch_axes, make_prefill_step, make_serve_step,
+    sample_logits, greedy_generate,
 )
+from repro.serving.paged_cache import (
+    BlockAllocator, PoolExhausted, n_blocks_for, paged_cache_init,
+    set_block_table, splice_prefill,
+)
+from repro.serving.scheduler import PagedScheduler, ServeRequest
 
-__all__ = ["cache_abstract", "make_prefill_step", "make_serve_step",
-           "greedy_generate"]
+__all__ = ["cache_abstract", "cache_batch_axes", "make_prefill_step",
+           "make_serve_step", "sample_logits", "greedy_generate",
+           "BlockAllocator", "PoolExhausted", "n_blocks_for",
+           "paged_cache_init", "set_block_table", "splice_prefill",
+           "PagedScheduler", "ServeRequest"]

@@ -24,22 +24,49 @@ from repro.models.runtime import Runtime
 from repro.models.transformer import forward
 
 
+NEG_INF = -2.0e38
+
+
 def make_prefill_step(cfg: ModelConfig, rt: Runtime):
-    def prefill(params, tokens, encoder_embeds=None):
+    """``last_pos`` (B,), optional: per-row prompt-end position for
+    bucket-padded batched prefill (see transformer.forward)."""
+    def prefill(params, tokens, encoder_embeds=None, last_pos=None):
         logits, cache, _ = forward(params, cfg, rt, tokens, mode="prefill",
-                                   encoder_embeds=encoder_embeds)
+                                   encoder_embeds=encoder_embeds,
+                                   last_pos=last_pos)
         return logits, cache
     return prefill
 
 
-def make_serve_step(cfg: ModelConfig, rt: Runtime):
-    """One decode step: (params, cache, tokens (B,1), pos (B,)) ->
-    (next_token (B,), logits (B,V), cache')."""
-    def serve_step(params, cache, tokens, pos):
+def sample_logits(logits, rng, temperature: float, top_k: int = 0):
+    """Seeded temperature (optionally top-k truncated) sampling over
+    (B, V) logits -> (B,) int32.  Softmax math in fp32."""
+    l = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(l, top_k)[0][..., -1:]
+        l = jnp.where(l < kth, NEG_INF, l)
+    return jax.random.categorical(rng, l, axis=-1).astype(jnp.int32)
+
+
+def make_serve_step(cfg: ModelConfig, rt: Runtime, *,
+                    temperature: float = 0.0, top_k: int = 0):
+    """One decode step: (params, cache, tokens (B,1), pos (B,)[, rng])
+    -> (next_token (B,), logits (B,V), cache').
+
+    ``temperature == 0`` is greedy argmax — bitwise the historical
+    behavior, rng ignored.  ``temperature > 0`` samples from the
+    temperature-scaled softmax (top-k truncated when ``top_k > 0``)
+    driven by an explicit rng key, so generation is reproducible under
+    a fixed seed."""
+    def serve_step(params, cache, tokens, pos, rng=None):
         logits, new_cache, _ = forward(params, cfg, rt, tokens, mode="decode",
                                        cache=cache, pos=pos)
-        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-        return nxt, logits[:, -1, :], new_cache
+        last = logits[:, -1, :]
+        if temperature == 0.0:
+            nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        else:
+            nxt = sample_logits(last, rng, temperature, top_k)
+        return nxt, last, new_cache
     return serve_step
 
 
@@ -58,6 +85,25 @@ def cache_abstract(cfg: ModelConfig, B: int, S: int):
                               mode="prefill", encoder_embeds=e)
         return cache
     return jax.eval_shape(run, params_a, tokens, enc)
+
+
+def cache_batch_axes(cfg: ModelConfig, S: int = 4):
+    """Explicit batch-axis metadata for a prefill cache tree: a pytree
+    of ints (same structure as the cache) giving each leaf's
+    request/batch axis.  Computed structurally by diffing leaf shapes
+    between eval_shape'd prefills at two batch sizes — the unique axis
+    that scales with B — instead of sniffing for size-1 axes (a wrong
+    guess on a size-1 period dim would silently splice the wrong
+    axis)."""
+    a2 = cache_abstract(cfg, 2, S)
+    a3 = cache_abstract(cfg, 3, S)
+
+    def ax(l2, l3):
+        diffs = [i for i, (d2, d3) in enumerate(zip(l2.shape, l3.shape))
+                 if d2 != d3]
+        assert len(diffs) == 1, (l2.shape, l3.shape)
+        return diffs[0]
+    return jax.tree.map(ax, a2, a3)
 
 
 def pad_cache(cache, extra: int):

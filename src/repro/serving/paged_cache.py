@@ -1,0 +1,326 @@
+"""Paged KV cache: a global block pool + per-sequence block tables.
+
+The dense serving cache allocates O(n_slots x ctx_max) per attention
+layer no matter how much of it is used.  The paged cache replaces each
+attention layer's (B, S, ...) arrays with a global pool of fixed-size
+blocks plus an int32 block table per slot:
+
+    dense  {"k":   (B, S, K, hd), "v": ...,     "slot_pos": (B, S)}
+    paged  {"kp":  (n_blocks, bs, K, hd), "vp": ..., "bt": (B, nbmax)}
+
+    dense  {"ckv": (B, S, r), "krope": (B, S, rr), "slot_pos": (B, S)}
+    paged  {"ckvp": (n_blocks, bs, r), "kropep": ..., "bt": (B, nbmax)}
+
+Token position t of slot b lives at ``pool[bt[b, t // bs], t % bs]`` —
+pool memory is O(used blocks), not O(slots x ctx).  Fixed-size per-slot
+state (Mamba conv/ssm, whisper cross ck/cv) is left dense: there is
+nothing to page in an O(1) recurrent state.  Scanned-period cache
+leaves keep their leading n_periods dim, exactly like the dense tree.
+
+Block 0 is a reserved scratch block: inactive slots point their whole
+table at it, so lockstep decode writes land somewhere harmless without
+masking the write path (scratch contents are garbage and never read —
+every read is masked by ``t <= pos``).
+
+``BlockAllocator`` is the host-side free-list allocator with refcounted
+copy-on-write prefix sharing at *full-block* granularity: a prompt's
+full blocks are registered under a chained content hash, a later prompt
+with the same prefix retains those blocks instead of recomputing and
+rewriting them, and a block with refcount > 1 is never written — the
+write frontier (a sequence's last, partial block and everything it
+grows into) is always private, so no device-side copy is ever needed.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# pool-leaf name -> (dense-leaf name, n trailing dims after (B, S))
+POOL_LEAVES = {"kp": ("k", 2), "vp": ("v", 2),
+               "ckvp": ("ckv", 1), "kropep": ("krope", 1)}
+DENSE_KV_NAMES = {d for d, _ in POOL_LEAVES.values()}
+
+# per-slot (unpaged) leaf name -> batch axis from the END.  Explicit
+# metadata, mirroring pad_cache's seq-axis map: leaves may carry a
+# leading stacked period dim, so counting from the end is unambiguous.
+#   conv (B, W-1, conv_dim); ssm (B, H, P, N); ck/cv (B, T, K, hd)
+SLOT_BATCH_AXIS_FROM_END = {"conv": 3, "ssm": 4, "ck": 4, "cv": 4}
+
+
+def n_blocks_for(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``n_tokens`` positions."""
+    return -(-n_tokens // block_size)
+
+
+class PoolExhausted(RuntimeError):
+    """The free list is empty; the scheduler preempts and retries."""
+
+
+class BlockAllocator:
+    """Host-side free-list allocator over ``n_blocks`` KV blocks with
+    refcounted full-block prefix sharing (see module docstring)."""
+
+    def __init__(self, n_blocks: int, block_size: int):
+        assert n_blocks >= 2, "need at least scratch block 0 + one real block"
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        # LIFO free list, block 0 reserved as scratch; low ids first out
+        self._free: List[int] = list(range(n_blocks - 1, 0, -1))
+        self._ref: Dict[int, int] = {}
+        self._hash2block: Dict[Any, int] = {}
+        self._block2hash: Dict[int, Any] = {}
+
+    # -- core alloc/free ---------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return (self.n_blocks - 1) - len(self._free)
+
+    def refcount(self, bid: int) -> int:
+        return self._ref.get(bid, 0)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise PoolExhausted(f"all {self.n_blocks - 1} blocks in use")
+        bid = self._free.pop()
+        self._ref[bid] = 1
+        return bid
+
+    def retain(self, bid: int) -> int:
+        assert self._ref.get(bid, 0) > 0, f"retain of free block {bid}"
+        self._ref[bid] += 1
+        return bid
+
+    def release(self, bid: int) -> None:
+        assert self._ref.get(bid, 0) > 0, f"release of free block {bid}"
+        self._ref[bid] -= 1
+        if self._ref[bid] == 0:
+            del self._ref[bid]
+            h = self._block2hash.pop(bid, None)
+            if h is not None:
+                del self._hash2block[h]
+            self._free.append(bid)
+
+    # -- copy-on-write prefix sharing --------------------------------------
+
+    @staticmethod
+    def prefix_key(prev_key: Any, block_tokens: Tuple[int, ...]) -> Any:
+        """Chained content key: a block's identity is (everything before
+        it, its tokens) — equal keys mean bitwise-equal pool contents
+        (prefill is deterministic and RoPE positions are absolute)."""
+        return (prev_key, block_tokens)
+
+    def lookup(self, key: Any) -> Optional[int]:
+        return self._hash2block.get(key)
+
+    def register(self, key: Any, bid: int) -> None:
+        """Publish a freshly written full block for reuse.  First writer
+        wins; keys/blocks already mapped are left alone (the caller
+        should have used lookup/retain for those)."""
+        if key not in self._hash2block and bid not in self._block2hash:
+            self._hash2block[key] = bid
+            self._block2hash[bid] = key
+
+    def plan_prompt(self, tokens) -> Tuple[List[int], List[Any]]:
+        """COW admission plan for a prompt: returns ``(shared_block_ids,
+        full_block_keys)``.  The shared blocks (a prefix of the prompt's
+        full blocks, longest registered chain) are *retained* here — the
+        caller must release them if admission is abandoned.
+        ``full_block_keys`` has one chained key per full block of the
+        prompt, for registering the privately written ones."""
+        toks = [int(t) for t in tokens]
+        bs = self.block_size
+        keys: List[Any] = []
+        prev: Any = None
+        for i in range(len(toks) // bs):
+            prev = self.prefix_key(prev, tuple(toks[i * bs:(i + 1) * bs]))
+            keys.append(prev)
+        shared: List[int] = []
+        for key in keys:
+            bid = self.lookup(key)
+            if bid is None:
+                break
+            shared.append(self.retain(bid))
+        return shared, keys
+
+    def check(self) -> None:
+        """Invariants (property tests): conservation, scratch never
+        handed out, free list duplicate-free, hash maps consistent."""
+        assert self.used_blocks == len(self._ref)
+        assert self.used_blocks + self.n_free == self.n_blocks - 1
+        assert 0 not in self._ref and 0 not in self._free
+        assert len(set(self._free)) == len(self._free)
+        for h, b in self._hash2block.items():
+            assert self._block2hash.get(b) == h and self._ref.get(b, 0) > 0
+
+
+# ---------------------------------------------------------------------------
+# paged cache tree construction & manipulation
+# ---------------------------------------------------------------------------
+
+def _is_attn_entry(d: Any) -> bool:
+    return isinstance(d, dict) and ("k" in d or "ckv" in d) and "slot_pos" in d
+
+
+def is_paged_entry(d: Any) -> bool:
+    return isinstance(d, dict) and ("kp" in d or "ckvp" in d) and "bt" in d
+
+
+def paged_cache_init(cfg: ModelConfig, n_slots: int, block_size: int,
+                     n_blocks: int, nbmax: int):
+    """Zero-initialized paged cache tree mirroring the model's dense
+    cache structure, with attention entries replaced by pools + block
+    tables (see module docstring).  Built from the eval_shape'd dense
+    tree — no dense allocation ever happens."""
+    from repro.serving.engine import cache_abstract
+    assert not cfg.is_encoder_decoder, "paged serving is decoder-only"
+    abstract = cache_abstract(cfg, n_slots, block_size)
+
+    def convert(d):
+        if _is_attn_entry(d):
+            out = {}
+            lead = None
+            for pool_name, (dense_name, tail_nd) in POOL_LEAVES.items():
+                if dense_name not in d:
+                    continue
+                leaf = d[dense_name]
+                b_ax = leaf.ndim - 2 - tail_nd        # (lead?, B, S, *tail)
+                lead = leaf.shape[:b_ax]
+                out[pool_name] = jnp.zeros(
+                    lead + (n_blocks, block_size) + leaf.shape[b_ax + 2:],
+                    leaf.dtype)
+            out["bt"] = jnp.zeros(lead + (n_slots, nbmax), jnp.int32)
+            return out
+        if isinstance(d, dict):
+            return {k: convert(v) for k, v in d.items()}
+        return jnp.zeros(d.shape, d.dtype)     # per-slot leaf (conv/ssm/...)
+
+    return convert(abstract)
+
+
+def set_block_table(paged, slot: int, block_ids: List[int]):
+    """Point slot ``slot``'s table row (every layer) at ``block_ids``,
+    zero-padded (scratch) to the table width."""
+    def upd(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name != "bt":
+            return leaf
+        nbmax = leaf.shape[-1]
+        assert len(block_ids) <= nbmax, (len(block_ids), nbmax)
+        row = jnp.asarray(list(block_ids) + [0] * (nbmax - len(block_ids)),
+                          jnp.int32)
+        return leaf.at[..., slot, :].set(row)
+    return jax.tree_util.tree_map_with_path(upd, paged)
+
+
+def splice_prefill(paged, dense, row: int, slot: int, block_ids: List[int],
+                   skip_blocks: int = 0):
+    """Write row ``row`` of a (group) dense prefill cache into the pool
+    blocks ``block_ids`` and per-slot row ``slot`` of a paged tree.
+    The first ``skip_blocks`` blocks are COW-shared (already bitwise
+    correct from an earlier identical prefix) and are not written.
+    Block tables are untouched — use ``set_block_table``."""
+
+    def walk(p, d, name=""):
+        if _is_attn_entry(d):
+            out = dict(p)
+            for pool_name, (dense_name, tail_nd) in POOL_LEAVES.items():
+                if pool_name in p:
+                    out[pool_name] = _splice_pool(
+                        p[pool_name], d[dense_name], tail_nd, row,
+                        block_ids, skip_blocks)
+            return out
+        if isinstance(d, dict):
+            return {k: walk(p[k], d[k], k) for k in p}
+        return _splice_slot(p, d, row, slot,
+                            SLOT_BATCH_AXIS_FROM_END[name])
+
+    return walk(paged, dense)
+
+
+def _splice_pool(pool, dense_leaf, tail_nd: int, row: int,
+                 block_ids: List[int], skip_blocks: int):
+    """pool (lead?, nb, bs, *tail) <- dense (lead?, B, S, *tail)[row]."""
+    b_ax = dense_leaf.ndim - 2 - tail_nd
+    bs = pool.shape[b_ax + 1]
+    sel = jnp.take(dense_leaf, row, axis=b_ax)      # (lead?, S, *tail)
+    L = len(block_ids) * bs
+    S = sel.shape[b_ax]
+    if S < L:                                        # pad up to block cover
+        pad = [(0, 0)] * sel.ndim
+        pad[b_ax] = (0, L - S)
+        sel = jnp.pad(sel, pad)
+    elif S > L:                                      # bucket overshoot: trim
+        sel = jax.lax.slice_in_dim(sel, 0, L, axis=b_ax)
+    chunk = sel.reshape(sel.shape[:b_ax] + (len(block_ids), bs)
+                        + sel.shape[b_ax + 1:])
+    if skip_blocks:
+        chunk = jax.lax.slice_in_dim(chunk, skip_blocks, len(block_ids),
+                                     axis=b_ax)
+    ids = jnp.asarray(block_ids[skip_blocks:], jnp.int32)
+    if ids.size == 0:
+        return pool
+    chunk = chunk.astype(pool.dtype)
+    if b_ax == 0:
+        return pool.at[ids].set(chunk)
+    assert b_ax == 1, b_ax                           # leading period dim
+    return pool.at[:, ids].set(chunk)
+
+
+def _splice_slot(pool_leaf, dense_leaf, row: int, slot: int,
+                 batch_axis_from_end: int):
+    """Per-slot (unpaged) leaf, e.g. Mamba conv/ssm state: copy dense
+    row -> pool slot row at the explicit (name-keyed) batch axis."""
+    ax = dense_leaf.ndim - batch_axis_from_end
+    src = jnp.take(dense_leaf, row, axis=ax)
+    idx = (slice(None),) * ax + (slot,)
+    return pool_leaf.at[idx].set(src.astype(pool_leaf.dtype))
+
+
+# ---------------------------------------------------------------------------
+# memory accounting (for the bench's O(used) claim)
+# ---------------------------------------------------------------------------
+
+def _named_bytes(tree, names) -> int:
+    total = 0
+
+    def visit(path, leaf):
+        nonlocal total
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name in names:
+            total += int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
+        return leaf
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return total
+
+
+def paged_kv_bytes_per_block(paged) -> int:
+    """Bytes of pool storage per block, summed over every attention
+    layer (the unit of the O(used-blocks) memory claim)."""
+    total = 0
+
+    def visit(path, leaf):
+        nonlocal total
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name in POOL_LEAVES:
+            tail_nd = POOL_LEAVES[name][1]
+            n_blocks = leaf.shape[leaf.ndim - 2 - tail_nd]
+            total += int(leaf.size) * jnp.dtype(leaf.dtype).itemsize // n_blocks
+        return leaf
+    jax.tree_util.tree_map_with_path(visit, paged)
+    assert total, "no pool leaves found"
+    return total
+
+
+def dense_kv_bytes(cache_tree) -> int:
+    """Bytes of a dense engine's attention cache (abstract or concrete
+    tree): the k/v/ckv/krope leaves it allocates for (n_slots, ctx)."""
+    return _named_bytes(cache_tree, DENSE_KV_NAMES)

@@ -116,3 +116,73 @@ def test_flash_attention_matches_model_sdpa():
     o_model = layers._sdpa_seq(q, k, v, True, 64, 30.0, hd ** -0.5)
     np.testing.assert_allclose(np.asarray(o_kernel), np.asarray(o_model),
                                atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention
+# ---------------------------------------------------------------------------
+
+from repro.kernels.paged_attention.kernel import paged_decode_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def _paged_case(B, H, K, hd, bs, nbt, i):
+    """Random pools + a block table of distinct non-scratch blocks."""
+    nb = 1 + B * nbt + 3          # scratch + owned + spare
+    q = _rand((B, H, hd), i=i)
+    kp = _rand((nb, bs, K, hd), i=i + 1)
+    vp = _rand((nb, bs, K, hd), i=i + 2)
+    ids = np.random.RandomState(i).permutation(
+        np.arange(1, nb))[:B * nbt].reshape(B, nbt).astype(np.int32)
+    return q, kp, vp, jnp.asarray(ids)
+
+
+@pytest.mark.parametrize("H,K", [(4, 4), (8, 2)])          # MHA and GQA
+@pytest.mark.parametrize("bs,nbt", [(8, 4), (16, 2)])
+def test_paged_attention_matches_ref(H, K, bs, nbt):
+    B, hd = 3, 64
+    q, kp, vp, bt = _paged_case(B, H, K, hd, bs, nbt, i=20)
+    # frontier at a block boundary, mid-block, and the very last slot
+    pos = jnp.asarray([0, bs, nbt * bs - 1], jnp.int32)
+    o = paged_decode_attention(q, kp, vp, bt, pos, interpret=True)
+    r = paged_attention_ref(q, kp, vp, bt, pos)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5)
+
+
+@pytest.mark.parametrize("kw", [dict(window=10), dict(softcap=30.0),
+                                dict(window=7, softcap=20.0)])
+def test_paged_attention_window_softcap(kw):
+    B, H, K, hd, bs, nbt = 3, 8, 2, 64, 8, 4
+    q, kp, vp, bt = _paged_case(B, H, K, hd, bs, nbt, i=30)
+    pos = jnp.asarray([5, 17, 31], jnp.int32)
+    o = paged_decode_attention(q, kp, vp, bt, pos, interpret=True, **kw)
+    r = paged_attention_ref(q, kp, vp, bt, pos, **kw)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5)
+
+
+def test_paged_attention_bf16():
+    B, H, K, hd, bs, nbt = 2, 4, 2, 64, 8, 3
+    q, kp, vp, bt = _paged_case(B, H, K, hd, bs, nbt, i=40)
+    q, kp, vp = (x.astype(jnp.bfloat16) for x in (q, kp, vp))
+    pos = jnp.asarray([6, 19], jnp.int32)
+    o = paged_decode_attention(q, kp, vp, bt, pos, interpret=True)
+    r = paged_attention_ref(q, kp, vp, bt, pos)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=3e-2)
+
+
+def test_paged_ref_matches_model_gather_path():
+    """ref.py must equal the model's jnp paged decode math (_paged_gather
+    + _sdpa), which is itself the bitwise-parity reference vs the dense
+    engine — chaining kernel -> ref -> model -> dense."""
+    from repro.models import layers
+    B, H, K, hd, bs, nbt = 2, 8, 2, 64, 8, 3
+    q, kp, vp, bt = _paged_case(B, H, K, hd, bs, nbt, i=50)
+    pos = jnp.asarray([9, 21], jnp.int32)
+    r = paged_attention_ref(q, kp, vp, bt, pos)
+    kd = layers._paged_gather(kp, bt)
+    vd = layers._paged_gather(vp, bt)
+    valid = layers._paged_valid(pos, kd.shape[1], 0)
+    mask = jnp.where(valid, 0.0, layers.NEG_INF)[:, None, None, :]
+    o = layers._sdpa(q[:, None], kd, vd, mask, 0.0, hd ** -0.5)[:, 0]
+    np.testing.assert_allclose(np.asarray(r), np.asarray(o), atol=2e-5)

@@ -1,0 +1,105 @@
+"""Block-allocator property tests: conservation, COW refcounts, and
+leak-freedom under randomized alloc/free/share/preempt traffic.  Pure
+host-side — no model, no device arrays."""
+import numpy as np
+import pytest
+
+from repro.serving.paged_cache import (BlockAllocator, PoolExhausted,
+                                       n_blocks_for)
+
+
+def test_n_blocks_for_is_ceil_div():
+    assert n_blocks_for(1, 4) == 1
+    assert n_blocks_for(4, 4) == 1
+    assert n_blocks_for(5, 4) == 2
+    assert n_blocks_for(16, 16) == 1
+    assert n_blocks_for(17, 16) == 2
+
+
+def test_alloc_free_conservation_and_exhaustion():
+    a = BlockAllocator(n_blocks=8, block_size=4)
+    assert a.n_free == 7                       # block 0 reserved
+    ids = [a.alloc() for _ in range(7)]
+    assert 0 not in ids and len(set(ids)) == 7
+    assert a.n_free == 0 and a.used_blocks == 7
+    with pytest.raises(PoolExhausted):
+        a.alloc()
+    for b in ids:
+        a.release(b)
+    assert a.n_free == 7 and a.used_blocks == 0
+    a.check()
+
+
+def test_cow_retain_release_refcounts():
+    a = BlockAllocator(n_blocks=8, block_size=2)
+    b = a.alloc()
+    key = a.prefix_key(None, (1, 2))
+    a.register(key, b)
+    assert a.lookup(key) == b
+    a.retain(b)
+    assert a.refcount(b) == 2
+    a.release(b)                               # one owner remains
+    assert a.lookup(key) == b and a.refcount(b) == 1
+    a.release(b)                               # last owner: unregistered
+    assert a.lookup(key) is None and a.n_free == 7
+    a.check()
+
+
+def test_plan_prompt_shares_longest_prefix_chain():
+    a = BlockAllocator(n_blocks=16, block_size=2)
+    prompt = [1, 2, 3, 4, 5]                   # blocks (1,2) (3,4) + tail 5
+    shared, keys = a.plan_prompt(prompt)
+    assert shared == [] and len(keys) == 2
+    owned = [a.alloc() for _ in range(3)]      # 2 full + 1 partial
+    for k, b in zip(keys, owned):
+        a.register(k, b)
+    # identical prompt: both full blocks shared, refcounts bumped
+    shared2, keys2 = a.plan_prompt(prompt)
+    assert shared2 == owned[:2] and keys2 == keys
+    assert a.refcount(owned[0]) == 2 and a.refcount(owned[1]) == 2
+    # diverging second block: only the first chains
+    shared3, _ = a.plan_prompt([1, 2, 9, 9])
+    assert shared3 == owned[:1]
+    for b in shared2 + shared3:
+        a.release(b)
+    a.check()
+
+
+def test_no_leaks_after_randomized_preemption_traffic():
+    """Random admit/extend/preempt/finish cycles must conserve blocks
+    exactly and end with an empty pool."""
+    rng = np.random.RandomState(0)
+    a = BlockAllocator(n_blocks=32, block_size=4)
+    live = {}                                  # rid -> list of block ids
+    rid = 0
+    for _ in range(300):
+        op = rng.randint(3)
+        if op == 0:                            # admit with COW plan
+            prompt = rng.randint(0, 50, rng.randint(1, 12)).tolist()
+            shared, keys = a.plan_prompt(prompt)
+            need = n_blocks_for(len(prompt), 4) - len(shared)
+            if a.n_free < need:
+                for b in shared:
+                    a.release(b)
+                continue
+            ids = shared + [a.alloc() for _ in range(need)]
+            for j in range(len(shared), len(keys)):
+                a.register(keys[j], ids[j])
+            live[rid] = ids
+            rid += 1
+        elif op == 1 and live:                 # decode growth
+            r = rng.choice(list(live))
+            if a.n_free:
+                live[r].append(a.alloc())
+        elif op == 2 and live:                 # preempt or finish: release all
+            r = rng.choice(list(live))
+            for b in live.pop(r):
+                a.release(b)
+        a.check()
+        total = a.used_blocks + a.n_free
+        assert total == a.n_blocks - 1
+    for ids in live.values():
+        for b in ids:
+            a.release(b)
+    a.check()
+    assert a.used_blocks == 0
